@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing, CSV emission, dataset scaling."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+# CPU-scaled defaults; export REPRO_BENCH_FULL=1 for paper-scale (1M vectors)
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+N_BASE = 1_000_000 if FULL else 60_000
+N_TRAIN = 100_000 if FULL else 12_000
+N_QUERY = 1_000 if FULL else 64
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time (s) of fn(*args), blocking on the result."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds_per_call: float, derived: str = "") -> None:
+    print(f"{name},{seconds_per_call * 1e6:.1f},{derived}")

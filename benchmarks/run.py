@@ -1,0 +1,37 @@
+"""Benchmark harness: one entry per paper table/figure + kernel + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (see common.emit). Scaled-down
+dataset sizes by default (CPU container); REPRO_BENCH_FULL=1 for paper scale.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fig2, kernel_bench, table1
+
+    print("name,us_per_call,derived")
+    jobs = [
+        ("kernel_bench", kernel_bench.main),
+        ("fig2", fig2.main),
+        ("table1", table1.main),
+    ]
+    failures = []
+    for name, fn in jobs:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} finished in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

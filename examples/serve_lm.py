@@ -1,0 +1,67 @@
+"""Serve a small LM with batched requests: exact KV cache vs the paper's
+4-bit-PQ-compressed KV cache, comparing outputs and cache bytes.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen1.5-32b] [--tokens 12]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import serve as serve_lib
+from repro.models import model as model_lib
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-32b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config(args.arch)
+    print(f"== serving {cfg.name}: {args.batch} requests, "
+          f"{args.tokens} tokens each ==")
+    params = model_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len), np.int32))
+    max_seq = args.prompt_len + args.tokens
+
+    # exact cache
+    exact_cfg = cfg.replace(kv_pq=False)
+    toks_exact = serve_lib.serve_batch(exact_cfg, params, prompts, args.tokens)
+    _, c_exact = model_lib.prefill(params, prompts, exact_cfg, max_seq=max_seq)
+
+    if cfg.block_type != "attn":
+        print("arch is attention-free/hybrid: PQ-KV applies to attention "
+              "blocks only (see DESIGN.md §Arch-applicability)")
+        print("generated:", np.asarray(toks_exact)[:, :8], "...")
+        return
+
+    # PQ cache (paper technique): calibrate codebooks, then serve
+    pq_cfg = cfg.replace(kv_pq=True)
+    toks_pq = serve_lib.serve_batch(pq_cfg, params, prompts, args.tokens,
+                                    key=jax.random.PRNGKey(7))
+    pqc = serve_lib.calibrate_pq_cache(jax.random.PRNGKey(7), params, pq_cfg,
+                                       args.batch, max_seq)
+    exact_b = cache_bytes(c_exact)
+    pq_b = cache_bytes((pqc.k_codes, pqc.v_codes))
+    agree = float(jnp.mean((toks_exact == toks_pq).astype(jnp.float32)))
+    print(f"cache bytes: exact={exact_b/1e6:.2f}MB "
+          f"pq={pq_b/1e6:.2f}MB ({exact_b/pq_b:.1f}x smaller)")
+    print(f"token agreement exact-vs-pq: {agree:.2f} "
+          f"(untrained weights; production codebooks are activation-calibrated)")
+    print("exact:", np.asarray(toks_exact)[0, :10])
+    print("pq:   ", np.asarray(toks_pq)[0, :10])
+
+
+if __name__ == "__main__":
+    main()

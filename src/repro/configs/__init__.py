@@ -1,0 +1,56 @@
+"""Assigned-architecture configs (exact per the brief) + reduced smoke configs.
+
+`get_config(name)` returns the full production config; `get_smoke_config(name)`
+returns a reduced same-family config for CPU smoke tests (small layers/width,
+few experts, tiny vocab). The full configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "dbrx_132b",
+    "llama4_scout_17b_a16e",
+    "qwen3_1p7b",
+    "qwen1p5_32b",
+    "nemotron_4_15b",
+    "starcoder2_15b",
+    "internvl2_1b",
+    "musicgen_medium",
+    "zamba2_2p7b",
+    "rwkv6_3b",
+)
+
+# canonical ids from the brief -> module names
+ALIASES = {
+    "dbrx-132b": "dbrx_132b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "qwen1.5-32b": "qwen1p5_32b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "starcoder2-15b": "starcoder2_15b",
+    "internvl2-1b": "internvl2_1b",
+    "musicgen-medium": "musicgen_medium",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def _module(name: str):
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,25 @@
+"""qwen3-1.7b [dense]: 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936, qk_norm. [hf:Qwen/Qwen3-8B; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=6144,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    mlp_type="swiglu",
+    rope_theta=1_000_000.0,
+    remat="group:7",
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen3-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=128, vocab=256, dtype="float32",
+    attn_q_chunk=32, attn_kv_chunk=32, vocab_pad_multiple=8,
+)

@@ -1,0 +1,81 @@
+"""Coarse quantizer zoo for the IVF pipeline (paper §4).
+
+Three interchangeable coarse quantizers over the IVF centroids:
+  - FlatL2: brute-force distance matrix (a single MXU matmul) + top-k.
+  - HNSW:   graph search (paper's Table 1 choice for nlist=30k).
+  - KMeansTree: two-level tree — search sqrt(nlist) super-clusters, then
+    only their children; sub-linear and fully dense/jit-able.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw as hnsw_mod
+from repro.core import topk as topk_mod
+from repro.core.kmeans import kmeans, pairwise_sqdist
+
+
+class FlatCoarse(NamedTuple):
+    centroids: jax.Array  # (nlist, D)
+
+    def search(self, q: jax.Array, nprobe: int) -> tuple[jax.Array, jax.Array]:
+        d = pairwise_sqdist(q, self.centroids)
+        return topk_mod.smallest_k(d, nprobe)
+
+
+class HNSWCoarse(NamedTuple):
+    graph: hnsw_mod.HNSWGraph
+
+    def search(self, q: jax.Array, nprobe: int, ef: int = 64
+               ) -> tuple[jax.Array, jax.Array]:
+        return hnsw_mod.search_hnsw(self.graph, q, ef=max(ef, nprobe), topk=nprobe)
+
+
+class TreeCoarse(NamedTuple):
+    roots: jax.Array        # (R, D) super-cluster centers
+    children: jax.Array     # (R, C) int32 child centroid ids, -1 padded
+    centroids: jax.Array    # (nlist, D)
+
+    def search(self, q: jax.Array, nprobe: int, nroots: int = 4
+               ) -> tuple[jax.Array, jax.Array]:
+        dr = pairwise_sqdist(q, self.roots)
+        _, rid = topk_mod.smallest_k(dr, nroots)              # (Q, nroots)
+        cand = self.children[rid].reshape(q.shape[0], -1)     # (Q, nroots*C)
+        cvec = self.centroids[jnp.maximum(cand, 0)]
+        dc = jnp.sum((cvec - q[:, None, :]) ** 2, axis=-1)
+        dc = jnp.where(cand >= 0, dc, jnp.inf)
+        vals, pos = topk_mod.smallest_k(dc, nprobe)
+        return vals, jnp.take_along_axis(cand, pos, axis=1)
+
+
+def build_flat(centroids: jax.Array) -> FlatCoarse:
+    return FlatCoarse(centroids=centroids)
+
+
+def build_hnsw_coarse(centroids: jax.Array, m: int = 16,
+                      ef_construction: int = 64, seed: int = 0) -> HNSWCoarse:
+    g = hnsw_mod.build_hnsw(np.asarray(centroids, np.float32), m=m,
+                            ef_construction=ef_construction, seed=seed)
+    return HNSWCoarse(graph=g)
+
+
+def build_tree(key: jax.Array, centroids: jax.Array, *, nroots: int | None = None,
+               iters: int = 15) -> TreeCoarse:
+    nlist = centroids.shape[0]
+    r = int(nroots or max(2, int(np.sqrt(nlist))))
+    res = kmeans(key, centroids, k=r, iters=iters)
+    assign = np.asarray(res.assignments)
+    counts = np.bincount(assign, minlength=r)
+    cap = int(counts.max())
+    children = np.full((r, cap), -1, np.int32)
+    cursor = np.zeros((r,), np.int64)
+    for i, a in enumerate(assign):
+        children[a, cursor[a]] = i
+        cursor[a] += 1
+    return TreeCoarse(roots=res.centroids, children=jnp.asarray(children),
+                      centroids=centroids)

@@ -1,0 +1,209 @@
+"""HNSW graph: host-side (numpy) construction + jit'd batched beam search.
+
+Used as the coarse quantizer of the paper's Table 1 pipeline
+(IVF + HNSW + 4-bit PQ). Graph construction is pointer-chasing and therefore
+host-side by design (it is an offline, one-time cost); the *search* — the
+latency-critical part — is a fixed-shape JAX beam search that lowers under
+jit/pjit (visited set as a dense bool mask, fixed-degree padded adjacency,
+fixed iteration count).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HNSWGraph(NamedTuple):
+    vectors: jax.Array        # (N, D) float32 — the indexed points
+    level0: jax.Array         # (N, 2M) int32 adjacency, -1 padded
+    uppers: tuple             # tuple of (ids (n_l,), adj (n_l, M)) per level>0,
+                              # ids sorted ascending; adj entries are global ids
+    entry: int                # entry point id (top level)
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# construction (numpy, offline)
+# ---------------------------------------------------------------------------
+
+def _search_layer_np(vecs, adj, q, entry, ef):
+    """Classic single-layer beam search (numpy, used only during build)."""
+    import heapq
+    visited = {entry}
+    d0 = float(np.sum((vecs[entry] - q) ** 2))
+    cand = [(d0, entry)]           # min-heap of candidates to expand
+    best = [(-d0, entry)]          # max-heap (neg) of current best ef
+    while cand:
+        d, u = heapq.heappop(cand)
+        if d > -best[0][0] and len(best) >= ef:
+            break
+        for v in adj[u]:
+            if v < 0 or v in visited:
+                continue
+            visited.add(v)
+            dv = float(np.sum((vecs[v] - q) ** 2))
+            if len(best) < ef or dv < -best[0][0]:
+                heapq.heappush(cand, (dv, v))
+                heapq.heappush(best, (-dv, v))
+                if len(best) > ef:
+                    heapq.heappop(best)
+    out = sorted((-nd, v) for nd, v in best)
+    return [v for _, v in out], [d for d, _ in out]
+
+
+def build_hnsw(vectors: np.ndarray, m: int = 16, ef_construction: int = 64,
+               seed: int = 0) -> HNSWGraph:
+    """Insert-based HNSW build. vectors: (N, D) float32."""
+    rng = np.random.default_rng(seed)
+    n, d = vectors.shape
+    ml = 1.0 / np.log(m)
+    levels = np.minimum((-np.log(rng.uniform(1e-12, 1.0, n)) * ml).astype(np.int64), 8)
+    max_level = int(levels.max())
+    deg0, degu = 2 * m, m
+    adj = [np.full((n, deg0 if l == 0 else degu), -1, np.int64)
+           for l in range(max_level + 1)]
+
+    def connect(l, u, neighbors):
+        cap = adj[l].shape[1]
+        sel = neighbors[:cap]
+        adj[l][u, :len(sel)] = sel
+        for v in sel:  # back-links with pruning by distance
+            row = adj[l][v]
+            free = np.where(row < 0)[0]
+            if len(free):
+                row[free[0]] = u
+            else:  # replace the farthest back-link if u is closer
+                dists = np.sum((vectors[row] - vectors[v]) ** 2, axis=1)
+                du = np.sum((vectors[u] - vectors[v]) ** 2)
+                worst = int(np.argmax(dists))
+                if du < dists[worst]:
+                    row[worst] = u
+
+    entry = 0
+    entry_level = int(levels[0])
+    for i in range(1, n):
+        li = int(levels[i])
+        ep = entry
+        # greedy descent through levels above li
+        for l in range(entry_level, li, -1):
+            if l > max_level:
+                continue
+            changed = True
+            while changed:
+                changed = False
+                neigh = adj[l][ep]
+                neigh = neigh[neigh >= 0]
+                if len(neigh):
+                    dn = np.sum((vectors[neigh] - vectors[i]) ** 2, axis=1)
+                    j = int(np.argmin(dn))
+                    if dn[j] < np.sum((vectors[ep] - vectors[i]) ** 2):
+                        ep = int(neigh[j])
+                        changed = True
+        # insert at levels min(li, entry_level) .. 0
+        for l in range(min(li, entry_level), -1, -1):
+            cands, _ = _search_layer_np(vectors, adj[l], vectors[i], ep, ef_construction)
+            connect(l, i, np.asarray(cands, np.int64))
+            ep = cands[0]
+        if li > entry_level:
+            entry, entry_level = i, li
+
+    # pack upper levels as (ids, adj) pairs
+    uppers = []
+    for l in range(1, max_level + 1):
+        ids = np.where(levels >= l)[0].astype(np.int32)
+        uppers.append((jnp.asarray(ids), jnp.asarray(adj[l][ids].astype(np.int32))))
+    return HNSWGraph(
+        vectors=jnp.asarray(vectors.astype(np.float32)),
+        level0=jnp.asarray(adj[0].astype(np.int32)),
+        uppers=tuple(uppers),
+        entry=int(entry),
+    )
+
+
+# ---------------------------------------------------------------------------
+# search (JAX, jit'd, batched)
+# ---------------------------------------------------------------------------
+
+def _sqd(a: jax.Array, b: jax.Array) -> jax.Array:
+    diff = a - b
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "topk", "iters"))
+def search_hnsw(g: HNSWGraph, q: jax.Array, *, ef: int = 64, topk: int = 10,
+                iters: int = 0) -> tuple[jax.Array, jax.Array]:
+    """Batched HNSW search. q: (Q, D) -> (dists (Q, topk), ids (Q, topk)).
+
+    Fixed-shape beam search at level 0 (beam = ef), greedy descent above.
+    `iters` bounds the level-0 expansion count (default ~ 2*ef), making the
+    whole search a static-length lax.while-free fori_loop — pjit-friendly.
+    """
+    if q.ndim == 1:
+        q = q[None]
+    nq = q.shape[0]
+    n = g.n
+    iters = iters or 2 * ef
+
+    # --- greedy descent through upper layers (vectorized over queries)
+    ep = jnp.full((nq,), g.entry, jnp.int32)
+    for ids, adj in reversed(g.uppers):  # static python loop over levels
+        # one hop per level is enough for coarse entry (standard practice:
+        # repeat a few fixed hops for robustness)
+        for _ in range(3):
+            pos = jnp.searchsorted(ids, ep)  # position of ep rows in this level
+            pos = jnp.clip(pos, 0, ids.shape[0] - 1)
+            valid_row = ids[pos] == ep
+            neigh = jnp.where(valid_row[:, None], adj[pos], -1)  # (Q, M)
+            nv = jnp.maximum(neigh, 0)
+            dn = _sqd(g.vectors[nv], q[:, None, :])
+            dn = jnp.where(neigh >= 0, dn, jnp.inf)
+            best = jnp.argmin(dn, axis=-1)
+            bd = jnp.take_along_axis(dn, best[:, None], axis=1)[:, 0]
+            cur = _sqd(g.vectors[ep], q)
+            better = bd < cur
+            ep = jnp.where(better, jnp.take_along_axis(neigh, best[:, None], axis=1)[:, 0], ep)
+
+    # --- level-0 beam search with dense visited mask
+    deg = g.level0.shape[1]
+    beam_ids = jnp.full((nq, ef), -1, jnp.int32).at[:, 0].set(ep)
+    beam_d = jnp.full((nq, ef), jnp.inf, jnp.float32).at[:, 0].set(_sqd(g.vectors[ep], q))
+    expanded = jnp.zeros((nq, ef), jnp.bool_)
+    visited = jnp.zeros((nq, n), jnp.bool_).at[jnp.arange(nq), ep].set(True)
+
+    def body(_, state):
+        beam_ids, beam_d, expanded, visited = state
+        # pick nearest unexpanded beam entry
+        cand_d = jnp.where(expanded | (beam_ids < 0), jnp.inf, beam_d)
+        sel = jnp.argmin(cand_d, axis=-1)                      # (Q,)
+        sel_id = jnp.take_along_axis(beam_ids, sel[:, None], axis=1)[:, 0]
+        has = jnp.isfinite(jnp.take_along_axis(cand_d, sel[:, None], axis=1)[:, 0])
+        expanded = expanded.at[jnp.arange(nq), sel].set(True)
+        neigh = g.level0[jnp.maximum(sel_id, 0)]               # (Q, deg)
+        neigh = jnp.where((neigh >= 0) & has[:, None], neigh, -1)
+        seen = jnp.take_along_axis(visited, jnp.maximum(neigh, 0), axis=1)
+        fresh = (neigh >= 0) & (~seen)
+        visited = visited.at[jnp.arange(nq)[:, None], jnp.maximum(neigh, 0)].set(
+            jnp.take_along_axis(visited, jnp.maximum(neigh, 0), axis=1) | (neigh >= 0))
+        dn = _sqd(g.vectors[jnp.maximum(neigh, 0)], q[:, None, :])
+        dn = jnp.where(fresh, dn, jnp.inf)
+        # merge (beam, new) -> best ef
+        all_d = jnp.concatenate([beam_d, dn], axis=1)          # (Q, ef+deg)
+        all_ids = jnp.concatenate([beam_ids, neigh], axis=1)
+        all_exp = jnp.concatenate([expanded, jnp.zeros_like(fresh)], axis=1)
+        neg, pos = jax.lax.top_k(-all_d, ef)
+        beam_d = -neg
+        beam_ids = jnp.take_along_axis(all_ids, pos, axis=1)
+        expanded = jnp.take_along_axis(all_exp, pos, axis=1)
+        return beam_ids, beam_d, expanded, visited
+
+    beam_ids, beam_d, expanded, visited = jax.lax.fori_loop(
+        0, iters, body, (beam_ids, beam_d, expanded, visited))
+    neg, pos = jax.lax.top_k(-beam_d[:, :ef], topk)
+    return -neg, jnp.take_along_axis(beam_ids, pos, axis=1)

@@ -1,0 +1,38 @@
+"""Search-quality metrics: Recall@R and distance-error statistics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def recall_at_r(pred_ids: jax.Array, gt_ids: jax.Array, r: int | None = None) -> jax.Array:
+    """Recall@R as in the paper's Fig. 2 / Table 1.
+
+    pred_ids: (Q, R') predicted neighbor ids (ascending by distance).
+    gt_ids:   (Q,) or (Q, G) ground-truth nearest ids; recall@R counts a hit
+              if the true *first* NN appears in the top R predictions.
+    """
+    if gt_ids.ndim == 2:
+        gt = gt_ids[:, 0]
+    else:
+        gt = gt_ids
+    if r is not None:
+        pred_ids = pred_ids[:, :r]
+    hits = jnp.any(pred_ids == gt[:, None], axis=1)
+    return jnp.mean(hits.astype(jnp.float32))
+
+
+def intersection_recall(pred_ids: jax.Array, gt_ids: jax.Array) -> jax.Array:
+    """|pred ∩ gt| / |gt| per query, averaged (the 'k-recall@k' variant)."""
+    inter = (pred_ids[:, :, None] == gt_ids[:, None, :]).any(axis=1)
+    return jnp.mean(jnp.mean(inter.astype(jnp.float32), axis=1))
+
+
+def distance_error_stats(approx: jax.Array, exact: jax.Array) -> dict:
+    """Relative distance-estimation error of the quantized ADC pipeline."""
+    rel = jnp.abs(approx - exact) / jnp.maximum(jnp.abs(exact), 1e-12)
+    return {
+        "mean_rel_err": float(jnp.mean(rel)),
+        "p95_rel_err": float(jnp.percentile(rel, 95)),
+        "max_abs_err": float(jnp.max(jnp.abs(approx - exact))),
+    }

@@ -1,0 +1,119 @@
+"""Product quantization: codebook training, encoding, and float-LUT ADC.
+
+This module is the **"original PQ" baseline** of the paper (Fig. 2's comparison
+point): distances are estimated with a per-query float lookup table T[m][k] and
+a memory-gather accumulation — exactly Eq. (2)/(3) of the paper.
+
+The 4-bit fast-scan path (register-resident u8 LUTs) lives in
+``repro.core.fastscan`` and ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_multi, pairwise_sqdist
+
+
+class PQCodebook(NamedTuple):
+    """M sub-space codebooks. codewords: (M, K, dsub) with M*dsub == D."""
+
+    codewords: jax.Array
+
+    @property
+    def m(self) -> int:
+        return self.codewords.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.codewords.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codewords.shape[2]
+
+    @property
+    def d(self) -> int:
+        return self.m * self.dsub
+
+
+def split_subvectors(x: jax.Array, m: int) -> jax.Array:
+    """(n, D) -> (m, n, D/m)."""
+    n, d = x.shape
+    assert d % m == 0, f"D={d} not divisible by M={m}"
+    return jnp.transpose(x.reshape(n, m, d // m), (1, 0, 2))
+
+
+def train_pq(key: jax.Array, x: jax.Array, m: int, k: int = 16, iters: int = 25) -> PQCodebook:
+    """Train M independent K-entry codebooks on training vectors x (n, D)."""
+    sub = split_subvectors(x, m)  # (m, n, dsub)
+    res = kmeans_multi(key, sub, k=k, iters=iters)
+    return PQCodebook(codewords=res.centroids)
+
+
+@jax.jit
+def encode(cb: PQCodebook, x: jax.Array) -> jax.Array:
+    """Quantize x (n, D) -> codes (n, M) int32 in [0, K)."""
+    sub = split_subvectors(x, cb.m)  # (m, n, dsub)
+
+    def enc_one(c_m, x_m):
+        return jnp.argmin(pairwise_sqdist(x_m, c_m), axis=-1).astype(jnp.int32)
+
+    codes = jax.vmap(enc_one)(cb.codewords, sub)  # (m, n)
+    return codes.T  # (n, m)
+
+
+@jax.jit
+def decode(cb: PQCodebook, codes: jax.Array) -> jax.Array:
+    """Lossy reconstruction: codes (n, M) -> (n, D)."""
+
+    def dec_one(c_m, k_m):
+        return c_m[k_m]  # (n, dsub)
+
+    sub = jax.vmap(dec_one)(cb.codewords, codes.T)  # (m, n, dsub)
+    return jnp.transpose(sub, (1, 0, 2)).reshape(codes.shape[0], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def adc_table(cb: PQCodebook, q: jax.Array, metric: str = "l2") -> jax.Array:
+    """Per-query lookup table T (..., M, K).
+
+    q: (D,) or (Q, D). metric 'l2' -> squared L2 per sub-space (paper Eq. (2));
+    'ip' -> negated inner product (so that smaller is better for both metrics).
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    qsub = split_subvectors(q, cb.m)  # (m, Q, dsub)
+    if metric == "l2":
+        t = jax.vmap(lambda c_m, q_m: pairwise_sqdist(q_m, c_m))(cb.codewords, qsub)
+    elif metric == "ip":
+        t = jax.vmap(lambda c_m, q_m: -(q_m @ c_m.T))(cb.codewords, qsub)
+    else:
+        raise ValueError(metric)
+    t = jnp.transpose(t, (1, 0, 2))  # (Q, m, K)
+    return t[0] if squeeze else t
+
+
+@jax.jit
+def adc_lookup(table: jax.Array, codes: jax.Array) -> jax.Array:
+    """Naive PQ ADC (the paper's baseline): memory-gather + sum.
+
+    table: (M, K) float or (Q, M, K); codes: (n, M) -> distances (n,) or (Q, n).
+    """
+    if table.ndim == 2:
+        g = jax.vmap(lambda t_m, k_m: t_m[k_m], in_axes=(0, 1))(table, codes)  # (m, n)
+        return jnp.sum(g, axis=0)
+    return jax.vmap(lambda t: adc_lookup(t, codes))(table)
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def search(cb: PQCodebook, codes: jax.Array, q: jax.Array, topk: int = 10) -> tuple[jax.Array, jax.Array]:
+    """Naive-PQ top-k search. q: (Q, D) -> (dists (Q, topk), ids (Q, topk))."""
+    t = adc_table(cb, q)  # (Q, m, K)
+    d = adc_lookup(t, codes)  # (Q, n)
+    neg, idx = jax.lax.top_k(-d, topk)
+    return -neg, idx

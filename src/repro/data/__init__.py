@@ -1,0 +1,1 @@
+"""Input pipelines: synthetic ANN vector datasets + deterministic LM tokens."""

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's hot spot: 4-bit PQ fast-scan ADC."""
+from repro.kernels import ops, ref
+from repro.kernels.ops import fastscan_blockmin, fastscan_distances
+
+__all__ = ["ops", "ref", "fastscan_distances", "fastscan_blockmin"]

@@ -1,0 +1,95 @@
+"""jit'd dispatch wrappers around the fast-scan kernels.
+
+Handles padding (queries to the Q tile, database to the N tile), backend
+selection (compiled Pallas on TPU, interpret mode elsewhere), and the
+pure-jnp reference fallback. All variants are bit-identical; see ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fastscan_kernel as fk
+from repro.kernels import ref as ref_mod
+
+IMPLS = ("ref", "select", "mxu")
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _auto_tile(size: int, cap: int) -> int:
+    """Largest power-of-two tile <= cap covering size (min 8, VREG sublane)."""
+    pow2 = 1 << max(size - 1, 1).bit_length()
+    return max(8, min(cap, pow2))
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value: int = 0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "tile_n", "tile_q", "interpret"))
+def fastscan_distances(table_q8: jax.Array, packed_codes: jax.Array, *,
+                       impl: str = "mxu", tile_n: int = 0, tile_q: int = 0,
+                       interpret: bool | None = None) -> jax.Array:
+    """ADC accumulation: (Q, M, 16) u8 x (N, M//2) u8 -> (Q, N) i32.
+
+    impl: 'ref' (pure jnp oracle) | 'select' (VPU select-tree, paper-faithful)
+          | 'mxu' (one-hot GEMM, beyond-paper). All bit-identical.
+    """
+    if table_q8.ndim == 2:
+        table_q8 = table_q8[None]
+    q, m, k = table_q8.shape
+    n = packed_codes.shape[0]
+    assert k == 16, f"4-bit PQ requires K=16, got {k}"
+    if impl == "ref":
+        return ref_mod.fastscan_distances_ref(table_q8, packed_codes)
+
+    interp = _default_interpret() if interpret is None else interpret
+    tn = tile_n or _auto_tile(n, fk.TILE_N)
+    codes_p = _pad_to(packed_codes, 0, tn)
+
+    if impl == "select":
+        acc = fk.fastscan_select_tree(table_q8, codes_p, tile_n=tn, interpret=interp)
+    elif impl == "mxu":
+        tq = tile_q or _auto_tile(q, fk.TILE_Q)
+        table_p = _pad_to(table_q8, 0, tq)
+        acc = fk.fastscan_onehot_mxu(table_p, codes_p, tile_n=tn, tile_q=tq,
+                                     interpret=interp)
+    else:
+        raise ValueError(f"unknown impl {impl!r}; want one of {IMPLS}")
+    return acc[:q, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fastscan_blockmin(table_q8: jax.Array, packed_codes: jax.Array, *,
+                      block: int = 1024, interpret: bool | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Fused ADC + per-block min/argmin. Pads N with +inf-like sentinel codes.
+
+    Returns (min_dists (Q, ceil(N/block)) i32, global argmin ids).
+    Padded tail rows use code 15 in every sub-space; callers who need exact
+    semantics on ragged N should mask via the returned ids (< N check).
+    """
+    if table_q8.ndim == 2:
+        table_q8 = table_q8[None]
+    q, m, k = table_q8.shape
+    n = packed_codes.shape[0]
+    assert k == 16
+    interp = _default_interpret() if interpret is None else interpret
+    tq = _auto_tile(q, fk.TILE_Q)
+    table_p = _pad_to(table_q8, 0, tq)
+    codes_p = _pad_to(packed_codes, 0, block, value=0xFF)
+    mins, args = fk.fastscan_blockmin(table_p, codes_p, tile_n=block, tile_q=tq,
+                                      interpret=interp)
+    nb = -(-n // block)
+    return mins[:q, :nb], args[:q, :nb]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the fast-scan ADC kernels.
+
+This is the semantic ground truth: int32 accumulation of u8 LUT entries
+gathered by 4-bit codes. Every Pallas kernel variant must match this bit-exactly
+(integer arithmetic — no tolerance needed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """(N, M//2) uint8 -> (N, M) int32, lo nibble = even m."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    n, mh = packed.shape
+    out = jnp.zeros((n, 2 * mh), jnp.int32)
+    out = out.at[:, 0::2].set(lo)
+    out = out.at[:, 1::2].set(hi)
+    return out
+
+
+def fastscan_distances_ref(table_q8: jax.Array, packed_codes: jax.Array) -> jax.Array:
+    """ADC accumulation oracle.
+
+    table_q8: (Q, M, 16) uint8; packed_codes: (N, M//2) uint8.
+    Returns (Q, N) int32: acc[q, n] = sum_m table_q8[q, m, codes[n, m]].
+    """
+    codes = unpack_nibbles(packed_codes)  # (N, M)
+    t = table_q8.astype(jnp.int32)  # (Q, M, 16)
+
+    def per_query(tq):  # tq: (M, 16)
+        g = jax.vmap(lambda t_m, k_m: t_m[k_m], in_axes=(0, 1))(tq, codes)  # (M, N)
+        return jnp.sum(g, axis=0)
+
+    return jax.vmap(per_query)(t)
+
+
+def fastscan_block_min_ref(table_q8: jax.Array, packed_codes: jax.Array,
+                           block: int) -> tuple[jax.Array, jax.Array]:
+    """Fused scan + per-block argmin oracle.
+
+    Returns (min_dist (Q, N//block) int32, argmin (Q, N//block) int32 global ids).
+    """
+    q, n = table_q8.shape[0], packed_codes.shape[0]
+    assert n % block == 0
+    d = fastscan_distances_ref(table_q8, packed_codes)  # (Q, N)
+    d = d.reshape(q, n // block, block)
+    amin = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    base = (jnp.arange(n // block, dtype=jnp.int32) * block)[None, :]
+    return jnp.min(d, axis=-1), amin + base

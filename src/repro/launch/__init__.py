@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, sharding rules, dry-run, training, serving."""

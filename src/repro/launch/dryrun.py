@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# NOTE: the two lines above MUST run before any jax import (jax locks the
+# device count on first init), hence no `from __future__` in this module.
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices stand in for the production mesh; jit(...).lower(SDS).compile()
+must succeed for the 16x16 single-pod AND the 2x16x16 multi-pod mesh for
+every assigned architecture x input shape. Emits memory_analysis /
+cost_analysis / collective-bytes JSON per cell for §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as rl
+from repro.launch import sharding as shd
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop
+
+# (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+SUBQUADRATIC = ("mamba2", "rwkv6")  # block types allowed to run long_500k
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.block_type not in SUBQUADRATIC:
+        return False, ("SKIP: long_500k needs sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (see DESIGN.md)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> tuple[dict, dict]:
+    """(ShapeDtypeStructs, logical axes) for a training batch."""
+    specs = {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "targets": _sds((batch, seq), jnp.int32),
+        "mask": _sds((batch, seq), jnp.float32),
+    }
+    axes = {
+        "tokens": ("batch", "seq"),
+        "targets": ("batch", "seq"),
+        "mask": ("batch", "seq"),
+    }
+    if cfg.frontend != "none":
+        specs["frontend_embeds"] = _sds((batch, cfg.frontend_len, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+        axes["frontend_embeds"] = ("batch", None, "embed")
+    return specs, axes
+
+
+def serving_rules(cfg: ModelConfig, mesh) -> dict:
+    """Serving shards params TP-only (replicated over data) when they fit:
+    FSDP-style weight all-gathers are amortized over 1M tokens in training
+    but dominate a single decode step. Falls back to FSDP sharding when
+    bf16 params / model-axis exceed the HBM budget (dbrx-132b).
+
+    Archs whose head count does not divide the model axis (qwen1.5: 40H,
+    llama4: 40H, internvl2: 14H) would otherwise replicate ALL attention
+    weight+compute; for those we shard head_dim instead, and shard the
+    PQ-KV codes across sub-quantizers ("pq_m") — sub-space parallelism for
+    the paper's ADC: each chip scans its own nibble planes and one small
+    int32 partial-accumulation all-reduce merges them."""
+    rules = dict(shd.DEFAULT_RULES)
+    param_bytes = cfg.param_count() * 2  # bf16
+    model_size = mesh.shape.get("model", 1)
+    if param_bytes / model_size <= 12e9:
+        rules["embed"] = None
+    if cfg.n_heads and cfg.n_heads % model_size != 0:
+        rules["head_dim"] = "model"
+        if cfg.kv_pq:
+            rules["pq_m"] = "model"
+            rules["kv_seq"] = None
+    return rules
+
+
+def cell_rules(cfg: ModelConfig, shape_name: str, mesh) -> dict:
+    kind = SHAPES[shape_name][2]
+    return (dict(shd.DEFAULT_RULES) if kind == "train"
+            else serving_rules(cfg, mesh))
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, rules=None):
+    """Returns (fn, arg_specs, in_shardings) ready for jit().lower()."""
+    seq, batch, kind = SHAPES[shape_name]
+    rules = rules or cell_rules(cfg, shape_name, mesh)
+    pspecs = model_lib.lm_shapes(cfg)
+    paxes = model_lib.lm_axes(cfg)
+    pshard = shd.tree_shardings(pspecs, paxes, mesh, rules)
+
+    if kind == "train":
+        ocfg = opt_lib.AdamWConfig(total_steps=1000)
+        step = train_loop.make_train_step(cfg, ocfg, microbatches=1)
+        ostate = opt_lib.state_shapes(pspecs)
+        oshard = shd.tree_shardings(
+            ostate, opt_lib.state_axes(paxes), mesh, rules)
+        state_sds = train_loop.TrainState(pspecs, ostate, None)
+        state_shd = train_loop.TrainState(pshard, oshard, None)
+        bspecs, baxes = batch_specs(cfg, batch, seq)
+        bshard = shd.tree_shardings(bspecs, baxes, mesh, rules)
+        return step, (state_sds, bspecs), (state_shd, bshard)
+
+    if kind == "prefill":
+        tok_sds = _sds((batch, seq), jnp.int32)
+        tok_shd = shd.named_sharding((batch, seq), ("batch", "seq"), mesh, rules)
+        if cfg.kv_pq:
+            cache_sds = jax.eval_shape(
+                lambda: model_lib.init_cache(cfg, batch, seq))
+            cache_shd = shd.tree_shardings(cache_sds, model_lib.cache_axes(cfg),
+                                           mesh, rules)
+            fn = lambda p, t, c: model_lib.prefill(p, t, cfg, max_seq=seq,
+                                                   pq_cache=c)
+            return fn, (pspecs, tok_sds, cache_sds), (pshard, tok_shd, cache_shd)
+        fn = lambda p, t: model_lib.prefill(p, t, cfg, max_seq=seq)
+        return fn, (pspecs, tok_sds), (pshard, tok_shd)
+
+    # decode: one new token against a seq-long cache
+    cache_sds = jax.eval_shape(lambda: model_lib.init_cache(cfg, batch, seq))
+    cache_shd = shd.tree_shardings(cache_sds, model_lib.cache_axes(cfg),
+                                   mesh, rules)
+    tok_sds = _sds((batch,), jnp.int32)
+    pos_sds = _sds((batch,), jnp.int32)
+    tok_shd = shd.named_sharding((batch,), ("batch",), mesh, rules)
+    fn = lambda p, c, t, pos: model_lib.decode_step(p, c, t, pos, cfg)
+    return fn, (pspecs, cache_sds, tok_sds, pos_sds), \
+        (pshard, cache_shd, tok_shd, tok_shd)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str | None = None, kv_override: str = "auto",
+             verbose: bool = True) -> dict:
+    cfg = configs.get_config(arch)
+    if kv_override == "exact":
+        cfg = cfg.replace(kv_pq=False)
+    elif kv_override == "pq":
+        cfg = cfg.replace(kv_pq=True)
+    seq, batch, kind = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": kind, "seq": seq, "batch": batch,
+              "kv_override": None if kv_override == "auto" else kv_override,
+              "kv_pq": cfg.kv_pq and kind in ("decode", "prefill"),
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()}
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = why
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: {why}")
+        return result
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    rules = cell_rules(cfg, shape_name, mesh)
+    t0 = time.time()
+    with shd.use_mesh(mesh, rules):
+        fn, arg_specs, in_shardings = build_cell(cfg, shape_name, mesh, rules)
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    result["lower_s"] = round(t_lower, 2)
+    result["compile_s"] = round(t_compile, 2)
+    result["status"] = "ok"
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            result[attr] = getattr(mem, attr, None)
+        args_b = result.get("argument_size_in_bytes") or 0
+        temp_b = result.get("temp_size_in_bytes") or 0
+        result["bytes_per_device"] = args_b + temp_b
+    # trip-count-aware HLO analysis (XLA's cost_analysis counts while bodies
+    # once — see launch/hlo_analysis.py); XLA numbers kept for reference
+    from repro.launch import hlo_analysis as ha
+    costs = ha.analyze_hlo(compiled.as_text())
+    result["hlo_flops_per_dev"] = costs.flops
+    result["hlo_bytes_per_dev"] = costs.bytes
+    result["xla_cost_analysis"] = {
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+    }
+    result["collectives"] = {"ops": costs.collective_ops,
+                             "bytes_by_op": costs.collective_bytes,
+                             "wire_bytes_per_dev": costs.wire_bytes}
+
+    roof = rl.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        chips=mesh.devices.size,
+        hlo_flops_per_dev=costs.flops,
+        hlo_bytes_per_dev=costs.bytes,
+        wire_bytes_per_dev=costs.wire_bytes,
+        model_flops_total=rl.model_flops(cfg, kind, batch, seq),
+        collectives=costs.collective_ops,
+    )
+    result["roofline"] = roof.to_dict()
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s, "
+              f"bottleneck={roof.bottleneck}, "
+              f"t_bound={roof.t_bound*1e3:.2f}ms, mfu_bound={roof.mfu_bound:.3f})")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if kv_override == "auto" else f"_{kv_override}"
+        path = os.path.join(out_dir,
+                            f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kv", default="auto", choices=["auto", "exact", "pq"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                try:
+                    r = run_cell(arch, shape, mesh_name, out_dir=args.out,
+                                 kv_override=args.kv)
+                    if r["status"] not in ("ok", "skipped"):
+                        failures.append((arch, shape, mesh_name))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mesh_name, str(e)[:200]))
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        sys.exit(1)
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

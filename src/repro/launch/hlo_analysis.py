@@ -1,0 +1,328 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE — for
+scan-over-layers models this undercounts FLOPs/bytes by ~n_layers and makes
+roofline terms meaningless. This module re-derives the three roofline inputs
+by parsing the partitioned HLO text and walking the call graph with
+multipliers:
+
+  - `while` ops carry backend_config known_trip_count (jax scans/fori emit
+    it) -> body and condition costs are multiplied by the trip count;
+  - `fusion`/`call` recurse into the called computation for FLOPs; for HBM
+    bytes a fusion counts only its operands+outputs (internals stay in
+    registers/VMEM — the same model XLA itself uses);
+  - `conditional` takes the max across branches (our causal block-skip);
+  - collective ops accumulate wire bytes with ring-algorithm factors.
+
+FLOPs counted: dot (2 * prod(out) * prod(contracted lhs dims)) + a 1-flop/
+element charge for elementwise-heavy fusions (captures softmax/norms; <5%
+of any matmul-bearing cell). Bytes: operands + outputs of top-level (post-
+fusion) instructions, i.e. fusion-boundary traffic.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"(?:branch_computations|true_computation|"
+                          r"false_computation)=\{?%?([\w\.\-, %]+)\}?")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+_COLLECTIVE_BASES = tuple(WIRE_FACTOR)
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(elements, bytes) summed over all arrays in an HLO type string."""
+    elems = total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+def _first_array_dims(type_str: str) -> list[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # operands + attrs tail
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # %name -> type string
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and line.rstrip().endswith("{"):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            # parameters from the signature: "name: type, name: type"
+            sig = mc.group(2)
+            for pm in re.finditer(r"([\w\.\-]+):\s*(\(?[^,()]*(?:\([^)]*\))?"
+                                  r"[^,]*\)?)", sig):
+                cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, type_str, op, rest = mi.groups()
+            cur.instrs.append(Instr(name, type_str, op, rest))
+            cur.shapes[name] = type_str
+        elif line.strip() == "}":
+            cur = None
+    return comps
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_ops: dict = field(default_factory=dict)
+    collective_bytes: dict = field(default_factory=dict)
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+        self.entry = m.group(1) if m else next(iter(self.comps))
+
+    # -------------------------------------------------------------- flops
+    @functools.lru_cache(maxsize=None)
+    def flops(self, comp_name: str) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            total += self._instr_flops(comp, ins)
+        return total
+
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems, _ = _shape_elems_bytes(ins.type_str)
+        ops = _OPERAND_RE.findall(ins.rest.split("),")[0])
+        lhs_shape = _first_array_dims(comp.shapes.get(ops[0], "")) if ops else []
+        cdims = _LHS_CDIMS_RE.search(ins.rest)
+        contract = 1
+        if cdims and lhs_shape:
+            for d in cdims.group(1).split(","):
+                if d and int(d) < len(lhs_shape):
+                    contract *= lhs_shape[int(d)]
+        return 2.0 * out_elems * contract
+
+    def _instr_flops(self, comp: Computation, ins: Instr) -> float:
+        op = ins.op
+        if op == "dot":
+            return self._dot_flops(comp, ins)
+        if op == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            body = _BODY_RE.search(ins.rest)
+            cond = _COND_RE.search(ins.rest)
+            t = 0.0
+            if body:
+                t += self.flops(body.group(1))
+            if cond:
+                t += self.flops(cond.group(1))
+            return trip * t
+        if op in ("fusion", "call", "async-start"):
+            mc = _CALLS_RE.search(ins.rest)
+            sub = self.flops(mc.group(1)) if mc else 0.0
+            if op == "fusion":
+                # charge 1 flop/elem for the fused elementwise work
+                out_elems, _ = _shape_elems_bytes(ins.type_str)
+                sub = max(sub, float(out_elems))
+            return sub
+        if op == "conditional":
+            mb = _BRANCHES_RE.search(ins.rest)
+            if mb:
+                names = re.findall(r"[\w\.\-]+", mb.group(1))
+                return max((self.flops(n) for n in names), default=0.0)
+            # true/false form: collect both computations
+            names = re.findall(r"(?:true|false)_computation=%?([\w\.\-]+)",
+                               ins.rest)
+            return max((self.flops(n) for n in names), default=0.0)
+        return 0.0
+
+    # -------------------------------------------------------------- bytes
+    @functools.lru_cache(maxsize=None)
+    def hbm_bytes(self, comp_name: str) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            total += self._instr_bytes(comp, ins)
+        return total
+
+    def _operand_bytes(self, comp: Computation, ins: Instr) -> float:
+        """Charge only operands that cross the computation boundary
+        (parameters / loop-carry reads); values produced by a sibling
+        instruction were already charged as that producer's output. This is
+        the 'producer-write + boundary-read' traffic model: intermediate
+        chains count once, loop-body re-reads count per iteration.
+        """
+        head = ins.rest.split("),")[0]
+        defs = {i.name: i.op for i in comp.instrs}
+        total = 0.0
+        for name in _OPERAND_RE.findall(head):
+            if name not in comp.shapes:
+                continue
+            producer = defs.get(name)
+            if producer is None or producer in ("parameter",
+                                                "get-tuple-element"):
+                total += _shape_elems_bytes(comp.shapes[name])[1]
+        return total
+
+    def _slice_semantics_bytes(self, comp_name: str) -> float | None:
+        """If the computation's work is a dynamic-(update-)slice, return the
+        actual touched bytes (in-place semantics): 2x the slice/update size.
+        None if the computation is not slice-shaped."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return None
+        for ins in comp.instrs:
+            if ins.op == "dynamic-update-slice":
+                ops = _OPERAND_RE.findall(ins.rest.split("),")[0])
+                if len(ops) >= 2 and ops[1] in comp.shapes:
+                    upd = _shape_elems_bytes(comp.shapes[ops[1]])[1]
+                    return 2.0 * upd
+        for ins in comp.instrs:
+            if ins.op in ("dynamic-slice", "gather"):
+                out_b = _shape_elems_bytes(ins.type_str)[1]
+                return 2.0 * out_b
+        return None
+
+    def _instr_bytes(self, comp: Computation, ins: Instr) -> float:
+        op = ins.op
+        if op == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            body = _BODY_RE.search(ins.rest)
+            return trip * (self.hbm_bytes(body.group(1)) if body else 0.0)
+        if op == "conditional":
+            names = re.findall(r"(?:true|false)_computation=%?([\w\.\-]+)",
+                               ins.rest)
+            mb = _BRANCHES_RE.search(ins.rest)
+            if mb:
+                names = re.findall(r"[\w\.\-]+", mb.group(1))
+            return max((self.hbm_bytes(n) for n in names), default=0.0)
+        if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "copy"):
+            # copies of loop carries are buffer aliasing in practice
+            return 0.0
+        if op == "dynamic-update-slice":
+            ops = _OPERAND_RE.findall(ins.rest.split("),")[0])
+            if len(ops) >= 2 and ops[1] in comp.shapes:
+                return 2.0 * _shape_elems_bytes(comp.shapes[ops[1]])[1]
+        if op in ("dynamic-slice", "gather"):
+            return 2.0 * _shape_elems_bytes(ins.type_str)[1]
+        if op == "fusion":
+            mc = _CALLS_RE.search(ins.rest)
+            if mc:
+                sliced = self._slice_semantics_bytes(mc.group(1))
+                if sliced is not None:
+                    return sliced
+        # fusion-boundary traffic: operands + outputs
+        _, out_b = _shape_elems_bytes(ins.type_str)
+        return out_b + self._operand_bytes(comp, ins)
+
+    # -------------------------------------------------------- collectives
+    def collectives(self, comp_name: str | None = None, mult: float = 1.0,
+                    acc: Costs | None = None) -> Costs:
+        acc = acc if acc is not None else Costs()
+        comp = self.comps.get(comp_name or self.entry)
+        if comp is None:
+            return acc
+        for ins in comp.instrs:
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVE_BASES and not ins.op.endswith("-done"):
+                _, b = _shape_elems_bytes(ins.type_str)
+                if ins.op.endswith("-start") and ins.type_str.startswith("("):
+                    b = b / 2  # async tuple doubles the type
+                acc.collective_ops[base] = acc.collective_ops.get(base, 0) + mult
+                acc.collective_bytes[base] = (acc.collective_bytes.get(base, 0)
+                                              + mult * b)
+                acc.wire_bytes += mult * b * WIRE_FACTOR[base]
+            elif ins.op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                body = _BODY_RE.search(ins.rest)
+                if body:
+                    self.collectives(body.group(1), mult * trip, acc)
+            elif ins.op in ("fusion", "call"):
+                mc = _CALLS_RE.search(ins.rest)
+                if mc:
+                    self.collectives(mc.group(1), mult, acc)
+            elif ins.op == "conditional":
+                names = re.findall(r"(?:true|false)_computation=%?([\w\.\-]+)",
+                                   ins.rest)
+                mb = _BRANCHES_RE.search(ins.rest)
+                if mb:
+                    names = re.findall(r"[\w\.\-]+", mb.group(1))
+                for n in names:  # upper bound: all branches
+                    self.collectives(n, mult, acc)
+        return acc
+
+    # ------------------------------------------------------------- public
+    def analyze(self) -> Costs:
+        c = self.collectives()
+        return Costs(flops=self.flops(self.entry),
+                     bytes=self.hbm_bytes(self.entry),
+                     wire_bytes=c.wire_bytes,
+                     collective_ops=c.collective_ops,
+                     collective_bytes=c.collective_bytes)
+
+
+def analyze_hlo(text: str) -> Costs:
+    return HloAnalyzer(text).analyze()

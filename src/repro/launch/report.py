@@ -1,0 +1,70 @@
+"""Roofline report generator: experiments/dryrun/*.json -> markdown tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(out_dir: str = "experiments/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _fmt_t(seconds: float) -> str:
+    if seconds >= 1.0:
+        return f"{seconds:.2f}s"
+    return f"{seconds*1e3:.2f}ms"
+
+
+def roofline_table(cells: list[dict], mesh: str = "pod") -> str:
+    rows = ["| arch | shape | status | t_compute | t_memory | t_collective | "
+            "bottleneck | useful FLOPs | MFU bound |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["mesh"] != mesh or c.get("kv_override"):
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | SKIP (full attn @500k) "
+                        "| — | — | — | — | — | — |")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | ok | {_fmt_t(r['t_compute_s'])} "
+            f"| {_fmt_t(r['t_memory_s'])} | {_fmt_t(r['t_collective_s'])} "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['mfu_bound']:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile | params | "
+            "collective ops (trip-weighted) |",
+            "|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | SKIP | "
+                        "— | — | — |")
+            continue
+        ops = c.get("collectives", {}).get("ops", {})
+        ops_s = ", ".join(f"{k}:{int(v)}" for k, v in sorted(ops.items()))
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['status']} "
+            f"| {c.get('compile_s', 0):.0f}s | {c.get('params', 0)/1e9:.1f}B "
+            f"| {ops_s or '-'} |")
+    return "\n".join(rows)
+
+
+def main():
+    cells = load_cells()
+    print("## Roofline (single-pod 16x16)\n")
+    print(roofline_table(cells, "pod"))
+    print("\n## Dry-run matrix\n")
+    print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw
+
+`cost_analysis()` of the SPMD-partitioned executable is per-device, so the
+per-chip division is already done. Collective wire bytes are NOT in
+cost_analysis — we parse the partitioned HLO and sum operand/result sizes of
+every collective op with the standard ring-algorithm byte factors.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e-class hardware constants (per the brief)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per chip of ICI
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `%name = <result-type> <op>(`  — result type may be a tuple
+_COLL_RE = re.compile(
+    r"=\s+(\(?[^=]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every array shape in an HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# ring-algorithm wire-byte factors (large-N limit) applied to the result size
+_WIRE_FACTOR = {
+    "all-gather": 1.0,        # receives (N-1)/N of the gathered result
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,    # sends (N-1)/N of the input
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=dict)       # op -> count
+    bytes_by_op: dict = field(default_factory=dict)
+    wire_bytes: float = 0.0
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Parse the per-device (partitioned) HLO; returns per-device wire bytes."""
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if f"{op}-done" in line:
+            continue  # counted at -start
+        b = shape_bytes(type_str)
+        # async pairs: result of -start is a tuple (operand, result, ...);
+        # dividing by 2 compensates the doubled tuple type
+        if f"{op}-start" in line and type_str.startswith("("):
+            b = b / 2
+        stats.ops[op] = stats.ops.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b
+        stats.wire_bytes += b * _WIRE_FACTOR[op]
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    model_flops_total: float
+    collectives: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_dev / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time lower bound (no overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): how much compiled compute is
+        'useful' (catches remat/redundancy/causal-mask waste)."""
+        denom = self.hlo_flops_per_dev * self.chips
+        return self.model_flops_total / denom if denom else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (the perf score)."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        return self.model_flops_total / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "hlo_bytes_per_dev": self.hlo_bytes_per_dev,
+            "wire_bytes_per_dev": self.wire_bytes_per_dev,
+            "model_flops_total": self.model_flops_total,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D train, 2·N_active·D inference."""
+    n_active = cfg.active_param_count()
+    tokens = batch * seq if kind in ("train", "prefill") else batch
+    mult = 6.0 if kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # causal attention term (counted like standard MFU accounting)
+    if cfg.n_heads:
+        hd = cfg.resolved_head_dim
+        if kind in ("train", "prefill"):
+            att = 2 * 2 * cfg.n_layers * batch * seq * seq / 2 * cfg.n_heads * hd
+            att *= 3.0 if kind == "train" else 1.0
+        else:  # decode: one query against `seq` keys
+            att = 2 * 2 * cfg.n_layers * batch * seq * cfg.n_heads * hd
+        if cfg.block_type == "mamba2" and cfg.shared_attn_every:
+            att /= cfg.shared_attn_every
+        elif cfg.block_type != "attn":
+            att = 0.0
+        flops += att
+    return flops

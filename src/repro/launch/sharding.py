@@ -1,0 +1,166 @@
+"""Logical-axis sharding: partition rules, divisibility fallback, contexts.
+
+Model code annotates arrays with *logical* axis names ("batch", "embed",
+"heads", ...). A rules table maps logical names to mesh axes. The mapping is
+applied
+  - to parameters when building pjit in_shardings (via the axes pytree), and
+  - to activations via `constrain(x, ...)` which becomes
+    `with_sharding_constraint` when a mesh context is active and a no-op in
+    single-device smoke tests.
+
+Divisibility fallback: if a dimension is not divisible by the product of its
+mapped mesh axes (e.g. 14 heads on a 16-wide model axis), the mapping for
+that dimension is dropped (replicated) instead of erroring — this is what
+lets one rule table serve all ten architectures.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> mesh axis (or tuple of mesh axes, or None = replicate).
+# "fsdp" style weight sharding rides the data axis; TP rides "model".
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),       # data parallel over pod+data
+    # NOTE: "seq" defaults to replicated. A Megatron-SP-style "seq": "model"
+    # was the v0 default; the dry-run roofline showed it reshards the
+    # residual stream inside the layer/chunk loops (1600+ all-to-alls/step,
+    # 370 GB/device wire on qwen3 train_4k) — group remat is the cheaper fix
+    # for activation memory. See EXPERIMENTS.md §Perf iteration 1.
+    "seq": None,
+    # FSDP/ZeRO-3 via one rule: weight matrices shard their "embed" dim over
+    # the data axis (activations keep embed replicated because their "batch"
+    # dim consumes the data axis first — logical_to_spec never reuses axes).
+    # Gradients then reduce-scatter instead of all-reduce, and optimizer
+    # state is sharded 256-way. Without this, qwen1.5-32b+ cannot fit
+    # params+moments on a 16 GB v5e.
+    "embed": "data",
+    "heads": "model",               # TP over attention heads
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",                 # TP over FFN hidden
+    "vocab": "model",               # TP over vocab (embedding + logits)
+    "experts": "model",             # EP over experts
+    "expert_mlp": None,
+    "fsdp": "data",                 # parameter sharding over the data axis
+    "ssm_heads": "model",           # TP over SSM heads
+    "ssm_state": None,
+    "conv": None,
+    "lora": None,
+    "kv_seq": "model",              # decode KV cache: shard context over model
+    "stack": None,                  # scan-over-layers leading axis
+    "pq_m": None,
+    None: None,
+}
+
+_ctx = threading.local()
+
+
+def _get_ctx() -> tuple[Mesh | None, Mapping[str, Any] | None]:
+    return getattr(_ctx, "mesh", None), getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Mapping[str, Any] | None = None):
+    """Activate a mesh + rules for `constrain` and spec helpers."""
+    old = _get_ctx()
+    _ctx.mesh, _ctx.rules = mesh, dict(rules or DEFAULT_RULES)
+    try:
+        with mesh:
+            yield
+    finally:
+        _ctx.mesh, _ctx.rules = old
+
+
+def _axis_size(mesh: Mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _resolve_axis(mesh: Mesh, rules: Mapping[str, Any], logical: str | None):
+    """Logical name -> mesh axes entry, dropping axes missing from the mesh."""
+    entry = rules.get(logical, None)
+    if entry is None:
+        return None
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+def logical_to_spec(shape: Sequence[int], logical_axes: Sequence[str | None],
+                    mesh: Mesh, rules: Mapping[str, Any]) -> P:
+    """Build a PartitionSpec with divisibility fallback per dimension."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        entry = _resolve_axis(mesh, rules, name)
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        axes = tuple(a for a in axes if a not in used)
+        size = _axis_size(mesh, axes)
+        if size <= 1 or dim % size != 0:
+            # try a prefix of the axes tuple before giving up entirely
+            while axes and (dim % _axis_size(mesh, axes) != 0):
+                axes = axes[:-1]
+            if not axes:
+                out.append(None)
+                continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def named_sharding(shape: Sequence[int], logical_axes: Sequence[str | None],
+                   mesh: Mesh, rules: Mapping[str, Any] | None = None
+                   ) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(shape, logical_axes, mesh,
+                                               rules or DEFAULT_RULES))
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a context."""
+    mesh, rules = _get_ctx()
+    if mesh is None or x.ndim != len(logical_axes):
+        return x
+    spec = logical_to_spec(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _axes_leaf(x) -> bool:
+    """An axes leaf is None or a flat tuple of axis names (not a NamedTuple
+    of sub-trees — those have tuple-valued fields and recurse)."""
+    return x is None or (
+        isinstance(x, tuple)
+        and all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_shardings(shapes_tree: Any, axes_tree: Any, mesh: Mesh,
+                   rules: Mapping[str, Any] | None = None) -> Any:
+    """Map a pytree of ShapeDtypeStructs + a matching axes pytree to
+    NamedShardings (pjit in_shardings for params/opt state)."""
+    rules = rules or DEFAULT_RULES
+    flat_axes, axes_def = jax.tree.flatten(axes_tree, is_leaf=_axes_leaf)
+    flat_shapes = axes_def.flatten_up_to(shapes_tree)
+
+    def one(sds, axes):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        return named_sharding(sds.shape, axes, mesh, rules)
+
+    return jax.tree.unflatten(
+        axes_def, [one(s, a) for s, a in zip(flat_shapes, flat_axes)])

@@ -1,0 +1,59 @@
+"""End-to-end training driver: quickstart scale to multi-pod config.
+
+On real hardware this script is launched once per host (jax.distributed
+initializes from the cluster env); on the dev box it runs the same code on
+the local mesh. The production path is exercised structurally by
+`--dry-run`, which builds the full 16x16 (or 2x16x16) pjit train step.
+
+Examples:
+  python -m repro.launch.train --arch qwen3-1.7b --smoke --steps 50
+  python -m repro.launch.train --arch dbrx-132b --dry-run --multi-pod
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the production-mesh step instead of training")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch import dryrun
+        dryrun.run_cell(args.arch, "train_4k",
+                        "multipod" if args.multi_pod else "pod")
+        return
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    ocfg = opt_lib.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                               warmup_steps=max(1, args.steps // 20))
+    state, history = train_loop.train(
+        cfg, steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, ocfg=ocfg, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, microbatches=args.microbatches)
+    print(f"[train] done: final loss {history[-1]['loss']:.4f} "
+          f"over {len(history)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""KV caches for decode: exact bf16 and 4-bit-PQ-compressed (paper technique).
+
+The PQ-compressed cache is the LM-serving home of the paper's kernel: decode
+attention scores q·k_i are computed by ADC against PQ-encoded keys with a
+16-entry inner-product LUT per sub-space — the same register-resident
+fast-scan machinery as the ANN index (inner-product LUTs instead of L2).
+Values are PQ-encoded too and reconstructed on the fly inside an
+online-softmax scan over context chunks, so HBM traffic is the 4-bit codes,
+not the bf16 tensors: an 8x memory/bandwidth cut at M = head_dim/2
+(e.g. qwen1.5-32b decode_32k: 21.4 GB/device exact -> 2.7 GB/device PQ;
+exact does NOT fit v5e HBM, PQ does — see EXPERIMENTS.md).
+
+Codebooks are per-(layer, kv-head, sub-space) and are serving-time constants
+(calibrated offline on activation samples; `calibrate_kv_codebooks` below).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fastscan as fs
+from repro.models.config import ModelConfig
+
+# logical axes for cache trees (used by launch/serve for shardings)
+EXACT_KV_AXES = ("stack", "batch", "kv_seq", "kv_heads", "head_dim")
+PQ_CODE_AXES = ("stack", "batch", "kv_seq", "kv_heads", "pq_m")
+PQ_CB_AXES = ("stack", "kv_heads", "pq_m", None, None)
+
+
+class ExactKVCache(NamedTuple):
+    k: jax.Array  # (L, B, Smax, KV, hd)
+    v: jax.Array
+
+
+class PQKVCache(NamedTuple):
+    k_codes: jax.Array    # (L, B, Smax, KV, M//2) u8 (nibble-packed)
+    v_codes: jax.Array
+    k_cb: jax.Array       # (L, KV, M, 16, dsub) codebooks
+    v_cb: jax.Array
+
+
+def init_exact(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> ExactKVCache:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_seq, kv, hd)
+    return ExactKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_pq(cfg: ModelConfig, batch: int, max_seq: int, key=None) -> PQKVCache:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    m = cfg.resolved_kv_pq_m
+    dsub = hd // m
+    lshape = (cfg.n_layers, batch, max_seq, kv, m // 2)
+    cbshape = (cfg.n_layers, kv, m, 16, dsub)
+    if key is None:
+        cb_k = jnp.zeros(cbshape, jnp.bfloat16)
+        cb_v = jnp.zeros(cbshape, jnp.bfloat16)
+    else:
+        k1, k2 = jax.random.split(key)
+        cb_k = jax.random.normal(k1, cbshape, jnp.bfloat16)
+        cb_v = jax.random.normal(k2, cbshape, jnp.bfloat16)
+    return PQKVCache(jnp.zeros(lshape, jnp.uint8), jnp.zeros(lshape, jnp.uint8),
+                     cb_k, cb_v)
+
+
+def exact_cache_axes() -> ExactKVCache:
+    return ExactKVCache(EXACT_KV_AXES, EXACT_KV_AXES)
+
+
+def pq_cache_axes() -> PQKVCache:
+    return PQKVCache(PQ_CODE_AXES, PQ_CODE_AXES, PQ_CB_AXES, PQ_CB_AXES)
+
+
+# ---------------------------------------------------------------------------
+# PQ encode/decode of K/V rows
+# ---------------------------------------------------------------------------
+
+def encode_kv(x: jax.Array, cb: jax.Array) -> jax.Array:
+    """x: (B, KV, hd); cb: (KV, M, 16, dsub) -> packed codes (B, KV, M//2)."""
+    b, kv, hd = x.shape
+    m, _, dsub = cb.shape[1], cb.shape[2], cb.shape[3]
+    xs = x.reshape(b, kv, m, 1, dsub)
+    d = jnp.sum((xs.astype(jnp.float32) - cb[None].astype(jnp.float32)) ** 2, -1)
+    codes = jnp.argmin(d, axis=-1).astype(jnp.uint8)          # (B, KV, M)
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return lo | (hi << 4)
+
+
+def decode_kv(packed: jax.Array, cb: jax.Array) -> jax.Array:
+    """packed: (..., KV, M//2) u8; cb: (KV, M, 16, dsub) -> (..., KV, hd)."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)  # (...,KV,M)
+    # gather: cb[kv, m, codes] -> (..., KV, M, dsub)
+    gathered = jnp.take_along_axis(
+        cb[(None,) * (codes.ndim - 2)],                 # (...,KV,M,16,dsub)
+        codes[..., None, None].astype(jnp.int32), axis=-2)[..., 0, :]
+    return gathered.reshape(*packed.shape[:-1], -1)
+
+
+def calibrate_kv_codebooks(key: jax.Array, samples: jax.Array, m: int,
+                           iters: int = 15) -> jax.Array:
+    """k-means codebooks from activation samples (N, KV, hd) -> (KV, M, 16, dsub)."""
+    from repro.core.kmeans import kmeans_multi
+    n, kv, hd = samples.shape
+    dsub = hd // m
+    sub = samples.reshape(n, kv, m, dsub).transpose(1, 2, 0, 3).reshape(kv * m, n, dsub)
+    res = kmeans_multi(key, sub.astype(jnp.float32), k=16, iters=iters)
+    return res.centroids.reshape(kv, m, 16, dsub)
+
+
+# ---------------------------------------------------------------------------
+# PQ decode attention (one new token vs a PQ-compressed context)
+# ---------------------------------------------------------------------------
+
+def _build_ip_lut(q: jax.Array, k_cb: jax.Array) -> jax.Array:
+    """Inner-product LUTs. q: (B, KV, g, hd); k_cb: (KV, M, 16, dsub).
+
+    Returns (B, KV, g, M, 16) float32: T[m][c] = q_m . cb[m][c].
+    """
+    b, kv, g, hd = q.shape
+    m, dsub = k_cb.shape[1], k_cb.shape[3]
+    qs = q.reshape(b, kv, g, m, dsub)
+    return jnp.einsum("bkgmd,kmcd->bkgmc", qs.astype(jnp.float32),
+                      k_cb.astype(jnp.float32))
+
+
+def _adc_scores(lut: jax.Array, packed: jax.Array, quantize_q8: bool) -> jax.Array:
+    """lut: (B, KV, g, M, 16); packed: (B, C, KV, M//2) -> scores (B, KV, g, C).
+
+    With quantize_q8 (paper-faithful) the LUT is affine-quantized to u8 and
+    accumulated in int32, exactly like the ANN fast-scan; scores are then
+    dequantized for the softmax.
+    """
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)  # (B,C,KV,M)
+    codes = jnp.transpose(codes, (0, 2, 3, 1))                   # (B,KV,M,C)
+    if quantize_q8:
+        qlut = fs.quantize_lut(lut.reshape(-1, *lut.shape[-2:]))  # rows = B*KV*g
+        t = qlut.table_q8.reshape(lut.shape).astype(jnp.int32)    # (B,KV,g,M,16)
+        gathered = jnp.take_along_axis(t, codes[:, :, None].astype(jnp.int32),
+                                       axis=-1)                   # (B,KV,g,M,C)
+        acc = jnp.sum(gathered, axis=-2, dtype=jnp.int32)         # (B,KV,g,C)
+        scale = qlut.scale.reshape(*lut.shape[:3])                # (B,KV,g)
+        bias = qlut.bias.reshape(*lut.shape[:4]).sum(-1)          # (B,KV,g)
+        return scale[..., None] * acc.astype(jnp.float32) + bias[..., None]
+    gathered = jnp.take_along_axis(lut, codes[:, :, None].astype(jnp.int32), axis=-1)
+    return jnp.sum(gathered, axis=-2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "quantize_q8"))
+def pq_decode_attention(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
+                        k_cb: jax.Array, v_cb: jax.Array, position: jax.Array,
+                        *, chunk: int = 2048, quantize_q8: bool = True
+                        ) -> jax.Array:
+    """One-token attention against the PQ cache, online softmax over chunks.
+
+    q: (B, H, hd); k_codes/v_codes: (B, Smax, KV, M//2) u8;
+    k_cb/v_cb: (KV, M, 16, dsub); position: (B,) current positions.
+    Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    kv = k_codes.shape[2]
+    g = h // kv
+    smax = k_codes.shape[1]
+    chunk = min(chunk, smax)
+    assert smax % chunk == 0, (smax, chunk)
+    nchunks = smax // chunk
+    qg = q.reshape(b, kv, g, hd)
+    lut = _build_ip_lut(qg, k_cb) / math.sqrt(hd)    # (B,KV,g,M,16)
+
+    m0 = jnp.full((b, kv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g), jnp.float32)
+    acc0 = jnp.zeros((b, kv, g, hd), jnp.float32)
+
+    def body(i, state):
+        m, l, acc = state
+        kc = jax.lax.dynamic_slice_in_dim(k_codes, i * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v_codes, i * chunk, chunk, axis=1)
+        s = _adc_scores(lut, kc, quantize_q8)         # (B,KV,g,C)
+        pos_in_chunk = i * chunk + jnp.arange(chunk)
+        valid = pos_in_chunk[None, :] <= position[:, None]       # (B,C)
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        mj = jnp.maximum(m, jnp.max(s, axis=-1))
+        mj_safe = jnp.where(jnp.isfinite(mj), mj, 0.0)
+        p = jnp.exp(s - mj_safe[..., None])           # (B,KV,g,C)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - mj_safe, -jnp.inf))
+        lj = l * corr + jnp.sum(p, axis=-1)
+        vh = decode_kv(vc, v_cb)                      # (B,C,KV,hd)
+        accj = acc * corr[..., None] + jnp.einsum(
+            "bkgc,bckp->bkgp", p.astype(vh.dtype), vh).astype(jnp.float32)
+        return mj, lj, accj
+
+    m, l, acc = jax.lax.fori_loop(0, nchunks, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def update_exact(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, pos: jax.Array):
+    """Write one token at scalar position `pos`. caches: (B, Smax, KV, hd)."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new[:, None], pos, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new[:, None], pos, 1)
+    return k_cache, v_cache
+
+
+def update_pq(k_codes: jax.Array, v_codes: jax.Array, k_new: jax.Array,
+              v_new: jax.Array, k_cb: jax.Array, v_cb: jax.Array,
+              pos: jax.Array):
+    """Encode one token's K/V to 4-bit codes and write at `pos`."""
+    kc = encode_kv(k_new, k_cb)[:, None]              # (B,1,KV,M//2)
+    vc = encode_kv(v_new, v_cb)[:, None]
+    k_codes = jax.lax.dynamic_update_slice_in_dim(k_codes, kc, pos, 1)
+    v_codes = jax.lax.dynamic_update_slice_in_dim(v_codes, vc, pos, 1)
+    return k_codes, v_codes

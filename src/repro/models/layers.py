@@ -1,0 +1,297 @@
+"""Shared NN layers: param-spec system, norms, RoPE, GQA attention, FFNs.
+
+Parameters are declared once as `ParamSpec` trees (shape + logical sharding
+axes + initializer); `init_params` / `param_axes` / `param_shapes` derive the
+materialized weights, the pjit sharding tree, and the dry-run
+ShapeDtypeStructs from the same declaration.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple            # logical axis names, len == ndim
+    init: str = "normal"   # normal | zeros | ones
+    scale: float = 1.0     # stddev multiplier for "normal"
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key: jax.Array, specs: Any, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, s: ParamSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = s.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(k, s) for k, s in zip(keys, leaves)])
+
+
+def param_axes(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_shapes(specs: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=is_spec)
+
+
+def stacked(specs: Any, n: int) -> Any:
+    """Prepend a scan-over-layers axis to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("stack", *s.axes), s.init, s.scale),
+        specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rmsnorm_spec(dim: int, axis: str | None = "embed") -> ParamSpec:
+    return ParamSpec((dim,), (axis,), "ones")
+
+
+# ---------------------------------------------------------------------------
+# RoPE (on-the-fly from positions — no 500k-long precomputed tables)
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32. Rotates pairs (even, odd)."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None] * freq[None, None, :]  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, qk-norm, qkv-bias, chunked-causal / decode)
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), "zeros")
+        p["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_spec(hd, "head_dim")
+        p["k_norm"] = rmsnorm_spec(hd, "head_dim")
+    return p
+
+
+def qkv_project(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope/norm applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", "head_dim")
+    k = constrain(k, "batch", None, "kv_heads", "head_dim")
+    v = constrain(v, "batch", None, "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _softcap(s: jax.Array, cap: float) -> jax.Array:
+    if cap > 0:
+        return cap * jnp.tanh(s / cap)
+    return s
+
+
+def full_causal_attention(q, k, v, cfg: ModelConfig) -> jax.Array:
+    """Reference O(S^2)-memory path for short sequences / smoke tests."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = _softcap(scores / math.sqrt(hd), cfg.attn_logit_softcap)
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def chunked_causal_attention(q, k, v, cfg: ModelConfig) -> jax.Array:
+    """Flash-style online-softmax attention in pure JAX.
+
+    Scans query chunks; for each, an inner scan visits KV chunks with a
+    lax.cond that skips blocks past the causal frontier at runtime (cond in a
+    sequential scan executes one branch only). This stays reverse-mode
+    differentiable (unlike a dynamic-bound fori_loop) while never
+    materializing an O(S^2) buffer and skipping ~half the block compute.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    cq, ckv = cfg.attn_q_chunk, cfg.attn_kv_chunk
+    if s % cq or s % ckv or s <= cq:
+        return full_causal_attention(q, k, v, cfg)
+    nq, nkv = s // cq, s // ckv
+    qg = q.reshape(b, nq, cq, kvh, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_chunk(qi, i, k, v):
+        # (B, cq, KV, g, hd) x full K/V -> (B, KV, g, cq, hd)
+        m0 = jnp.full((b, kvh, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        acc0 = jnp.zeros((b, kvh, g, cq, hd), jnp.float32)
+
+        def compute_block(args):
+            m, l, acc, j = args
+            kj = jax.lax.dynamic_slice_in_dim(k, j * ckv, ckv, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * ckv, ckv, axis=1)
+            sij = jnp.einsum("bqkgh,bskh->bkgqs", qi, kj).astype(jnp.float32)
+            sij = _softcap(sij * scale, cfg.attn_logit_softcap)
+            qpos = i * cq + jnp.arange(cq)
+            kpos = j * ckv + jnp.arange(ckv)
+            causal = qpos[:, None] >= kpos[None, :]
+            sij = jnp.where(causal[None, None, None], sij, -jnp.inf)
+            mj = jnp.maximum(m, jnp.max(sij, axis=-1))
+            # guard fully-masked rows: mj could still be -inf
+            mj_safe = jnp.where(jnp.isfinite(mj), mj, 0.0)
+            pij = jnp.exp(sij - mj_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - mj_safe, -jnp.inf))
+            lj = l * corr + jnp.sum(pij, axis=-1)
+            accj = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", pij.astype(v.dtype), vj).astype(jnp.float32)
+            return mj, lj, accj
+
+        def kv_body(state, j):
+            m, l, acc = state
+            # causal frontier: block j is live iff its first key position
+            # is <= the last query position of this q chunk
+            live = j * ckv < (i + 1) * cq
+            m, l, acc = jax.lax.cond(live, compute_block,
+                                     lambda args: args[:3], (m, l, acc, j))
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, acc0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]      # (B, KV, g, cq, hd)
+        out = jnp.transpose(out, (0, 3, 1, 2, 4))          # (B, cq, KV, g, hd)
+        return out.astype(q.dtype)
+
+    # flash-attention backward, structurally: checkpoint each q chunk so the
+    # O(cq x ckv) score blocks are recomputed in bwd instead of being saved
+    # (saving them costs ~4 GB/layer of f32 HBM traffic at S=4k, B=16 — see
+    # EXPERIMENTS.md §Perf). Residuals per chunk are just (qi, out).
+    q_chunk_ckpt = jax.checkpoint(q_chunk)
+
+    def q_body(carry, inp):
+        del carry
+        qi, i = inp
+        return None, q_chunk_ckpt(qi, i, k, v)
+
+    _, outs = jax.lax.scan(q_body, None,
+                           (jnp.moveaxis(qg, 1, 0), jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out
+
+
+def attention(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array
+              ) -> jax.Array:
+    """Training/prefill self-attention over a full sequence."""
+    q, k, v = qkv_project(p, x, cfg, positions)
+    out = chunked_causal_attention(q, k, v, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def decode_attention_scores(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, cfg: ModelConfig,
+                            position: jax.Array) -> jax.Array:
+    """One-token attention vs an ALREADY-UPDATED (B, Skv, KV, hd) cache.
+
+    q: (B, H, hd); position: (B,) int32 — the current token's position
+    (inclusive: the token attends to itself, so the caller must write the
+    new K/V into the cache before scoring). Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
+    scores = _softcap(scores / math.sqrt(hd), cfg.attn_logit_softcap)
+    skv = k_cache.shape[1]
+    valid = jnp.arange(skv)[None, :] <= position[:, None]   # (B, Skv)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v_cache)
+    return out.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+def ffn_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    elif cfg.mlp_type == "relu2":  # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:
+        raise ValueError(cfg.mlp_type)
+    h = constrain(h, "batch", None, "mlp")
+    return constrain(h @ p["wo"], "batch", "seq", "embed")

@@ -1,0 +1,296 @@
+"""Public model API: specs/init/forward/loss/prefill/decode for every family.
+
+All entry points are pure functions of (params, inputs, cfg) so they compose
+directly with pjit, jax.grad, and the dry-run's .lower()/.compile().
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models import kvcache as kvc
+from repro.models import layers as ll
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# specs / init
+# ---------------------------------------------------------------------------
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs = {
+        "embedding": ParamSpec((v, d), ("vocab", "embed"), scale=1.0),
+        "ln_f": ll.rmsnorm_spec(d),
+        "lm_head": ParamSpec((d, v), ("embed", "vocab")),
+    }
+    if cfg.block_type == "attn":
+        specs["stack"] = tf.attn_stack_specs(cfg)
+    elif cfg.block_type == "mamba2":
+        specs["stack"] = tf.mamba_stack_specs(cfg)
+    elif cfg.block_type == "rwkv6":
+        specs["stack"] = tf.rwkv_stack_specs(cfg)
+    else:
+        raise ValueError(cfg.block_type)
+    return specs
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig, dtype=None) -> Any:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return ll.init_params(key, lm_specs(cfg), dtype)
+
+
+def lm_axes(cfg: ModelConfig) -> Any:
+    return ll.param_axes(lm_specs(cfg))
+
+
+def lm_shapes(cfg: ModelConfig, dtype=None) -> Any:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return ll.param_shapes(lm_specs(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params: Any, tokens: jax.Array, cfg: ModelConfig,
+            frontend_embeds: jax.Array | None = None,
+            positions: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) -> (logits (B, S, Vpad), aux_loss scalar).
+
+    The modality frontend is a STUB (per brief): precomputed frame/patch
+    embeddings occupy the first frontend_len sequence positions.
+    """
+    del positions  # positions are always 0..S-1 for full-sequence forward
+    h, aux = _hidden_states(params, tokens, cfg, frontend_embeds)
+    logits = h @ params["lm_head"]
+    return constrain(logits, "batch", "seq", "vocab"), aux
+
+
+def _ce_from_logits(logits: jax.Array, targets: jax.Array, mask: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Masked summed NLL for one (B, s, Vpad) logits block."""
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad[None, None], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.sum((lse - gold) * mask)
+
+
+def loss_fn(params: Any, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """batch: {tokens, targets, mask, [frontend_embeds]} -> (loss, metrics).
+
+    Cross-entropy is computed in sequence chunks over the final hidden
+    states (jax.checkpoint'd), so the full (B, S, Vpad) f32 logits tensor is
+    never materialized nor saved for backward — it was the dominant memory
+    term for small-d_model/large-vocab archs (musicgen: 77.8s -> see
+    EXPERIMENTS.md §Perf cell D; internvl2 vocab 153k likewise).
+    """
+    b, s = batch["tokens"].shape
+    chunk = cfg.loss_chunk
+    if chunk <= 0 or s % chunk or s <= chunk:
+        logits, aux = forward(params, batch["tokens"], cfg,
+                              frontend_embeds=batch.get("frontend_embeds"))
+        nll = _ce_from_logits(logits, batch["targets"], batch["mask"], cfg)
+    else:
+        # forward WITHOUT the lm_head, then scan the head+CE over seq chunks
+        h, aux = _hidden_states(params, batch["tokens"], cfg,
+                                batch.get("frontend_embeds"))
+        nc = s // chunk
+
+        def rs(t):
+            return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        def body(acc, xs):
+            hc, tc, mc = xs
+            logits = hc @ params["lm_head"]
+            return acc + _ce_from_logits(logits, tc, mc, cfg), None
+
+        nll, _ = jax.lax.scan(
+            jax.checkpoint(body),
+            jnp.float32(0.0),
+            (rs(h), rs(batch["targets"]), rs(batch["mask"])))
+    denom = jnp.maximum(jnp.sum(batch["mask"]), 1.0)
+    ce = nll / denom
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": denom}
+
+
+def _hidden_states(params: Any, tokens: jax.Array, cfg: ModelConfig,
+                   frontend_embeds: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """forward() minus the lm_head: final-norm hidden states (B, S, D)."""
+    b, s = tokens.shape
+    h = params["embedding"][tokens]
+    h = constrain(h, "batch", "seq", "embed")
+    if cfg.frontend != "none" and frontend_embeds is not None:
+        h = jax.lax.dynamic_update_slice(h, frontend_embeds.astype(h.dtype),
+                                         (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.block_type == "attn":
+        h, aux = tf.attn_stack(params["stack"], h, cfg, positions)
+    elif cfg.block_type == "mamba2":
+        h, aux = tf.mamba_stack(params["stack"], h, cfg, positions)
+    else:
+        h, aux = tf.rwkv_stack(params["stack"], h, cfg, positions)
+    return ll.rmsnorm(h, params["ln_f"], cfg.norm_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+               key=None) -> Any:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if cfg.block_type == "attn":
+        if cfg.kv_pq:
+            return kvc.init_pq(cfg, batch, max_seq, key=key)
+        return kvc.init_exact(cfg, batch, max_seq, dtype)
+    if cfg.block_type == "mamba2":
+        return tf.mamba_cache_init(cfg, batch, max_seq, dtype, key=key)
+    return tf.rwkv_cache_init(cfg, batch, dtype)
+
+
+def cache_axes(cfg: ModelConfig) -> Any:
+    if cfg.block_type == "attn":
+        return kvc.pq_cache_axes() if cfg.kv_pq else kvc.exact_cache_axes()
+    if cfg.block_type == "mamba2":
+        return tf.mamba_cache_axes(cfg)
+    return tf.rwkv_cache_axes()
+
+
+def decode_step(params: Any, cache: Any, tokens: jax.Array,
+                position: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, Any]:
+    """One decode step. tokens: (B,) int32; position: (B,) int32.
+
+    Returns (logits (B, Vpad), updated cache). This is the `serve_step`
+    lowered by the decode_32k / long_500k dry-run cells.
+    """
+    h = params["embedding"][tokens]                     # (B, D)
+    h = constrain(h, "batch", "embed")
+    if cfg.block_type == "attn":
+        h, cache = tf.attn_stack_decode(params["stack"], h, cfg, cache, position)
+    elif cfg.block_type == "mamba2":
+        h0 = h
+        h, cache = tf.mamba_stack_decode(params["stack"], h, cfg, cache,
+                                         position, h0)
+    else:
+        h, cache = tf.rwkv_stack_decode(params["stack"], h, cfg, cache, position)
+    h = ll.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    return constrain(logits, "batch", "vocab"), cache
+
+
+def prefill(params: Any, tokens: jax.Array, cfg: ModelConfig,
+            max_seq: int | None = None,
+            frontend_embeds: jax.Array | None = None,
+            pq_cache: Any | None = None) -> tuple[jax.Array, Any]:
+    """Prefill a prompt, returning (last-position logits, filled cache).
+
+    Attention family: one stack scan that also captures per-layer K/V (or
+    their 4-bit PQ codes when cfg.kv_pq, via `pq_cache` carrying calibrated
+    codebooks). SSM/RWKV: the chunked scans natively emit their O(1) states.
+    """
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    if cfg.block_type != "attn":
+        h = params["embedding"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.block_type == "mamba2":
+            if cfg.kv_pq and cfg.shared_attn_every:
+                assert pq_cache is not None, "PQ prefill needs calibrated codebooks"
+                h, cache = tf.mamba_stack_prefill_pq(
+                    params["stack"], h, cfg, positions, max_seq,
+                    pq_cache["attn_k_cb"], pq_cache["attn_v_cb"])
+            else:
+                h, cache = tf.mamba_stack_prefill(params["stack"], h, cfg,
+                                                  positions, max_seq)
+        else:
+            h, cache = tf.rwkv_stack_prefill(params["stack"], h, cfg)
+        h = ll.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+        logits = h[:, -1] @ params["lm_head"]
+        return logits, cache
+
+    if cfg.kv_pq:  # paper tech: encode K/V straight to 4-bit codes
+        assert pq_cache is not None, "PQ prefill needs calibrated codebooks"
+        return encode_pq_cache(params, tokens, cfg, pq_cache)
+
+    # attention family: capture per-layer K/V during the stack scan
+    h = params["embedding"][tokens]
+    if cfg.frontend != "none" and frontend_embeds is not None:
+        h = jax.lax.dynamic_update_slice(h, frontend_embeds.astype(h.dtype),
+                                         (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, lp):
+        h = carry
+        x = ll.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = ll.qkv_project(lp["attn"], x, cfg, positions)
+        out = ll.chunked_causal_attention(q, k, v, cfg)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+        hn = ll.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            from repro.models import moe as moe_mod
+            f, _ = moe_mod.moe_ffn(lp["moe"], hn, cfg)
+            h = h + f
+        else:
+            h = h + ll.ffn(lp["ffn"], hn, cfg)
+        return h, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, params["stack"]["blocks"])
+    h = ll.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = h[:, -1] @ params["lm_head"]
+
+    pad = max_seq - s
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, kvc.ExactKVCache(ks, vs)
+
+
+def encode_pq_cache(params: Any, tokens: jax.Array, cfg: ModelConfig,
+                    cache: kvc.PQKVCache) -> tuple[jax.Array, kvc.PQKVCache]:
+    """Prefill into a PQ cache whose codebooks are already calibrated."""
+    b, s = tokens.shape
+    h = params["embedding"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, xs):
+        h = carry
+        lp, kcb, vcb = xs
+        x = ll.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = ll.qkv_project(lp["attn"], x, cfg, positions)
+        out = ll.chunked_causal_attention(q, k, v, cfg)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+        hn = ll.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            from repro.models import moe as moe_mod
+            f, _ = moe_mod.moe_ffn(lp["moe"], hn, cfg)
+            h = h + f
+        else:
+            h = h + ll.ffn(lp["ffn"], hn, cfg)
+        # encode K/V rows to 4-bit codes (vectorized over sequence)
+        kc = jax.vmap(lambda kk: kvc.encode_kv(kk, kcb), in_axes=1, out_axes=1)(k)
+        vc = jax.vmap(lambda vv: kvc.encode_kv(vv, vcb), in_axes=1, out_axes=1)(v)
+        return h, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(body, h,
+                                 (params["stack"]["blocks"], cache.k_cb, cache.v_cb))
+    h = ll.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = h[:, -1] @ params["lm_head"]
+    smax = cache.k_codes.shape[2]
+    pad = smax - s
+    kcs = jnp.pad(kcs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vcs = jnp.pad(vcs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, kvc.PQKVCache(kcs, vcs, cache.k_cb, cache.v_cb)

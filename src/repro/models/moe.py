@@ -1,0 +1,237 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dense-dispatch einsums (GShard style) cost O(T * E*C * D) — quadratic-ish in
+sequence and unusable at 1M tokens/step. We instead use the sort-based
+dropping dispatch (MaxText-style): top-k route -> stable sort by expert ->
+position-in-expert via a cumsum -> scatter into a fixed (E, C, D) buffer ->
+batched expert FFN einsum -> combine. Every shape is static, so the whole
+thing lowers under pjit; with experts sharded over the "model" axis, GSPMD
+inserts the all-to-all-equivalent collectives around the scatter/gather.
+
+Tokens beyond an expert's capacity are dropped (contribute zero); the router
+keeps a load-balancing auxiliary loss to make drops rare.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {"router": ParamSpec((d, e), ("embed", None), scale=0.1)}
+    if cfg.mlp_type == "swiglu":
+        p.update({
+            "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+            "wi_up": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+            "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+        })
+    else:
+        p.update({
+            "wi": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+            "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+        })
+    if cfg.shared_expert:
+        p.update({
+            "shared_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "shared_up": ParamSpec((d, f), ("embed", "mlp")),
+            "shared_down": ParamSpec((f, d), ("mlp", "embed")),
+        })
+    return p
+
+
+def _expert_ffn(p: dict, xb: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """xb: (G, E, C, D) -> (G, E, C, D), batched over groups x experts."""
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xb, p["wi_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", xb, p["wi_up"])
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("gecd,edf->gecf", xb, p["wi"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xb, p["wi"]))
+    h = constrain(h, "batch", "experts", None, "expert_mlp")
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"])
+
+
+def _moe_mesh():
+    """Active mesh context if it can shard experts, else None (smoke path)."""
+    mesh, _ = shd._get_ctx()
+    if mesh is not None and "model" in mesh.shape:
+        return mesh
+    return None
+
+
+def _dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _dispatch(xg: jax.Array, tok_for_slot: jax.Array, slot_valid: jax.Array
+              ) -> jax.Array:
+    """buf[g, e, c] = xg[g, tok_for_slot[g, e, c]] (masked).
+
+    Under a mesh this runs in shard_map so the gather is shard-local
+    (xg is replicated over "model"; slots are owned by their expert shard):
+    ZERO collectives. The pure-jnp fallback is used in single-device tests.
+    """
+    g = xg.shape[0]
+    gid = jnp.arange(g, dtype=jnp.int32)[:, None, None]
+
+    def local(xg_l, tok_l, valid_l):
+        gl = xg_l.shape[0]
+        gid_l = jnp.arange(gl, dtype=jnp.int32)[:, None, None]
+        buf = xg_l[gid_l, tok_l]
+        return jnp.where(valid_l[..., None], buf, 0)
+
+    mesh = _moe_mesh()
+    if mesh is None:
+        return local(xg, tok_for_slot, slot_valid)
+    dp = _dp_axes(mesh)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, "model", None), P(dp, "model", None)),
+        out_specs=P(dp, "model", None, None),
+        check_vma=False,
+    )(xg, tok_for_slot, slot_valid)
+
+
+def _combine(yb: jax.Array, es_tok: jax.Array, ps_tok: jax.Array,
+             keep_tok: jax.Array, gates: jax.Array) -> jax.Array:
+    """out[g, t] = sum_k gate * yb[g, e_k, c_k] (masked).
+
+    Under a mesh: each "model" shard gathers from its local experts, applies
+    gates, sums over k, and ONE psum of the bf16 (G, Tg, D) partial merges
+    shards — exactly the row-parallel-TP pattern. The naive GSPMD lowering
+    of the global gather all-reduced a k-times-larger f32 tensor instead
+    (v2 of this code — 37 TB/step on dbrx; see EXPERIMENTS.md §Perf).
+    """
+    e = yb.shape[1]
+
+    def local_ref(yb_l, es_l, ps_l, keep_l, gates_l):
+        gl = yb_l.shape[0]
+        gid_l = jnp.arange(gl, dtype=jnp.int32)[:, None, None]
+        ysel = yb_l[gid_l, jnp.minimum(es_l, yb_l.shape[1] - 1), ps_l]
+        ysel = jnp.where(keep_l[..., None], ysel * gates_l[..., None], 0)
+        return jnp.sum(ysel, axis=2)
+
+    mesh = _moe_mesh()
+    if mesh is None:
+        return local_ref(yb, es_tok, ps_tok, keep_tok, gates)
+    dp = _dp_axes(mesh)
+    e_local = e // mesh.shape["model"]
+
+    def local(yb_l, es_l, ps_l, keep_l, gates_l):
+        lo = jax.lax.axis_index("model") * e_local
+        mine = (es_l >= lo) & (es_l < lo + e_local) & keep_l
+        part = local_ref(yb_l, jnp.clip(es_l - lo, 0, e_local - 1), ps_l,
+                         mine, gates_l)
+        return jax.lax.psum(part, "model")
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, "model", None, None), P(dp, None, None),
+                  P(dp, None, None), P(dp, None, None), P(dp, None, None)),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(yb, es_tok, ps_tok, keep_tok, gates)
+
+
+def _num_groups(cfg: ModelConfig, t: int) -> int:
+    """Dispatch groups (GShard-style). Groups align with the data-parallel
+    sharding so the per-group sort/scatter never crosses shards; fall back
+    to fewer groups for small token counts (smoke tests)."""
+    g = cfg.moe_groups
+    while g > 1 and t % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Grouped sort-based dispatch: tokens are split into G groups (sharded
+    over pod x data); each group routes, sorts, and fills a fixed per-group
+    capacity buffer *locally*. The v0 implementation used one global sort —
+    the dry-run roofline showed GSPMD lowering it to a 2.6 TB/step
+    collective-permute sorting network, and the (E, C_global, D) expert
+    einsum did not shard over the data axis at all (14x useful-FLOPs
+    deficit on dbrx). Groups make both shard-local. See EXPERIMENTS.md §Perf.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    t = b * s
+    g = _num_groups(cfg, t)
+    tg = t // g
+    xg = x.reshape(g, tg, d)
+    xg = constrain(xg, "batch", None, None)   # groups ride the data axes
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    if cfg.router_act == "sigmoid":                          # llama4-style
+        gates_all = jax.nn.sigmoid(logits)
+    else:
+        gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gates_all, k)              # (G, Tg, k)
+    if cfg.router_act != "sigmoid":
+        gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e, group-averaged
+    me = jnp.mean(gates_all, axis=1)                         # (G, E)
+    ce = jnp.zeros((g, e), jnp.float32).at[
+        jnp.arange(g)[:, None], idx_k.reshape(g, -1)].add(1.0) / (tg * k)
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # ---- per-group sort-based dispatch (all ops batched over G).
+    # Heavy data movement is formulated as GATHERS with data-dependent
+    # indices (local under GSPMD: xg/yb are replicated/owned where needed);
+    # scatters only ever touch small int32 slot-map buffers. A scatter of
+    # the (G, E, C, D) activation buffer itself lowers to replicate +
+    # 42 TB/step of all-reduce (v1 of this code; see EXPERIMENTS.md §Perf).
+    cap = max(1, int(cfg.capacity_factor * tg * k / e))
+    flat_e = idx_k.reshape(g, tg * k)                        # (G, Tg*k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None], (g, tg * k))
+    order = jnp.argsort(flat_e, axis=1)                      # per-group sort
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=1)
+    onehot = jax.nn.one_hot(se, e, dtype=jnp.int32)          # (G, Tg*k, E)
+    pos = jnp.cumsum(onehot, axis=1)
+    pos = jnp.take_along_axis(pos, se[..., None], axis=2)[..., 0] - 1
+    keep = pos < cap
+    es = jnp.where(keep, se, e)                              # E = trash row
+    ps = jnp.where(keep, pos, 0)
+    gid = jnp.arange(g, dtype=jnp.int32)[:, None]
+
+    # slot maps (int32/bool, (G, E+1, C) — a few MB, cheap to scatter)
+    tok_for_slot = jnp.zeros((g, e + 1, cap), jnp.int32).at[gid, es, ps].set(stok)
+    slot_valid = jnp.zeros((g, e + 1, cap), jnp.bool_).at[gid, es, ps].set(keep)
+    tok_for_slot = tok_for_slot[:, :e]
+    slot_valid = slot_valid[:, :e]
+
+    # slot coords per (token, k) in original order (invert the sort)
+    inv = jnp.argsort(order, axis=1)
+    es_tok = jnp.take_along_axis(es, inv, axis=1).reshape(g, tg, k)
+    ps_tok = jnp.take_along_axis(ps, inv, axis=1).reshape(g, tg, k)
+    keep_tok = jnp.take_along_axis(keep, inv, axis=1).reshape(g, tg, k)
+    gates = gate_k.astype(x.dtype)
+
+    buf = _dispatch(xg, tok_for_slot, slot_valid)            # (G, E, C, D)
+    buf = constrain(buf, "batch", "experts", None, None)
+    yb = _expert_ffn(p, buf, cfg)                            # (G, E, C, D)
+    yb = constrain(yb, "batch", "experts", None, None)
+    out = _combine(yb, es_tok, ps_tok, keep_tok, gates)      # (G, Tg, D)
+
+    if cfg.shared_expert:
+        h = jax.nn.silu(jnp.einsum("gtd,df->gtf", xg, p["shared_gate"]))
+        h = h * jnp.einsum("gtd,df->gtf", xg, p["shared_up"])
+        h = constrain(h, "batch", None, "mlp")
+        out = out + jnp.einsum("gtf,fd->gtd", h, p["shared_down"])
+    out = out.reshape(b, s, d)
+    return constrain(out, "batch", "seq", "embed"), aux

@@ -1,0 +1,216 @@
+"""RWKV-6 "Finch" block: linear attention with data-dependent decay.
+
+Attention-free: the per-head state is a fixed (hd x hd) matrix, so decode is
+O(1)/token and training uses the same chunked decay-matmul trick as SSD —
+intra-chunk L x L matrices on the MXU, inter-chunk state carried by lax.scan.
+
+Recurrence (per head, key channel i, value channel j):
+    o_t = r_t . S_{t-1} + (r_t . (u ⊙ k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+with w_t = exp(-exp(loglog-decay)) data-dependent per channel (the paper's
+"Finch" delta over RWKV-5), r/k/v/g produced from data-dependent token-shift
+(DDLerp with a small LoRA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, rmsnorm
+
+MIXES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    d, r = cfg.d_model, cfg.rwkv_lora
+    nh, hd = cfg.rwkv_nheads, cfg.rwkv_head_dim
+    f = cfg.d_ff
+    return {
+        # time-mix (attention analogue)
+        "mu_base": ParamSpec((d,), ("embed",), "zeros"),
+        "mu": ParamSpec((5, d), (None, "embed"), "zeros"),
+        "lora_a": ParamSpec((d, 5 * r), ("embed", "lora"), scale=0.1),
+        "lora_b": ParamSpec((5, r, d), (None, "lora", "embed"), scale=0.1),
+        "decay_base": ParamSpec((d,), ("embed",), "zeros"),
+        "decay_a": ParamSpec((d, r), ("embed", "lora"), scale=0.1),
+        "decay_b": ParamSpec((r, d), ("lora", "embed"), scale=0.1),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+        "u": ParamSpec((nh, hd), ("ssm_heads", None), scale=0.5),
+        "ln_x": ParamSpec((d,), ("embed",), "ones"),
+        # channel-mix (FFN analogue)
+        "cm_mu_k": ParamSpec((d,), ("embed",), "zeros"),
+        "cm_mu_r": ParamSpec((d,), ("embed",), "zeros"),
+        "cm_wk": ParamSpec((d, f), ("embed", "mlp")),
+        "cm_wv": ParamSpec((f, d), ("mlp", "embed")),
+        "cm_wr": ParamSpec((d, d), ("embed", None)),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zero/carry-padded). x: (B, S, D)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict, x: jax.Array, sx: jax.Array):
+    """Data-dependent token-shift mixes for w/k/v/r/g. Returns dict of (B,S,D)."""
+    base = x + sx * p["mu_base"]
+    r = p["lora_a"].shape[1] // 5
+    lora = jnp.tanh(base @ p["lora_a"])                   # (B,S,5r)
+    lora = lora.reshape(*lora.shape[:-1], 5, r)           # (B,S,5,r)
+    adj = jnp.einsum("bsmr,mrd->bsmd", lora, p["lora_b"])  # (B,S,5,D)
+    out = {}
+    for i, name in enumerate(MIXES):
+        out[name] = x + sx * (p["mu"][i] + adj[:, :, i])
+    return out
+
+
+def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+                 u: jax.Array, chunk: int, s0: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Chunked WKV6.
+
+    r/k/v: (B, S, nh, hd); log_w: (B, S, nh, hd) (<= 0); u: (nh, hd).
+    Returns (o (B, S, nh, hd), final state (B, nh, hd, hd) [key, value]).
+    """
+    b, s, nh, hd = r.shape
+    pad = (-s) % chunk
+    if pad:  # identity pad steps: decay 1, zero k/v -> state-neutral
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    nc, l = s // chunk, chunk
+
+    rs_ = lambda t: t.reshape(b, nc, l, nh, hd)
+    rc, kc, vc = rs_(r), rs_(k), rs_(v)
+    a = jnp.cumsum(rs_(log_w).astype(jnp.float32), axis=2)    # (B,nc,L,nh,hd) inclusive
+    bexp = a - rs_(log_w).astype(jnp.float32)                 # exclusive cumsum (a_{t-1})
+
+    # intra-chunk: M[t,s] = (r_t ⊙ exp(b_t - a_s)) · k_s  for s < t; diag via u
+    ri = rc.astype(jnp.float32) * jnp.exp(bexp)               # (B,nc,L,nh,hd)
+    ki = kc.astype(jnp.float32) * jnp.exp(-a)
+    m = jnp.einsum("bclhi,bcshi->bchls", ri, ki)              # (B,nc,nh,L,L)
+    mask = jnp.tril(jnp.ones((l, l), jnp.bool_), k=-1)
+    m = jnp.where(mask, m, 0.0)
+    diag = jnp.einsum("bclhi,hi,bclhi->bclh", rc.astype(jnp.float32),
+                      u.astype(jnp.float32), kc.astype(jnp.float32))
+    y_intra = (jnp.einsum("bchls,bcshj->bclhj", m.astype(r.dtype), vc)
+               + diag[..., None].astype(r.dtype) * vc)
+
+    # chunk states: S_c = sum_s exp(a_L - a_s)[i] k_s[i] v_s[j]
+    seg = jnp.exp(a[:, :, -1:, :, :] - a)                     # (B,nc,L,nh,hd)
+    states = jnp.einsum("bclhi,bclhj->bchij",
+                        (kc.astype(jnp.float32) * seg), vc.astype(jnp.float32))
+    total = jnp.exp(a[:, :, -1])                              # (B,nc,nh,hd)
+
+    h_init = (jnp.zeros((b, nh, hd, hd), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+
+    def body(h, inp):
+        st, tot = inp
+        h_prev = h
+        h = h * tot[..., None] + st
+        return h, h_prev
+
+    hs, h_prevs = jax.lax.scan(body, h_init,
+                               (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # (B,nc,nh,hd,hd)
+    y_inter = jnp.einsum("bclhi,bchij->bclhj", ri.astype(r.dtype),
+                         h_prevs.astype(r.dtype))
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y[:, :s_orig], hs
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+                  prev_tok: jax.Array | None = None,
+                  s0: jax.Array | None = None):
+    """(B, S, D) -> (out, final_state). Training/prefill path."""
+    b, s, d = x.shape
+    nh, hd = cfg.rwkv_nheads, cfg.rwkv_head_dim
+    sx = _shift(x, prev_tok) - x
+    mixes = _ddlerp(p, x, sx)
+    r = (mixes["r"] @ p["wr"]).reshape(b, s, nh, hd)
+    k = (mixes["k"] @ p["wk"]).reshape(b, s, nh, hd)
+    v = (mixes["v"] @ p["wv"]).reshape(b, s, nh, hd)
+    g = mixes["g"] @ p["wg"]
+    r = constrain(r, "batch", None, "ssm_heads", None)
+    k = constrain(k, "batch", None, "ssm_heads", None)
+    v = constrain(v, "batch", None, "ssm_heads", None)
+    # data-dependent decay (Finch): w = exp(-exp(dd)) in (0, 1)
+    dd = p["decay_base"] + jnp.tanh(mixes["w"] @ p["decay_a"]) @ p["decay_b"]
+    log_w = -jnp.exp(dd.astype(jnp.float32)).reshape(b, s, nh, hd)
+
+    y, hs = wkv6_chunked(r, k, v, log_w, p["u"], cfg.rwkv_chunk, s0)
+    y = y.reshape(b, s, d)
+    y = rmsnorm(y, p["ln_x"], cfg.norm_eps) * jax.nn.silu(g)
+    out = y @ p["wo"]
+    return constrain(out, "batch", "seq", "embed"), hs
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array,
+                     prev_tok: jax.Array | None = None) -> jax.Array:
+    sx = _shift(x, prev_tok) - x
+    xk = x + sx * p["cm_mu_k"]
+    xr = x + sx * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    k = constrain(k, "batch", None, "mlp")
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"])
+
+
+# ---------------------------------------------------------------------------
+# decode path: O(1) per token
+# ---------------------------------------------------------------------------
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    nh, hd = cfg.rwkv_nheads, cfg.rwkv_head_dim
+    return {
+        "s": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "tm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv_decode_step(p: dict, x: jax.Array, state: dict, cfg: ModelConfig
+                     ) -> tuple[jax.Array, dict]:
+    """Single-token time-mix + channel-mix. x: (B, D)."""
+    b, d = x.shape
+    nh, hd = cfg.rwkv_nheads, cfg.rwkv_head_dim
+    # --- time mix
+    xs = x[:, None, :]
+    sx = (state["tm_prev"] - x)[:, None, :]
+    mixes = _ddlerp(p, xs, sx)
+    r = (mixes["r"][:, 0] @ p["wr"]).reshape(b, nh, hd)
+    k = (mixes["k"][:, 0] @ p["wk"]).reshape(b, nh, hd)
+    v = (mixes["v"][:, 0] @ p["wv"]).reshape(b, nh, hd)
+    g = mixes["g"][:, 0] @ p["wg"]
+    dd = p["decay_base"] + jnp.tanh(mixes["w"][:, 0] @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(dd.astype(jnp.float32))).reshape(b, nh, hd)
+
+    s = state["s"]                                     # (B,nh,hd,hd)
+    kv = jnp.einsum("bhi,bhj->bhij", k.astype(jnp.float32), v.astype(jnp.float32))
+    o = jnp.einsum("bhi,bhij->bhj", r.astype(jnp.float32),
+                   s + p["u"].astype(jnp.float32)[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    y = o.reshape(b, d).astype(x.dtype)
+    y = rmsnorm(y, p["ln_x"], cfg.norm_eps) * jax.nn.silu(g)
+    tm_out = y @ p["wo"]
+
+    # --- channel mix (note: operates on the post-time-mix residual stream in
+    # the block wrapper; here we only expose the primitive)
+    return tm_out, {"s": s_new, "tm_prev": x, "cm_prev": state["cm_prev"]}
+
+
+def rwkv_channel_mix_step(p: dict, x: jax.Array, prev: jax.Array) -> jax.Array:
+    sx = prev - x
+    xk = x + sx * p["cm_mu_k"]
+    xr = x + sx * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"])

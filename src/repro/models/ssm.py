@@ -1,0 +1,194 @@
+"""Mamba2 (SSD) block: chunked state-space scan, train + decode paths.
+
+The SSD ("state-space dual") chunked algorithm: within a chunk of length L
+the recurrence h_t = a_t h_{t-1} + B_t (dt_t x_t) is unrolled into an L x L
+decay-weighted attention-like matmul (MXU-friendly); across chunks a short
+lax.scan carries the (nh, hd, ds) state. Complexity O(S·L·hd + S·hd·ds),
+sub-quadratic in S — this is why the hybrid/ssm archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, rmsnorm
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, ds, nh, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv
+    conv_dim = di + 2 * g * ds
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * g * ds + nh), ("embed", "mlp")),
+        "conv_w": ParamSpec((w, conv_dim), ("conv", "mlp"), scale=0.5),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), "zeros"),
+        "a_log": ParamSpec((nh,), ("ssm_heads",), "ones"),
+        "d_skip": ParamSpec((nh,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), "zeros"),
+        "norm": ParamSpec((di,), ("mlp",), "ones"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, g, ds, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    z, xc, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * ds, 2 * di + 2 * g * ds], axis=-1)
+    return z, xc, b, c, dt
+
+
+def _causal_conv(xin: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: xin (B, S, C), w (W, C) -> (B, S, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xin, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xin)
+    for i in range(width):  # static unroll: width is 4
+        out = out + pad[:, i:i + xin.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(xh: jax.Array, log_a: jax.Array, bmat: jax.Array,
+                cmat: jax.Array, chunk: int,
+                h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh:    (B, S, nh, hd)  dt-weighted inputs
+    log_a: (B, S, nh)      per-step log decay (<= 0)
+    bmat:  (B, S, g, ds)   input maps (groups broadcast over heads)
+    cmat:  (B, S, g, ds)   output maps
+    Returns (y (B, S, nh, hd), final state (B, nh, hd, ds)).
+    """
+    b, s, nh, hd = xh.shape
+    g, ds = bmat.shape[2], bmat.shape[3]
+    pad = (-s) % chunk
+    if pad:  # pad with identity steps (decay 1, zero input): state-neutral
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    nc, l = s // chunk, chunk
+    hpg = nh // g  # heads per group
+
+    def rs(t, extra):  # (B, S, ...) -> (B, nc, L, ...)
+        return t.reshape(b, nc, l, *extra)
+
+    xh_c = rs(xh, (nh, hd))
+    la_c = jnp.cumsum(rs(log_a, (nh,)).astype(jnp.float32), axis=2)  # (B,nc,L,nh)
+    bh = jnp.repeat(rs(bmat, (g, ds)), hpg, axis=3)   # (B,nc,L,nh,ds)
+    ch = jnp.repeat(rs(cmat, (g, ds)), hpg, axis=3)
+
+    # ---- intra-chunk: attention-like L x L matmul per (chunk, head)
+    gmat = jnp.einsum("bclhn,bcshn->bchls", ch, bh)   # (B,nc,nh,L,L)
+    diff = la_c[:, :, :, None, :] - la_c[:, :, None, :, :]   # (B,nc,L,S?,nh)
+    decay = jnp.exp(jnp.transpose(diff, (0, 1, 4, 2, 3)))    # (B,nc,nh,L,L)
+    mask = jnp.tril(jnp.ones((l, l), jnp.bool_))
+    m = jnp.where(mask, gmat * decay, 0.0).astype(xh.dtype)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", m, xh_c)
+
+    # ---- chunk states: S_c = sum_s exp(la_last - la_s) B_s x_s
+    seg = jnp.exp(la_c[:, :, -1:, :] - la_c)          # (B,nc,L,nh)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", bh, seg.astype(xh.dtype), xh_c)
+
+    # ---- inter-chunk scan over the carried state
+    total = jnp.exp(la_c[:, :, -1, :])                # (B,nc,nh)
+    h_init = (jnp.zeros((b, nh, hd, ds), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def body(h, inp):
+        st, tot = inp  # (B,nh,hd,ds), (B,nh)
+        h_prev = h
+        h = h * tot[:, :, None, None] + st.astype(jnp.float32)
+        return h, h_prev
+
+    hs, h_prevs = jax.lax.scan(
+        body, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # (B,nc,nh,hd,ds)
+
+    # ---- inter-chunk contribution: C_t . (decay_t * H_prev)
+    y_inter = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                         ch, jnp.exp(la_c).astype(xh.dtype),
+                         h_prevs.astype(xh.dtype))
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y[:, :s_orig], hs
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                return_state: bool = False):
+    """Training/prefill forward. x: (B, S, D) -> (B, S, D) [, final state]."""
+    b, s, d = x.shape
+    nh, hd = cfg.ssm_nheads, cfg.ssm_head_dim
+    g, ds = cfg.ssm_groups, cfg.ssm_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xc, bm, cm, dt = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xc, bm, cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + g * ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))      # (nh,) negative
+    log_a = (a[None, None, :] * dt)                   # (B,S,nh) <= 0
+    xh = xc.reshape(b, s, nh, hd) * dt[..., None].astype(x.dtype)
+    bmat = bm.reshape(b, s, g, ds)
+    cmat = cm.reshape(b, s, g, ds)
+
+    y, h_final = ssd_chunked(xh, log_a, bmat, cmat, cfg.ssm_chunk)
+    y = y + xc.reshape(b, s, nh, hd) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = constrain(y, "batch", None, "mlp")
+    out = constrain(y @ p["out_proj"], "batch", "seq", "embed")
+    if return_state:
+        w = p["conv_w"].shape[0]
+        state = {"h": h_final, "conv": conv_in[:, s - (w - 1):, :]}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode path: O(1) per token
+# ---------------------------------------------------------------------------
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    nh, hd, ds = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * ds
+    return {
+        "h": jnp.zeros((batch, nh, hd, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode_step(p: dict, x: jax.Array, state: dict, cfg: ModelConfig
+                      ) -> tuple[jax.Array, dict]:
+    """x: (B, D) one token -> (out (B, D), new state)."""
+    b, d = x.shape
+    nh, hd = cfg.ssm_nheads, cfg.ssm_head_dim
+    g, ds = cfg.ssm_groups, cfg.ssm_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xc, bm, cm, dt = _split_in_proj(cfg, zxbcdt[:, None, :])
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)  # (B,1,conv_dim)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B, W, conv)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xc, bm, cm = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + g * ds], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(a[None] * dt)                      # (B,nh)
+    xh = xc.reshape(b, nh, hd) * dt[..., None].astype(x.dtype)
+    bmat = jnp.repeat(bm.reshape(b, g, ds), nh // g, axis=1)   # (B,nh,ds)
+    cmat = jnp.repeat(cm.reshape(b, g, ds), nh // g, axis=1)
+
+    h = state["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh, bmat).astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", h.astype(x.dtype), cmat)
+    y = y + xc.reshape(b, nh, hd) * p["d_skip"][None, :, None]
+    y = y.reshape(b, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z[:, 0]), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:]}

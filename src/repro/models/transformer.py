@@ -1,0 +1,519 @@
+"""Stack assembly: scan-over-layers blocks for every architecture family.
+
+Scan-over-layers with stacked params keeps the HLO O(1) in depth, so 64-layer
+32B-param configs lower and compile quickly even on the CPU backend with 512
+placeholder devices. Remat is applied per layer ("layer") or per group of k
+layers ("group:k") — group remat divides saved-residual memory by k at the
+cost of one extra in-group forward.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models import kvcache as kvc
+from repro.models import layers as ll
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+
+
+def _remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn)
+
+
+def _group_size(cfg: ModelConfig) -> int:
+    if cfg.remat.startswith("group:"):
+        gs = int(cfg.remat.split(":")[1])
+        if gs <= cfg.n_layers and cfg.n_layers % gs == 0:
+            return gs
+    return 1  # fall back to per-layer remat (e.g. reduced smoke configs)
+
+
+# ---------------------------------------------------------------------------
+# attention-family block (dense / moe / vlm / audio)
+# ---------------------------------------------------------------------------
+
+def attn_block_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "ln1": ll.rmsnorm_spec(cfg.d_model),
+        "ln2": ll.rmsnorm_spec(cfg.d_model),
+        "attn": ll.attn_specs(cfg),
+    }
+    if cfg.n_experts:
+        specs["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        specs["ffn"] = ll.ffn_specs(cfg)
+    return specs
+
+
+def attn_block(p: dict, h: jax.Array, cfg: ModelConfig, positions: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """Pre-norm transformer block. Returns (h, aux_loss)."""
+    h = h + ll.attention(p["attn"], ll.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                         cfg, positions)
+    hn = ll.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        out, aux = moe_mod.moe_ffn(p["moe"], hn, cfg)
+    else:
+        out, aux = ll.ffn(p["ffn"], hn, cfg), jnp.float32(0.0)
+    h = constrain(h + out, "batch", "seq", "embed")
+    return h, aux
+
+
+def attn_stack_specs(cfg: ModelConfig) -> dict:
+    return {"blocks": ll.stacked(attn_block_specs(cfg), cfg.n_layers)}
+
+
+def attn_stack(p: dict, h: jax.Array, cfg: ModelConfig, positions: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    gs = _group_size(cfg)
+
+    def one_layer(carry, lp):
+        h, aux = carry
+        h, a = attn_block(lp, h, cfg, positions)
+        return (h, aux + a), None
+
+    if gs <= 1:
+        body = _remat(cfg, lambda c, lp: one_layer(c, lp))
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), p["blocks"])
+        return h, aux
+
+    n_groups = cfg.n_layers // gs
+    grouped = jax.tree.map(lambda x: x.reshape(n_groups, gs, *x.shape[1:]),
+                           p["blocks"])
+
+    def group_body(carry, gp):
+        return jax.lax.scan(lambda c, lp: one_layer(c, lp), carry, gp)[0], None
+
+    body = _remat(cfg, group_body)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), grouped)
+    return h, aux
+
+
+def attn_stack_decode(p: dict, h: jax.Array, cfg: ModelConfig,
+                      cache: Any, position: jax.Array,
+                      ) -> tuple[jax.Array, Any]:
+    """One-token decode through the stack; cache is Exact or PQ (paper tech)."""
+    b = h.shape[0]
+
+    if isinstance(cache, kvc.PQKVCache):
+        def body(hc, xs):
+            h = hc
+            lp, kcod, vcod, kcb, vcb = xs
+            x = ll.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k_new, v_new = ll.qkv_project(lp["attn"], x[:, None], cfg,
+                                             position[:, None])
+            # write first: the current token attends to itself
+            kcod, vcod = kvc.update_pq(kcod, vcod, k_new[:, 0], v_new[:, 0],
+                                       kcb, vcb, position[0])
+            out = kvc.pq_decode_attention(q[:, 0], kcod, vcod, kcb, vcb,
+                                          position, quantize_q8=True)
+            h = h + jnp.einsum("bhk,hkd->bd", out, lp["attn"]["wo"])
+            hn = ll.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                f, _ = moe_mod.moe_ffn(lp["moe"], hn[:, None], cfg)
+                h = h + f[:, 0]
+            else:
+                h = h + ll.ffn(lp["ffn"], hn[:, None], cfg)[:, 0]
+            return h, (kcod, vcod)
+
+        h, (kcods, vcods) = jax.lax.scan(
+            body, h, (p["blocks"], cache.k_codes, cache.v_codes,
+                      cache.k_cb, cache.v_cb))
+        return h, kvc.PQKVCache(kcods, vcods, cache.k_cb, cache.v_cb)
+
+    def body(hc, xs):
+        h = hc
+        lp, kcache, vcache = xs
+        x = ll.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = ll.qkv_project(lp["attn"], x[:, None], cfg,
+                                         position[:, None])
+        # write first: the current token attends to itself
+        kcache, vcache = kvc.update_exact(kcache, vcache, k_new[:, 0],
+                                          v_new[:, 0], position[0])
+        out = ll.decode_attention_scores(q[:, 0], kcache, vcache, cfg, position)
+        h = h + jnp.einsum("bhk,hkd->bd", out, lp["attn"]["wo"])
+        hn = ll.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            f, _ = moe_mod.moe_ffn(lp["moe"], hn[:, None], cfg)
+            h = h + f[:, 0]
+        else:
+            h = h + ll.ffn(lp["ffn"], hn[:, None], cfg)[:, 0]
+        return h, (kcache, vcache)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (p["blocks"], cache.k, cache.v))
+    return h, kvc.ExactKVCache(ks, vs)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 family (+ zamba2 hybrid: shared attention block every k layers)
+# ---------------------------------------------------------------------------
+
+def mamba_stack_specs(cfg: ModelConfig) -> dict:
+    specs = {"blocks": ll.stacked({
+        "ln": ll.rmsnorm_spec(cfg.d_model),
+        "mamba": ssm_mod.mamba_specs(cfg),
+    }, cfg.n_layers)}
+    if cfg.shared_attn_every:
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        d = cfg.d_model
+        specs["shared"] = {
+            "ln1": ll.rmsnorm_spec(d),
+            "ln2": ll.rmsnorm_spec(d),
+            "attn": ll.attn_specs(cfg),
+            "ffn": ll.ffn_specs(cfg),
+        }
+        # zamba2-style per-invocation input projection of concat(h, h0)
+        specs["group_in"] = ll.stacked(
+            {"w": ParamSpec((2 * d, d), ("embed", "embed"))}, n_groups)
+    return specs
+
+
+def _mamba_layer(lp: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return h + ssm_mod.mamba_block(lp["mamba"],
+                                   ll.rmsnorm(h, lp["ln"], cfg.norm_eps), cfg)
+
+
+def mamba_stack(p: dict, h: jax.Array, cfg: ModelConfig, positions: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    h0 = h
+    if not cfg.shared_attn_every:
+        body = _remat(cfg, lambda c, lp: (_mamba_layer(lp, c, cfg), None))
+        h, _ = jax.lax.scan(body, h, p["blocks"])
+        return h, jnp.float32(0.0)
+
+    k = cfg.shared_attn_every
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(lambda x: x.reshape(n_groups, k, *x.shape[1:]),
+                           p["blocks"])
+    shared = p["shared"]
+
+    def group_body(carry, xs):
+        h = carry
+        gp, gin = xs
+        h, _ = jax.lax.scan(lambda c, lp: (_mamba_layer(lp, c, cfg), None), h, gp)
+        # shared attention block on concat(h, h0) (weight-tied across groups)
+        x = jnp.concatenate([h, h0], axis=-1) @ gin["w"]
+        x = x + ll.attention(shared["attn"],
+                             ll.rmsnorm(x, shared["ln1"], cfg.norm_eps),
+                             cfg, positions)
+        x = x + ll.ffn(shared["ffn"], ll.rmsnorm(x, shared["ln2"], cfg.norm_eps), cfg)
+        return constrain(h + x, "batch", "seq", "embed"), None
+
+    body = _remat(cfg, group_body)
+    h, _ = jax.lax.scan(body, h, (grouped, p["group_in"]))
+    return h, jnp.float32(0.0)
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype,
+                     key=None) -> dict:
+    nh, hd, ds = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * ds
+    cache = {
+        "h": jnp.zeros((cfg.n_layers, batch, nh, hd, ds), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+    if cfg.shared_attn_every:
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        kv, ahd = cfg.n_kv_heads, cfg.resolved_head_dim
+        if cfg.kv_pq:
+            m = cfg.resolved_kv_pq_m
+            cbshape = (n_groups, kv, m, 16, ahd // m)
+            kk = jax.random.split(key, 2) if key is not None else None
+            cache["attn_k_codes"] = jnp.zeros((n_groups, batch, max_seq, kv, m // 2), jnp.uint8)
+            cache["attn_v_codes"] = jnp.zeros((n_groups, batch, max_seq, kv, m // 2), jnp.uint8)
+            cache["attn_k_cb"] = (jax.random.normal(kk[0], cbshape, jnp.bfloat16)
+                                  if key is not None else jnp.zeros(cbshape, jnp.bfloat16))
+            cache["attn_v_cb"] = (jax.random.normal(kk[1], cbshape, jnp.bfloat16)
+                                  if key is not None else jnp.zeros(cbshape, jnp.bfloat16))
+        else:
+            cache["attn_k"] = jnp.zeros((n_groups, batch, max_seq, kv, ahd), dtype)
+            cache["attn_v"] = jnp.zeros((n_groups, batch, max_seq, kv, ahd), dtype)
+    return cache
+
+
+def mamba_cache_axes(cfg: ModelConfig) -> dict:
+    axes = {
+        "h": ("stack", "batch", "ssm_heads", None, None),
+        "conv": ("stack", "batch", None, "mlp"),
+    }
+    if cfg.shared_attn_every:
+        if cfg.kv_pq:
+            axes.update({"attn_k_codes": kvc.PQ_CODE_AXES,
+                         "attn_v_codes": kvc.PQ_CODE_AXES,
+                         "attn_k_cb": kvc.PQ_CB_AXES,
+                         "attn_v_cb": kvc.PQ_CB_AXES})
+        else:
+            axes.update({"attn_k": kvc.EXACT_KV_AXES, "attn_v": kvc.EXACT_KV_AXES})
+    return axes
+
+
+def mamba_stack_decode(p: dict, h: jax.Array, cfg: ModelConfig, cache: dict,
+                       position: jax.Array, h0: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token decode. h/h0: (B, D)."""
+    def layer_body(carry, xs):
+        h = carry
+        lp, hstate, cstate = xs
+        x = ll.rmsnorm(h, lp["ln"], cfg.norm_eps)
+        out, new_state = ssm_mod.mamba_decode_step(
+            lp["mamba"], x, {"h": hstate, "conv": cstate}, cfg)
+        return h + out, (new_state["h"], new_state["conv"])
+
+    if not cfg.shared_attn_every:
+        h, (hs, cs) = jax.lax.scan(layer_body, h,
+                                   (p["blocks"], cache["h"], cache["conv"]))
+        return h, {**cache, "h": hs, "conv": cs}
+
+    k = cfg.shared_attn_every
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(lambda x: x.reshape(n_groups, k, *x.shape[1:]),
+                           p["blocks"])
+    gh = cache["h"].reshape(n_groups, k, *cache["h"].shape[1:])
+    gc = cache["conv"].reshape(n_groups, k, *cache["conv"].shape[1:])
+    shared = p["shared"]
+
+    def group_body(carry, xs):
+        h = carry
+        if cfg.kv_pq:
+            gp, gin, ghs, gcs, kcod, vcod, kcb, vcb = xs
+        else:
+            gp, gin, ghs, gcs, kcache, vcache = xs
+        h, (hs, cs) = jax.lax.scan(layer_body, h, (gp, ghs, gcs))
+        x = jnp.concatenate([h, h0], axis=-1) @ gin["w"]
+        xn = ll.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+        q, k_new, v_new = ll.qkv_project(shared["attn"], xn[:, None], cfg,
+                                         position[:, None])
+        if cfg.kv_pq:
+            kcod, vcod = kvc.update_pq(kcod, vcod, k_new[:, 0], v_new[:, 0],
+                                       kcb, vcb, position[0])
+            out = kvc.pq_decode_attention(q[:, 0], kcod, vcod, kcb, vcb, position)
+            x = x + jnp.einsum("bhk,hkd->bd", out, shared["attn"]["wo"])
+            new_kv = (kcod, vcod, kcb, vcb)
+        else:
+            kcache, vcache = kvc.update_exact(kcache, vcache, k_new[:, 0],
+                                              v_new[:, 0], position[0])
+            out = ll.decode_attention_scores(q[:, 0], kcache, vcache, cfg,
+                                             position)
+            x = x + jnp.einsum("bhk,hkd->bd", out, shared["attn"]["wo"])
+            new_kv = (kcache, vcache)
+        x = x + ll.ffn(shared["ffn"],
+                       ll.rmsnorm(x, shared["ln2"], cfg.norm_eps)[:, None],
+                       cfg)[:, 0]
+        return h + x, ((hs, cs) + new_kv)
+
+    if cfg.kv_pq:
+        xs = (grouped, p["group_in"], gh, gc, cache["attn_k_codes"],
+              cache["attn_v_codes"], cache["attn_k_cb"], cache["attn_v_cb"])
+    else:
+        xs = (grouped, p["group_in"], gh, gc, cache["attn_k"], cache["attn_v"])
+    h, ys = jax.lax.scan(group_body, h, xs)
+    new_cache = dict(cache)
+    new_cache["h"] = ys[0].reshape(cache["h"].shape)
+    new_cache["conv"] = ys[1].reshape(cache["conv"].shape)
+    if cfg.kv_pq:
+        new_cache["attn_k_codes"], new_cache["attn_v_codes"] = ys[2], ys[3]
+    else:
+        new_cache["attn_k"], new_cache["attn_v"] = ys[2], ys[3]
+    return h, new_cache
+
+
+def mamba_stack_prefill(p: dict, h: jax.Array, cfg: ModelConfig,
+                        positions: jax.Array, max_seq: int
+                        ) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also emits the decode cache (states + KV)."""
+    b, s, _ = h.shape
+    h0 = h
+
+    def layer_body(carry, lp):
+        h = carry
+        out, st = ssm_mod.mamba_block(
+            lp["mamba"], ll.rmsnorm(h, lp["ln"], cfg.norm_eps), cfg,
+            return_state=True)
+        return h + out, (st["h"], st["conv"])
+
+    if not cfg.shared_attn_every:
+        h, (hs, convs) = jax.lax.scan(layer_body, h, p["blocks"])
+        return h, {"h": hs, "conv": convs}
+
+    k = cfg.shared_attn_every
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(lambda x: x.reshape(n_groups, k, *x.shape[1:]),
+                           p["blocks"])
+    shared = p["shared"]
+
+    def group_body(carry, xs):
+        h = carry
+        gp, gin = xs
+        h, (hs, convs) = jax.lax.scan(layer_body, h, gp)
+        x = jnp.concatenate([h, h0], axis=-1) @ gin["w"]
+        xn = ll.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+        q, kk, vv = ll.qkv_project(shared["attn"], xn, cfg, positions)
+        out = ll.chunked_causal_attention(q, kk, vv, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, shared["attn"]["wo"])
+        x = x + ll.ffn(shared["ffn"], ll.rmsnorm(x, shared["ln2"], cfg.norm_eps), cfg)
+        return constrain(h + x, "batch", "seq", "embed"), (hs, convs, kk, vv)
+
+    h, (hs, convs, ks, vs) = jax.lax.scan(group_body, h, (grouped, p["group_in"]))
+    cache = {
+        "h": hs.reshape(cfg.n_layers, *hs.shape[2:]),
+        "conv": convs.reshape(cfg.n_layers, *convs.shape[2:]),
+    }
+    pad = max_seq - s
+    if cfg.kv_pq:
+        kcb, vcb = None, None
+        raise NotImplementedError(
+            "hybrid PQ prefill: encode via examples/serve_lm.py calibration")
+    cache["attn_k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache["attn_v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return h, cache
+
+
+def mamba_stack_prefill_pq(p: dict, h: jax.Array, cfg: ModelConfig,
+                           positions: jax.Array, max_seq: int,
+                           k_cb: jax.Array, v_cb: jax.Array
+                           ) -> tuple[jax.Array, dict]:
+    """Hybrid prefill with 4-bit-PQ encoding of the shared-attn KV (paper
+    tech): the (G, B, S, KV, hd) cache becomes (G, B, S, KV, M//2) u8 codes."""
+    b, s, _ = h.shape
+    h0 = h
+    k = cfg.shared_attn_every
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(lambda x: x.reshape(n_groups, k, *x.shape[1:]),
+                           p["blocks"])
+    shared = p["shared"]
+
+    def layer_body(carry, lp):
+        h = carry
+        out, st = ssm_mod.mamba_block(
+            lp["mamba"], ll.rmsnorm(h, lp["ln"], cfg.norm_eps), cfg,
+            return_state=True)
+        return h + out, (st["h"], st["conv"])
+
+    def group_body(carry, xs):
+        h = carry
+        gp, gin, kcb_g, vcb_g = xs
+        h, (hs, convs) = jax.lax.scan(layer_body, h, gp)
+        x = jnp.concatenate([h, h0], axis=-1) @ gin["w"]
+        xn = ll.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+        q, kk, vv = ll.qkv_project(shared["attn"], xn, cfg, positions)
+        out = ll.chunked_causal_attention(q, kk, vv, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, shared["attn"]["wo"])
+        x = x + ll.ffn(shared["ffn"], ll.rmsnorm(x, shared["ln2"], cfg.norm_eps), cfg)
+        kcodes = jax.vmap(lambda t: kvc.encode_kv(t, kcb_g), 1, 1)(kk)
+        vcodes = jax.vmap(lambda t: kvc.encode_kv(t, vcb_g), 1, 1)(vv)
+        return constrain(h + x, "batch", "seq", "embed"), (hs, convs, kcodes, vcodes)
+
+    h, (hs, convs, kcs, vcs) = jax.lax.scan(
+        group_body, h, (grouped, p["group_in"], k_cb, v_cb))
+    pad = max_seq - s
+    cache = {
+        "h": hs.reshape(cfg.n_layers, *hs.shape[2:]),
+        "conv": convs.reshape(cfg.n_layers, *convs.shape[2:]),
+        "attn_k_codes": jnp.pad(kcs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "attn_v_codes": jnp.pad(vcs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "attn_k_cb": k_cb,
+        "attn_v_cb": v_cb,
+    }
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 family
+# ---------------------------------------------------------------------------
+
+def rwkv_stack_specs(cfg: ModelConfig) -> dict:
+    return {"blocks": ll.stacked({
+        "ln1": ll.rmsnorm_spec(cfg.d_model),
+        "ln2": ll.rmsnorm_spec(cfg.d_model),
+        "rwkv": rwkv_mod.rwkv_specs(cfg),
+    }, cfg.n_layers)}
+
+
+def rwkv_stack(p: dict, h: jax.Array, cfg: ModelConfig, positions: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    del positions
+
+    def body(carry, lp):
+        h = carry
+        tm, _ = rwkv_mod.rwkv_time_mix(lp["rwkv"],
+                                       ll.rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg)
+        h = h + tm
+        h = h + rwkv_mod.rwkv_channel_mix(
+            lp["rwkv"], ll.rmsnorm(h, lp["ln2"], cfg.norm_eps))
+        return constrain(h, "batch", "seq", "embed"), None
+
+    gs = _group_size(cfg)
+    if gs <= 1:
+        body_r = _remat(cfg, body)
+        h, _ = jax.lax.scan(body_r, h, p["blocks"])
+        return h, jnp.float32(0.0)
+
+    n_groups = cfg.n_layers // gs
+    grouped = jax.tree.map(lambda x: x.reshape(n_groups, gs, *x.shape[1:]),
+                           p["blocks"])
+
+    def group_body(carry, gp):
+        return jax.lax.scan(body, carry, gp)[0], None
+
+    h, _ = jax.lax.scan(_remat(cfg, group_body), h, grouped)
+    return h, jnp.float32(0.0)
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    nh, hd = cfg.rwkv_nheads, cfg.rwkv_head_dim
+    return {
+        "s": jnp.zeros((cfg.n_layers, batch, nh, hd, hd), jnp.float32),
+        "tm_prev": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv_cache_axes() -> dict:
+    return {"s": ("stack", "batch", "ssm_heads", None, None),
+            "tm_prev": ("stack", "batch", "embed"),
+            "cm_prev": ("stack", "batch", "embed")}
+
+
+def rwkv_stack_prefill(p: dict, h: jax.Array, cfg: ModelConfig
+                       ) -> tuple[jax.Array, dict]:
+    """Full-sequence forward emitting the O(1) decode state per layer."""
+    def body(carry, lp):
+        h = carry
+        x = ll.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        tm, s_final = rwkv_mod.rwkv_time_mix(lp["rwkv"], x, cfg)
+        h = h + tm
+        xn = ll.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + rwkv_mod.rwkv_channel_mix(lp["rwkv"], xn)
+        return constrain(h, "batch", "seq", "embed"), (s_final, x[:, -1], xn[:, -1])
+
+    h, (ss, tms, cms) = jax.lax.scan(body, h, p["blocks"])
+    return h, {"s": ss, "tm_prev": tms, "cm_prev": cms}
+
+
+def rwkv_stack_decode(p: dict, h: jax.Array, cfg: ModelConfig, cache: dict,
+                      position: jax.Array) -> tuple[jax.Array, dict]:
+    del position
+
+    def body(carry, xs):
+        h = carry
+        lp, s, tm_prev, cm_prev = xs
+        x = ll.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        tm, new_state = rwkv_mod.rwkv_decode_step(
+            lp["rwkv"], x, {"s": s, "tm_prev": tm_prev, "cm_prev": cm_prev}, cfg)
+        h = h + tm
+        xn = ll.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + rwkv_mod.rwkv_channel_mix_step(lp["rwkv"], xn, cm_prev)
+        return h, (new_state["s"], x, xn)
+
+    h, (ss, tms, cms) = jax.lax.scan(
+        body, h, (p["blocks"], cache["s"], cache["tm_prev"], cache["cm_prev"]))
+    return h, {"s": ss, "tm_prev": tms, "cm_prev": cms}

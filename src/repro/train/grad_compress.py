@@ -1,0 +1,108 @@
+"""PQ gradient compression with error feedback — the paper's encode/ADC
+machinery reused as a distributed-optimization trick.
+
+For the slow cross-pod links, gradients are 4-bit-PQ encoded before the
+exchange: each gradient tensor is reshaped to (N, dsub) rows, quantized
+against a per-tensor 16-entry codebook (k-means on a sample of rows), and
+only the 4-bit codes + the tiny codebook cross the wire (7.9x compression at
+dsub=4 vs f32). The residual (g - decode(encode(g))) is carried into the
+next step's gradient (error feedback), which keeps SGD convergence.
+
+This module implements the *compression codec* + error-feedback state; the
+cross-pod exchange itself is a standard psum of the decoded tensors (the
+codes being exchanged is what a custom collective would ship — on a dry-run
+mesh we account bytes in the roofline instead).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans
+
+
+class PQGradCodec(NamedTuple):
+    dsub: int = 4          # gradient sub-vector length
+    k: int = 16            # 4-bit codebooks
+    iters: int = 5         # k-means refinement per step (cheap, on samples)
+    sample: int = 4096     # rows sampled for codebook training
+
+
+class CompressedGrad(NamedTuple):
+    codes: jax.Array       # (N,) uint8 — two 4-bit codes per byte
+    codebook: jax.Array    # (16, dsub) f32
+    shape: tuple           # original shape
+    nrows: int
+
+
+def _rows(g: jax.Array, dsub: int) -> jax.Array:
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % dsub
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, dsub)
+
+
+def compress(key: jax.Array, g: jax.Array, codec: PQGradCodec) -> CompressedGrad:
+    rows = _rows(g, codec.dsub)
+    n = rows.shape[0]
+    idx = jax.random.randint(key, (min(codec.sample, n),), 0, n)
+    res = kmeans(key, rows[idx], k=codec.k, iters=codec.iters)
+    cb = res.centroids                                   # (16, dsub)
+    d = (jnp.sum(rows * rows, -1, keepdims=True)
+         - 2.0 * rows @ cb.T + jnp.sum(cb * cb, -1)[None])
+    codes = jnp.argmin(d, axis=-1).astype(jnp.uint8)     # (N,)
+    pad = (-codes.shape[0]) % 2
+    if pad:
+        codes = jnp.pad(codes, (0, pad))
+    packed = codes[0::2] | (codes[1::2] << 4)
+    return CompressedGrad(packed, cb, tuple(g.shape), n)
+
+
+def decompress(c: CompressedGrad) -> jax.Array:
+    lo = (c.codes & 0xF).astype(jnp.int32)
+    hi = ((c.codes >> 4) & 0xF).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], -1).reshape(-1)[:c.nrows]
+    rows = c.codebook[codes]                             # (N, dsub)
+    flat = rows.reshape(-1)
+    size = 1
+    for s in c.shape:
+        size *= s
+    return flat[:size].reshape(c.shape)
+
+
+def compressed_bytes(c: CompressedGrad) -> int:
+    return int(c.codes.size) + int(c.codebook.size) * 4
+
+
+def ef_step(key: jax.Array, grads: Any, error: Any, codec: PQGradCodec
+            ) -> tuple[Any, Any, dict]:
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (decoded grads to feed the optimizer, new error state, stats).
+    Semantics: send = compress(g + e); e' = (g + e) - decode(send).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error)
+    keys = jax.random.split(key, len(leaves))
+    out, new_err = [], []
+    raw_bytes = comp_bytes = 0
+    for k, g, e in zip(keys, leaves, err_leaves):
+        target = g.astype(jnp.float32) + e
+        c = compress(k, target, codec)
+        dec = decompress(c).astype(jnp.float32)
+        out.append(dec.astype(g.dtype))
+        new_err.append(target - dec)
+        raw_bytes += g.size * 4
+        comp_bytes += compressed_bytes(c)
+    stats = {"raw_bytes": raw_bytes, "compressed_bytes": comp_bytes,
+             "ratio": raw_bytes / max(comp_bytes, 1)}
+    return (jax.tree.unflatten(treedef, out),
+            jax.tree.unflatten(treedef, new_err), stats)
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,213 @@
+"""Behaviour tests for the ANN core: PQ, fast-scan, IVF, HNSW, top-k, metrics."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coarse, fastscan, hnsw, ivf, metrics, pq, topk
+from repro.core.kmeans import kmeans, pairwise_sqdist
+from repro.data import vectors
+
+
+@functools.lru_cache(maxsize=None)
+def small_ds():
+    return vectors.make_sift_like(n=20_000, nt=5_000, nq=64, d=32, ncl=64, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# kmeans / PQ
+# ---------------------------------------------------------------------------
+
+def test_kmeans_reduces_inertia():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2000, 16))
+    r1 = kmeans(key, x, k=16, iters=1)
+    r2 = kmeans(key, x, k=16, iters=20)
+    assert float(r2.inertia) < float(r1.inertia)
+    assert r2.centroids.shape == (16, 16)
+
+
+def test_pq_encode_decode_reduces_error_with_m():
+    ds = small_ds()
+    key = jax.random.PRNGKey(1)
+    errs = []
+    for m in (2, 8, 16):
+        cb = pq.train_pq(key, ds.train, m=m, k=16, iters=10)
+        codes = pq.encode(cb, ds.base[:2000])
+        rec = pq.decode(cb, codes)
+        errs.append(float(jnp.mean(jnp.sum((rec - ds.base[:2000]) ** 2, -1))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_adc_matches_reconstructed_distance():
+    """ADC(q, code) == ||q - decode(code)||^2 exactly (paper Eq. (3))."""
+    ds = small_ds()
+    cb = pq.train_pq(jax.random.PRNGKey(2), ds.train, m=8, k=16, iters=8)
+    codes = pq.encode(cb, ds.base[:512])
+    q = ds.queries[:8]
+    t = pq.adc_table(cb, q)
+    adc = pq.adc_lookup(t, codes)  # (8, 512)
+    rec = pq.decode(cb, codes)
+    exact = pairwise_sqdist(q, rec)
+    np.testing.assert_allclose(np.asarray(adc), np.asarray(exact), rtol=2e-3, atol=2e-1)
+
+
+# ---------------------------------------------------------------------------
+# fast-scan: recall parity with naive PQ (the paper's Fig. 2 claim)
+# ---------------------------------------------------------------------------
+
+def test_fastscan_recall_parity_with_naive_pq():
+    ds = small_ds()
+    m = 16
+    idx = fastscan.build_index(jax.random.PRNGKey(4), ds.train, ds.base, m=m, iters=10)
+    _, ids_fast = fastscan.search(idx, ds.queries, topk=10, impl="mxu")
+    _, ids_naive = pq.search(idx.codebook, pq.encode(idx.codebook, ds.base),
+                             ds.queries, topk=10)
+    r_fast = float(metrics.recall_at_r(ids_fast, ds.gt_ids, r=10))
+    r_naive = float(metrics.recall_at_r(ids_naive, ds.gt_ids, r=10))
+    # same codes, same codebook; the only difference is u8 LUT quantization
+    assert abs(r_fast - r_naive) < 0.05
+    assert r_fast > 0.5  # sanity: clustered data, M=16 should retrieve well
+
+
+def test_fastscan_impls_agree():
+    ds = small_ds()
+    idx = fastscan.build_index(jax.random.PRNGKey(5), ds.train, ds.base[:4096],
+                               m=8, iters=8)
+    d_sel = fastscan.compute_distances(idx, ds.queries[:4], impl="select")
+    d_mxu = fastscan.compute_distances(idx, ds.queries[:4], impl="mxu")
+    d_ref = fastscan.compute_distances(idx, ds.queries[:4], impl="ref")
+    np.testing.assert_array_equal(np.asarray(d_sel), np.asarray(d_mxu))
+    np.testing.assert_array_equal(np.asarray(d_sel), np.asarray(d_ref))
+
+
+# ---------------------------------------------------------------------------
+# top-k
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 3000), k=st.integers(1, 10), seed=st.integers(0, 10**6))
+def test_property_tournament_topk_matches_sort(n, k, seed):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.normal(size=(3, n)).astype(np.float32))
+    vals, ids = topk.tournament_topk(d, k, block=256)
+    want = np.sort(np.asarray(d), axis=1)[:, :k]
+    np.testing.assert_allclose(np.asarray(vals), want, rtol=1e-6)
+    got_by_id = np.take_along_axis(np.asarray(d), np.asarray(ids), axis=1)
+    np.testing.assert_allclose(got_by_id, want, rtol=1e-6)
+
+
+def test_masked_topk_ignores_invalid():
+    d = jnp.asarray([[1.0, 0.5, 2.0, 0.1]])
+    valid = jnp.asarray([[True, False, True, False]])
+    vals, ids = topk.masked_topk(d, valid, 2)
+    np.testing.assert_allclose(np.asarray(vals[0]), [1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(ids[0]), [0, 2])
+
+
+def test_distributed_topk_equals_global():
+    """vmap-with-axis-name merge over a fake 4-shard axis == global top-k."""
+    rng = np.random.default_rng(0)
+    shards, q, n_local, k = 4, 8, 64, 5
+    d = jnp.asarray(rng.normal(size=(shards, q, n_local)).astype(np.float32))
+    # global ids: shard s owns [s*n_local, (s+1)*n_local)
+    ids = jnp.broadcast_to(
+        (jnp.arange(shards)[:, None, None] * n_local
+         + jnp.arange(n_local)[None, None, :]).astype(jnp.int32),
+        (shards, q, n_local))
+
+    merged = jax.vmap(
+        lambda dd, ii: topk.distributed_topk(dd, ii, k, axis_name="shards"),
+        axis_name="shards")
+    mv, mi = merged(d, ids)  # replicated across shards: (shards, Q, k)
+    np.testing.assert_allclose(np.asarray(mv[0]), np.asarray(mv[1]))
+
+    flat = np.transpose(np.asarray(d), (1, 0, 2)).reshape(q, -1)
+    order = np.argsort(flat, axis=1)[:, :k]
+    np.testing.assert_allclose(np.asarray(mv[0]),
+                               np.take_along_axis(flat, order, axis=1), rtol=1e-6)
+    # global id == position in the shard-major flat layout, per construction
+    got = np.take_along_axis(flat, np.asarray(mi[0]), axis=1)
+    np.testing.assert_allclose(np.sort(got, axis=1),
+                               np.take_along_axis(flat, order, axis=1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# IVF
+# ---------------------------------------------------------------------------
+
+def test_ivf_recall_improves_with_nprobe():
+    ds = small_ds()
+    index = ivf.build_ivf(jax.random.PRNGKey(6), ds.train, ds.base, m=16,
+                          nlist=64, coarse_iters=10, pq_iters=8)
+    recalls = []
+    for nprobe in (1, 4, 16):
+        _, ids = ivf.search_ivf(index, ds.queries, nprobe=nprobe, topk=10)
+        recalls.append(float(metrics.recall_at_r(ids, ds.gt_ids, r=10)))
+    assert recalls[0] <= recalls[1] <= recalls[2] + 1e-6
+    assert recalls[2] > 0.6
+
+
+def test_ivf_padding_never_returned_for_valid_k():
+    ds = small_ds()
+    index = ivf.build_ivf(jax.random.PRNGKey(7), ds.train, ds.base[:5000], m=8,
+                          nlist=32, coarse_iters=8, pq_iters=6)
+    _, ids = ivf.search_ivf(index, ds.queries, nprobe=8, topk=10)
+    assert int((np.asarray(ids) >= 0).sum()) == ids.size  # enough candidates
+
+
+# ---------------------------------------------------------------------------
+# HNSW
+# ---------------------------------------------------------------------------
+
+def test_hnsw_beats_random_and_matches_brute_force_mostly():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2000, 24)).astype(np.float32)
+    g = hnsw.build_hnsw(x, m=12, ef_construction=48, seed=0)
+    q = jnp.asarray(rng.normal(size=(32, 24)).astype(np.float32))
+    d, ids = hnsw.search_hnsw(g, q, ef=48, topk=1)
+    exact = np.argmin(np.asarray(pairwise_sqdist(q, jnp.asarray(x))), axis=1)
+    recall = float(np.mean(np.asarray(ids[:, 0]) == exact))
+    assert recall >= 0.9, f"HNSW recall@1 too low: {recall}"
+
+
+def test_hnsw_as_coarse_quantizer_pipeline():
+    """Paper Table 1 pipeline: HNSW coarse + IVF fast-scan fine."""
+    ds = small_ds()
+    index = ivf.build_ivf(jax.random.PRNGKey(8), ds.train, ds.base, m=16,
+                          nlist=64, coarse_iters=10, pq_iters=8)
+    hc = coarse.build_hnsw_coarse(index.centroids, m=8, ef_construction=32)
+    _, probe_ids = hc.search(ds.queries, nprobe=8)
+    _, ids = ivf.search_ivf_precomputed_probes(index, ds.queries, probe_ids,
+                                               nprobe=8, topk=10)
+    r = float(metrics.recall_at_r(ids, ds.gt_ids, r=10))
+    # HNSW coarse should roughly match flat coarse at the same nprobe
+    _, ids_flat = ivf.search_ivf(index, ds.queries, nprobe=8, topk=10)
+    r_flat = float(metrics.recall_at_r(ids_flat, ds.gt_ids, r=10))
+    assert r >= r_flat - 0.08
+
+
+def test_tree_coarse_quantizer():
+    ds = small_ds()
+    res = kmeans(jax.random.PRNGKey(9), ds.train, k=64, iters=10)
+    tc = coarse.build_tree(jax.random.PRNGKey(10), res.centroids)
+    _, ids = tc.search(ds.queries, nprobe=4)
+    flat = coarse.build_flat(res.centroids)
+    _, ids_flat = flat.search(ds.queries, nprobe=4)
+    # top-1 probe agreement should be high (tree explores 4 of 8 roots)
+    agree = float(np.mean(np.asarray(ids[:, 0]) == np.asarray(ids_flat[:, 0])))
+    assert agree > 0.7
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_recall_at_r():
+    pred = jnp.asarray([[1, 2, 3], [4, 5, 6]])
+    gt = jnp.asarray([2, 9])
+    assert float(metrics.recall_at_r(pred, gt)) == 0.5
+    assert float(metrics.recall_at_r(pred, gt, r=1)) == 0.0

@@ -1,0 +1,125 @@
+"""Per-kernel allclose (here: bit-exact) tests vs the pure-jnp oracle.
+
+Integer ADC accumulation is exact, so every kernel variant must match ref.py
+bit-for-bit across a sweep of shapes — including ragged N/Q that exercise the
+padding paths in ops.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fastscan
+from repro.kernels import fastscan_kernel as fk
+from repro.kernels import ops, ref
+
+
+def _rand_case(seed, q, n, m):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.integers(0, 256, size=(q, m, 16), dtype=np.uint8))
+    packed = jnp.asarray(rng.integers(0, 256, size=(n, m // 2), dtype=np.uint8))
+    return table, packed
+
+
+SHAPES = [
+    (1, 32, 2),      # minimal
+    (3, 100, 4),     # ragged N -> padding path
+    (8, 1024, 8),    # exact tile
+    (2, 1500, 16),   # ragged, > 1 tile
+    (5, 2048, 64),   # multi-tile, wide M
+]
+
+
+@pytest.mark.parametrize("impl", ["select", "mxu"])
+@pytest.mark.parametrize("q,n,m", SHAPES)
+def test_kernel_matches_ref_bitexact(impl, q, n, m):
+    table, packed = _rand_case(q * 1000 + n + m, q, n, m)
+    want = ref.fastscan_distances_ref(table, packed)
+    got = ops.fastscan_distances(table, packed, impl=impl)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_extreme_values():
+    """All-255 tables with max M: accumulator must not overflow/clip."""
+    q, n, m = 2, 64, 128
+    table = jnp.full((q, m, 16), 255, jnp.uint8)
+    packed = jnp.asarray(np.random.default_rng(0).integers(0, 256, (n, m // 2), np.uint8))
+    want = ref.fastscan_distances_ref(table, packed)
+    assert int(want.max()) == 255 * m  # sanity: 32640 < 2^31 and exact in f32
+    for impl in ("select", "mxu"):
+        got = ops.fastscan_distances(table, packed, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_blockmin_matches_ref():
+    q, n, m, block = 3, 2048, 8, 1024
+    table, packed = _rand_case(7, q, n, m)
+    want_min, want_arg = ref.fastscan_block_min_ref(table, packed, block)
+    got_min, got_arg = ops.fastscan_blockmin(table, packed, block=block)
+    np.testing.assert_array_equal(np.asarray(got_min), np.asarray(want_min))
+    # argmin ties may resolve differently; check the dists at argmins match
+    full = np.asarray(ref.fastscan_distances_ref(table, packed))
+    np.testing.assert_array_equal(
+        np.take_along_axis(full, np.asarray(got_arg), axis=1), np.asarray(want_min))
+
+
+def test_blockmin_ragged_padding_is_maskable():
+    q, n, m, block = 2, 1500, 4, 1024
+    table, packed = _rand_case(9, q, n, m)
+    got_min, got_arg = ops.fastscan_blockmin(table, packed, block=block)
+    assert got_min.shape == (q, 2)
+    full = np.asarray(ref.fastscan_distances_ref(table, packed))
+    arg = np.asarray(got_arg)
+    # ids either point into the real range with matching dists, or to padding
+    in_range = arg < n
+    np.testing.assert_array_equal(
+        np.take_along_axis(full, np.where(in_range, arg, 0), axis=1)[in_range],
+        np.asarray(got_min)[in_range])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.integers(1, 9),
+    n=st.integers(1, 300),
+    mh=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_kernels_bitexact(q, n, mh, seed):
+    """Property: for any shape/content, both kernels == oracle exactly."""
+    table, packed = _rand_case(seed, q, n, 2 * mh)
+    want = np.asarray(ref.fastscan_distances_ref(table, packed))
+    for impl in ("select", "mxu"):
+        got = np.asarray(ops.fastscan_distances(table, packed, impl=impl))
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 64), mh=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_property_pack_unpack_roundtrip(n, mh, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 16, size=(n, 2 * mh), dtype=np.int32))
+    packed = fastscan.pack_codes(codes)
+    assert packed.shape == (n, mh) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(fastscan.unpack_codes(packed)), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(ref.unpack_nibbles(packed)), np.asarray(codes))
+
+
+@settings(max_examples=20, deadline=None)
+@given(q=st.integers(1, 4), mh=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_property_lut_quantization_error_bound(q, mh, seed):
+    """|dequant(acc) - float ADC| <= M * scale/2 (per-entry rounding error)."""
+    m = 2 * mh
+    rng = np.random.default_rng(seed)
+    table_np = rng.uniform(0, 100, size=(q, m, 16)).astype(np.float32)
+    codes_np = rng.integers(0, 16, size=(64, m))
+    qlut = fastscan.quantize_lut(jnp.asarray(table_np))
+    acc = ref.fastscan_distances_ref(qlut.table_q8,
+                                     fastscan.pack_codes(jnp.asarray(codes_np)))
+    approx = np.asarray(fastscan.dequantize_acc(qlut, acc))  # (q, 64)
+    # exact float ADC, plain numpy: exact[qi, n] = sum_m table[qi, m, codes[n, m]]
+    exact = np.stack([
+        sum(table_np[qi, j, codes_np[:, j]] for j in range(m)) for qi in range(q)])
+    bound = np.asarray(qlut.scale)[:, None] * (0.5 * m) + 1e-3 * np.abs(exact) + 1e-3
+    assert np.all(np.abs(approx - exact) <= bound)

@@ -1,0 +1,135 @@
+"""PQ-KV cache correctness: codec roundtrip, ADC-vs-exact attention parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import kvcache as kvc
+
+
+def _perfect_codebook(key, kv, m, dsub):
+    """Codebook whose entries are distinct; K/V drawn FROM the codebook so
+    encoding is lossless -> PQ attention must match exact attention."""
+    return jax.random.normal(key, (kv, m, 16, dsub), jnp.float32)
+
+
+def _draw_from_codebook(key, cb, b, s):
+    kv, m, _, dsub = cb.shape
+    codes = jax.random.randint(key, (b, s, kv, m), 0, 16)
+    gathered = jnp.take_along_axis(
+        cb[None, None], codes[..., None, None], axis=-2)[..., 0, :]
+    return gathered.reshape(b, s, kv, m * dsub), codes
+
+
+def test_encode_decode_roundtrip_lossless_on_codebook_points():
+    key = jax.random.PRNGKey(0)
+    kv, m, dsub, b, s = 2, 4, 8, 3, 16
+    cb = _perfect_codebook(key, kv, m, dsub)
+    x, codes = _draw_from_codebook(jax.random.PRNGKey(1), cb, b, s)
+    packed = jax.vmap(lambda t: kvc.encode_kv(t, cb), 1, 1)(x)  # (B,S,KV,M/2)
+    dec = kvc.decode_kv(packed, cb)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(x), atol=1e-5)
+
+
+def test_pq_decode_attention_matches_exact_with_lossless_codebooks():
+    """With codebooks that reconstruct K/V exactly and quantize_q8=False,
+    PQ ADC attention == exact attention (up to float assoc)."""
+    key = jax.random.PRNGKey(2)
+    b, s, kv, g, m, dsub = 2, 64, 2, 2, 8, 16
+    hd = m * dsub
+    h = kv * g
+    k_cb = _perfect_codebook(jax.random.fold_in(key, 0), kv, m, dsub) * 0.2
+    v_cb = _perfect_codebook(jax.random.fold_in(key, 1), kv, m, dsub) * 0.2
+    kx, _ = _draw_from_codebook(jax.random.fold_in(key, 2), k_cb, b, s)
+    vx, _ = _draw_from_codebook(jax.random.fold_in(key, 3), v_cb, b, s)
+    q = jax.random.normal(jax.random.fold_in(key, 4), (b, h, hd)) * 0.5
+    position = jnp.full((b,), s - 1, jnp.int32)
+
+    k_codes = jax.vmap(lambda t: kvc.encode_kv(t, k_cb), 1, 1)(kx)
+    v_codes = jax.vmap(lambda t: kvc.encode_kv(t, v_cb), 1, 1)(vx)
+    out_pq = kvc.pq_decode_attention(q, k_codes, v_codes, k_cb, v_cb, position,
+                                     chunk=32, quantize_q8=False)
+
+    # exact reference
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, kx) / np.sqrt(hd)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_ref = jnp.einsum("bkgs,bskh->bkgh", w, vx).reshape(b, h, hd)
+    np.testing.assert_allclose(np.asarray(out_pq), np.asarray(out_ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_pq_decode_attention_q8_close_to_float_lut():
+    """The paper-faithful u8 LUT quantization stays close to the float LUT."""
+    key = jax.random.PRNGKey(3)
+    b, s, kv, g, m, dsub = 2, 128, 2, 2, 16, 8
+    hd = m * dsub
+    k_cb = _perfect_codebook(jax.random.fold_in(key, 0), kv, m, dsub) * 0.1
+    v_cb = _perfect_codebook(jax.random.fold_in(key, 1), kv, m, dsub) * 0.1
+    kx, _ = _draw_from_codebook(jax.random.fold_in(key, 2), k_cb, b, s)
+    vx, _ = _draw_from_codebook(jax.random.fold_in(key, 3), v_cb, b, s)
+    q = jax.random.normal(jax.random.fold_in(key, 4), (b, kv * g, hd)) * 0.3
+    position = jnp.full((b,), s - 1, jnp.int32)
+    k_codes = jax.vmap(lambda t: kvc.encode_kv(t, k_cb), 1, 1)(kx)
+    v_codes = jax.vmap(lambda t: kvc.encode_kv(t, v_cb), 1, 1)(vx)
+
+    out_f = kvc.pq_decode_attention(q, k_codes, v_codes, k_cb, v_cb, position,
+                                    chunk=64, quantize_q8=False)
+    out_q8 = kvc.pq_decode_attention(q, k_codes, v_codes, k_cb, v_cb, position,
+                                     chunk=64, quantize_q8=True)
+    err = float(jnp.max(jnp.abs(out_f - out_q8)))
+    scale = float(jnp.max(jnp.abs(out_f))) + 1e-6
+    assert err / scale < 0.15, f"u8 LUT error too large: {err/scale}"
+
+
+def test_position_masking():
+    """Entries past `position` must not contribute."""
+    key = jax.random.PRNGKey(4)
+    b, s, kv, g, m, dsub = 1, 32, 1, 1, 4, 4
+    hd = m * dsub
+    cb = _perfect_codebook(key, kv, m, dsub)
+    kx, _ = _draw_from_codebook(jax.random.fold_in(key, 1), cb, b, s)
+    vx, _ = _draw_from_codebook(jax.random.fold_in(key, 2), cb, b, s)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, kv * g, hd))
+    k_codes = jax.vmap(lambda t: kvc.encode_kv(t, cb), 1, 1)(kx)
+    v_codes = jax.vmap(lambda t: kvc.encode_kv(t, cb), 1, 1)(vx)
+    pos = jnp.asarray([7], jnp.int32)
+    out1 = kvc.pq_decode_attention(q, k_codes, v_codes, cb, cb, pos, chunk=8,
+                                   quantize_q8=False)
+    # scramble the masked tail: result must be identical
+    k2 = k_codes.at[:, 20:].set(255)
+    v2 = v_codes.at[:, 20:].set(255)
+    out2 = kvc.pq_decode_attention(q, k2, v2, cb, cb, pos, chunk=8,
+                                   quantize_q8=False)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_update_pq_writes_at_position():
+    key = jax.random.PRNGKey(5)
+    kv, m, dsub, b, smax = 2, 4, 4, 2, 16
+    cb = _perfect_codebook(key, kv, m, dsub)
+    k_codes = jnp.zeros((b, smax, kv, m // 2), jnp.uint8)
+    v_codes = jnp.zeros((b, smax, kv, m // 2), jnp.uint8)
+    k_new, _ = _draw_from_codebook(jax.random.fold_in(key, 1), cb, b, 1)
+    v_new, _ = _draw_from_codebook(jax.random.fold_in(key, 2), cb, b, 1)
+    k2, v2 = kvc.update_pq(k_codes, v_codes, k_new[:, 0], v_new[:, 0], cb, cb,
+                           jnp.int32(5))
+    changed = np.asarray(k2 != k_codes).any(axis=(0, 2, 3))
+    assert changed[5] or np.asarray(v2 != v_codes).any(axis=(0, 2, 3))[5]
+    assert not changed[[0, 1, 2, 3, 4, 6]].any()
+
+
+def test_calibrated_codebooks_reduce_reconstruction_error():
+    key = jax.random.PRNGKey(6)
+    n, kv, hd, m = 512, 2, 32, 8
+    # clustered samples (realistic activation structure)
+    centers = jax.random.normal(key, (8, kv, hd))
+    which = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 8)
+    x = centers[which] + 0.05 * jax.random.normal(jax.random.fold_in(key, 2),
+                                                  (n, kv, hd))
+    cb = kvc.calibrate_kv_codebooks(jax.random.fold_in(key, 3), x, m=m)
+    codes = kvc.encode_kv(x, cb)
+    rec = kvc.decode_kv(codes, cb)
+    rel = float(jnp.linalg.norm(rec - x) / jnp.linalg.norm(x))
+    assert rel < 0.2, f"calibrated PQ reconstruction too lossy: {rel}"

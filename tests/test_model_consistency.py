@@ -1,0 +1,139 @@
+"""Cross-path consistency: chunked-train vs decode-recurrence parity.
+
+These are the strongest correctness tests in the repo: the chunked SSD /
+WKV6 / flash-attention formulations (training path) and the O(1)-state
+decode recurrences are independent implementations of the same math, so
+teacher-forced logits must agree position by position.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as model_lib
+from repro.models import layers as ll
+from repro.models import ssm as ssm_mod
+from repro.models import rwkv6 as rwkv_mod
+
+ATTN_ARCHS = ["qwen3_1p7b", "starcoder2_15b"]
+REC_ARCHS = ["zamba2_2p7b", "rwkv6_3b"]
+
+
+def _tokens(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (b, s), np.int32))
+
+
+@pytest.mark.parametrize("arch", ATTN_ARCHS + REC_ARCHS)
+def test_decode_matches_teacher_forced_forward(arch):
+    cfg = configs.get_smoke_config(arch).replace(kv_pq=False)
+    b, s = 2, 32
+    params = model_lib.init_lm(jax.random.PRNGKey(0), cfg)
+    tokens = _tokens(cfg, b, s)
+    full_logits, _ = model_lib.forward(params, tokens, cfg)  # (B,S,V)
+
+    cache = model_lib.init_cache(cfg, b, s)
+    step = jax.jit(lambda c, t, pos: model_lib.decode_step(params, c, t, pos, cfg))
+    errs = []
+    for i in range(s - 1):
+        pos = jnp.full((b,), i, jnp.int32)
+        logits, cache = step(cache, tokens[:, i], pos)
+        diff = jnp.max(jnp.abs(logits - full_logits[:, i]))
+        errs.append(float(diff))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-9
+    assert max(errs) / scale < 5e-2, \
+        f"{arch}: decode diverges from forward, max rel err {max(errs)/scale}"
+
+
+def test_chunked_attention_matches_full():
+    cfg = configs.get_smoke_config("qwen3_1p7b").replace(
+        attn_q_chunk=8, attn_kv_chunk=16)
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    out_c = ll.chunked_causal_attention(q, k, v, cfg)
+    out_f = ll.full_causal_attention(q, k, v, cfg)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_f),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """SSD chunked scan == token-by-token linear recurrence."""
+    key = jax.random.PRNGKey(1)
+    b, s, nh, hd, g, ds, chunk = 2, 32, 4, 8, 1, 16, 8
+    xh = jax.random.normal(key, (b, s, nh, hd)) * 0.5
+    log_a = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (b, s, nh))) * 0.3
+    bm = jax.random.normal(jax.random.fold_in(key, 2), (b, s, g, ds)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(key, 3), (b, s, g, ds)) * 0.5
+    y_chunked, h_final = ssm_mod.ssd_chunked(xh, log_a, bm, cm, chunk)
+
+    # naive recurrence
+    h = np.zeros((b, nh, hd, ds))
+    a_np = np.exp(np.asarray(log_a, np.float64))
+    bh = np.repeat(np.asarray(bm, np.float64), nh // g, axis=2)
+    ch = np.repeat(np.asarray(cm, np.float64), nh // g, axis=2)
+    x_np = np.asarray(xh, np.float64)
+    ys = []
+    for t in range(s):
+        h = h * a_np[:, t][:, :, None, None] + np.einsum(
+            "bhp,bhn->bhpn", x_np[:, t], bh[:, t])
+        ys.append(np.einsum("bhpn,bhn->bhp", h, ch[:, t]))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked, np.float64), y_ref,
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_final, np.float64), h,
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_wkv6_chunked_matches_naive_recurrence():
+    """WKV6 chunked == per-token recurrence (incl. the u-bonus diagonal)."""
+    key = jax.random.PRNGKey(2)
+    b, s, nh, hd, chunk = 2, 24, 2, 8, 8
+    r = jax.random.normal(key, (b, s, nh, hd)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, nh, hd)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, nh, hd)) * 0.5
+    log_w = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 3),
+                                       (b, s, nh, hd))) * 0.3
+    u = jax.random.normal(jax.random.fold_in(key, 4), (nh, hd)) * 0.5
+    y_chunked, s_final = rwkv_mod.wkv6_chunked(r, k, v, log_w, u, chunk)
+
+    S = np.zeros((b, nh, hd, hd))
+    w_np = np.exp(np.asarray(log_w, np.float64))
+    r_np, k_np, v_np = (np.asarray(t, np.float64) for t in (r, k, v))
+    u_np = np.asarray(u, np.float64)
+    ys = []
+    for t in range(s):
+        kv = np.einsum("bhi,bhj->bhij", k_np[:, t], v_np[:, t])
+        o = np.einsum("bhi,bhij->bhj", r_np[:, t], S + u_np[None, :, :, None] * kv)
+        S = S * w_np[:, t][..., None] + kv
+        ys.append(o)
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked, np.float64), y_ref,
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_final, np.float64), S,
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1p7b", "zamba2_2p7b", "rwkv6_3b"])
+def test_prefill_then_decode_continues_correctly(arch):
+    """prefill(prompt) + decode(next) == forward(prompt+next) at the end."""
+    cfg = configs.get_smoke_config(arch).replace(kv_pq=False)
+    b, s = 2, 24
+    params = model_lib.init_lm(jax.random.PRNGKey(3), cfg)
+    tokens = _tokens(cfg, b, s + 1, seed=1)
+    full_logits, _ = model_lib.forward(params, tokens, cfg)
+
+    logits_p, cache = model_lib.prefill(params, tokens[:, :s], cfg,
+                                        max_seq=s + 4)
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-9
+    # prefill last-position logits == forward at position s-1
+    err_p = float(jnp.max(jnp.abs(logits_p - full_logits[:, s - 1])))
+    assert err_p / scale < 5e-2, f"{arch}: prefill mismatch {err_p/scale}"
+    # one decode step after the prompt == forward at position s
+    logits_d, _ = model_lib.decode_step(params, cache, tokens[:, s],
+                                        jnp.full((b,), s, jnp.int32), cfg)
+    err_d = float(jnp.max(jnp.abs(logits_d - full_logits[:, s])))
+    assert err_d / scale < 5e-2, f"{arch}: decode-after-prefill mismatch {err_d/scale}"

@@ -1,0 +1,152 @@
+"""Training substrate tests: optimizer, checkpoint/restart, compression, loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.train import checkpoint as ckpt
+from repro.train import grad_compress as gc
+from repro.train import optimizer as opt
+from repro.train import train_loop
+
+
+def test_adamw_reduces_quadratic():
+    cfg = opt.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                          weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init_state(params)
+    for _ in range(60):
+        grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp p^2
+        params, state, m = opt.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert m["lr"] > 0
+
+
+def test_adamw_clips_gradients():
+    cfg = opt.AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init_state(params)
+    _, _, m = opt.apply_updates(params, {"w": jnp.full(4, 100.0)}, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule_shape():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(opt.schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1)
+
+
+def test_checkpoint_save_restore_roundtrip(tmp_path):
+    state = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+             "nested": {"b": jnp.ones((4,), jnp.int32)}}
+    d = str(tmp_path / "ckpt")
+    ckpt.save(d, 3, state)
+    ckpt.save(d, 7, jax.tree.map(lambda x: x + 1, state))
+    assert ckpt.latest_step(d) == 7
+    step, restored = ckpt.restore(d, state)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(state["a"]) + 1)
+
+
+def test_checkpoint_keep_k(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in range(6):
+        ckpt.save(d, s, {"x": jnp.zeros(1)}, keep=2)
+    dirs = sorted(p for p in os.listdir(d) if p.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_restart_bitwise_exact(tmp_path):
+    """Interrupt -> restart -> final state matches an uninterrupted run."""
+    cfg = configs.get_smoke_config("qwen3_1p7b")
+    kw = dict(steps=6, global_batch=2, seq_len=32, ckpt_every=3,
+              log=lambda s: None)
+    full_state, _ = train_loop.train(cfg, ckpt_dir=str(tmp_path / "a"), **kw)
+    # interrupted run: first 3 steps only
+    kw_i = dict(kw, steps=3)
+    train_loop.train(cfg, ckpt_dir=str(tmp_path / "b"), **kw_i)
+    # resume to 6
+    resumed_state, _ = train_loop.train(cfg, ckpt_dir=str(tmp_path / "b"), **kw)
+    for a, b in zip(jax.tree.leaves(full_state.params),
+                    jax.tree.leaves(resumed_state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_training_reduces_loss():
+    cfg = configs.get_smoke_config("qwen3_1p7b")
+    _, hist = train_loop.train(cfg, steps=20, global_batch=4, seq_len=64,
+                               log=lambda s: None)
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-3:]])
+    assert last < first, f"loss did not drop: {first} -> {last}"
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = configs.get_smoke_config("qwen3_1p7b")
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    params = __import__("repro.models.model", fromlist=["x"]).init_lm(
+        jax.random.PRNGKey(0), cfg)
+    state = train_loop.TrainState(params, opt.init_state(params))
+    from repro.data import tokens as tok
+    batch = dict(tok.batch_at_step(
+        tok.TokenPipelineConfig(vocab=cfg.vocab, seq_len=32, global_batch=4), 0
+    )._asdict())
+    s1, m1 = train_loop.make_train_step(cfg, ocfg, microbatches=1)(state, batch)
+    s2, m2 = train_loop.make_train_step(cfg, ocfg, microbatches=2)(state, batch)
+    # losses match to accumulation tolerance
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_straggler_watchdog():
+    events = []
+    w = train_loop.StragglerWatchdog(factor=2.0, on_straggler=lambda *a: events.append(a))
+    for s in range(5):
+        w.observe(s, 1.0)
+    assert not events
+    assert w.observe(5, 5.0)  # 5x the EMA
+    assert events and events[0][0] == 5
+    # EMA not poisoned by the outlier
+    assert w.ema == pytest.approx(1.0)
+
+
+def test_grad_compression_error_feedback():
+    key = jax.random.PRNGKey(0)
+    grads = {"w": jax.random.normal(key, (256, 8)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (64,))}
+    err = gc.init_error(grads)
+    codec = gc.PQGradCodec(dsub=4)
+    dec, new_err, stats = gc.ef_step(key, grads, err, codec)
+    assert stats["ratio"] > 4.0, f"compression ratio too low: {stats['ratio']}"
+    # error feedback invariant: decoded + error == original (+ old error)
+    for name in ("w", "b"):
+        np.testing.assert_allclose(
+            np.asarray(dec[name], np.float32) + np.asarray(new_err[name]),
+            np.asarray(grads[name], np.float32), atol=1e-5)
+    # compression is lossy but bounded
+    rel = float(jnp.linalg.norm(dec["w"] - grads["w"]) / jnp.linalg.norm(grads["w"]))
+    assert rel < 0.9
+
+
+def test_grad_compression_ef_converges_on_quadratic():
+    """SGD + EF-compressed grads still converges (the EF guarantee)."""
+    key = jax.random.PRNGKey(0)
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(32, 4)).astype(np.float32))
+    err = gc.init_error({"w": w})
+    codec = gc.PQGradCodec(dsub=4, sample=128)
+    params = {"w": w}
+    for i in range(40):
+        grads = {"w": 2 * params["w"]}
+        dec, err, _ = gc.ef_step(jax.random.fold_in(key, i), grads, err, codec)
+        params = {"w": params["w"] - 0.1 * dec["w"]}
+    assert float(jnp.linalg.norm(params["w"])) < 0.2 * float(jnp.linalg.norm(w))
