@@ -7,10 +7,12 @@ import time
 import jax
 
 # CPU-scaled defaults; export REPRO_BENCH_FULL=1 for paper-scale (1M vectors)
+# or REPRO_BENCH_SMOKE=1 for the CI smoke job (a couple of minutes total).
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
-N_BASE = 1_000_000 if FULL else 60_000
-N_TRAIN = 100_000 if FULL else 12_000
-N_QUERY = 1_000 if FULL else 64
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+N_BASE = 1_000_000 if FULL else (20_000 if SMOKE else 60_000)
+N_TRAIN = 100_000 if FULL else (5_000 if SMOKE else 12_000)
+N_QUERY = 1_000 if FULL else (32 if SMOKE else 64)
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:

@@ -2,8 +2,11 @@
 
 Paper: nlist = sqrt(N) (30k for 1B), M=16, K=16, nprobe in {1, 2, 4};
 recall@1 and ms/query. We use the same sqrt-N heuristic at our scale and the
-same pipeline: HNSW searches the centroids, fast-scan ADC scans the probed
-lists (by-residual encoding, u8 LUTs).
+same pipeline, now through the unified ``repro.engine.SearchEngine``
+(HNSW coarse -> grouped 4-bit fast-scan -> optional exact re-rank), so
+recall-vs-latency is measured end-to-end through the production query path.
+rerank_mult=0 is the paper's raw quantized pipeline; rerank_mult=4 stacks the
+Quicker-ADC-style exact refinement on top.
 """
 from __future__ import annotations
 
@@ -12,8 +15,9 @@ import math
 import jax
 
 from benchmarks import common
-from repro.core import coarse, ivf, metrics
+from repro.core import metrics
 from repro.data import vectors
+from repro.engine import SearchEngine
 
 
 def main() -> None:
@@ -23,24 +27,28 @@ def main() -> None:
     ds = vectors.make_deep_like(n=common.N_BASE, nt=common.N_TRAIN,
                                 nq=common.N_QUERY, ncl=4096, query_noise=1.0)
     nlist = max(16, int(math.sqrt(ds.base.shape[0])))
-    index = ivf.build_ivf(jax.random.PRNGKey(0), ds.train, ds.base,
-                          m=16, nlist=nlist, coarse_iters=15, pq_iters=15)
-    hc = coarse.build_hnsw_coarse(index.centroids, m=16, ef_construction=64)
+    engine = SearchEngine.build(jax.random.PRNGKey(0), ds.train, ds.base,
+                                m=16, nlist=nlist, coarse="hnsw",
+                                coarse_iters=15, pq_iters=15,
+                                hnsw_m=16, ef_construction=64)
     q = ds.queries[:common.N_QUERY]
 
     for nprobe in (1, 2, 4, 8):
-        def pipeline(qq):
-            _, probes = hc.search(qq, nprobe=nprobe)
-            return ivf.search_ivf_precomputed_probes(
-                index, qq, probes, nprobe=nprobe, topk=10)
+        for rr in (0, 4):
+            def pipeline(qq):
+                res = engine.search(qq, 10, nprobe=nprobe, rerank_mult=rr)
+                return res.dists, res.ids
 
-        t = common.time_call(pipeline, q)
-        _, ids = pipeline(q)
-        r1 = float(metrics.recall_at_r(ids, ds.gt_ids, r=1))
-        ms_per_query = t / q.shape[0] * 1e3
-        common.emit(f"table1_nlist{nlist}_nprobe{nprobe}_M16_K16",
-                    t / q.shape[0],
-                    f"recall@1={r1:.3f};ms_per_query={ms_per_query:.3f}")
+            t = common.time_call(pipeline, q)
+            res = engine.search(q, 10, nprobe=nprobe, rerank_mult=rr)
+            r1 = float(metrics.recall_at_r(res.ids, ds.gt_ids, r=1))
+            ms_per_query = t / q.shape[0] * 1e3
+            scanned = float(res.stats.codes_scanned.mean())
+            common.emit(
+                f"table1_nlist{nlist}_nprobe{nprobe}_M16_K16_rr{rr}",
+                t / q.shape[0],
+                f"recall@1={r1:.3f};ms_per_query={ms_per_query:.3f};"
+                f"codes_scanned={scanned:.0f}")
 
 
 if __name__ == "__main__":

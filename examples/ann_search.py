@@ -1,5 +1,5 @@
-"""End-to-end large-scale ANN pipeline (paper Table 1, scaled):
-IVF inverted index + HNSW coarse quantizer + 4-bit PQ distance estimation.
+"""End-to-end large-scale ANN pipeline (paper Table 1, scaled) through the
+unified engine: HNSW coarse -> 4-bit fast-scan ADC -> exact re-rank -> top-k.
 
     PYTHONPATH=src python examples/ann_search.py [--n 200000] [--nprobe 4]
 """
@@ -9,8 +9,9 @@ import time
 
 import jax
 
-from repro.core import coarse, ivf, metrics
+from repro.core import metrics
 from repro.data import vectors
+from repro.engine import SearchEngine, ShardedEngine
 
 
 def main():
@@ -19,41 +20,61 @@ def main():
     ap.add_argument("--m", type=int, default=16)
     ap.add_argument("--nprobe", type=int, default=4)
     ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--rerank-mult", type=int, default=4,
+                    help="refine rerank_mult*k candidates exactly (0 = off)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="also run the shard-parallel path with S shards")
     args = ap.parse_args()
 
-    print("== IVF + HNSW + 4-bit PQ (Table 1 pipeline) ==")
+    print("== unified engine: IVF + HNSW + 4-bit PQ + exact re-rank ==")
     ds = vectors.make_deep_like(n=args.n, nt=max(10_000, args.n // 10),
                                 nq=args.queries)
     nlist = int(math.sqrt(args.n))  # the paper's sqrt(N) heuristic
     print(f"N={args.n}, nlist={nlist}, M={args.m}, K=16, nprobe={args.nprobe}")
 
     t0 = time.time()
-    index = ivf.build_ivf(jax.random.PRNGKey(0), ds.train, ds.base,
-                          m=args.m, nlist=nlist)
-    hc = coarse.build_hnsw_coarse(index.centroids, m=16, ef_construction=64)
+    engine = SearchEngine.build(jax.random.PRNGKey(0), ds.train, ds.base,
+                                m=args.m, nlist=nlist, coarse="hnsw")
     print(f"build: {time.time()-t0:.1f}s "
-          f"(codes {index.list_codes.shape}, {4*args.m} bits/vector)")
+          f"(codes {engine.index.lists.codes.shape}, {4*args.m} bits/vector)")
 
-    def pipeline(q):
-        _, probes = hc.search(q, nprobe=args.nprobe)
-        return ivf.search_ivf_precomputed_probes(index, q, probes,
-                                                 nprobe=args.nprobe, topk=10)
+    def timed_search(rr):
+        jax.block_until_ready(  # warmup/jit at the SAME batch shape as timed
+            engine.search(ds.queries, 10, nprobe=args.nprobe,
+                          rerank_mult=rr).ids)
+        t0 = time.time()
+        res = engine.search(ds.queries, 10, nprobe=args.nprobe, rerank_mult=rr)
+        jax.block_until_ready(res.ids)
+        return res, time.time() - t0
 
-    # warmup/jit, then timed
-    jax.block_until_ready(pipeline(ds.queries[:8])[0])
-    t0 = time.time()
-    dists, ids = pipeline(ds.queries)
-    jax.block_until_ready(ids)
-    dt = time.time() - t0
-    r1 = float(metrics.recall_at_r(ids, ds.gt_ids, r=1))
-    print(f"search: recall@1={r1:.3f}, "
-          f"{dt/args.queries*1e3:.3f} ms/query (batch of {args.queries})")
+    res, dt = timed_search(0)
+    r1 = float(metrics.recall_at_r(res.ids, ds.gt_ids, r=1))
+    print(f"fast-scan only:   recall@1={r1:.3f}, "
+          f"{dt/args.queries*1e3:.3f} ms/query "
+          f"(scanned ~{float(res.stats.codes_scanned.mean()):.0f} codes/query)")
+
+    if args.rerank_mult:
+        res_rr, dt_rr = timed_search(args.rerank_mult)
+        r1_rr = float(metrics.recall_at_r(res_rr.ids, ds.gt_ids, r=1))
+        print(f"+ exact re-rank:  recall@1={r1_rr:.3f}, "
+              f"{dt_rr/args.queries*1e3:.3f} ms/query "
+              f"(re-ranked {float(res_rr.stats.reranked.mean()):.0f}/query)")
 
     # flat coarse quantizer reference (exact probe selection)
-    _, ids_flat = ivf.search_ivf(index, ds.queries, nprobe=args.nprobe, topk=10)
-    r1f = float(metrics.recall_at_r(ids_flat, ds.gt_ids, r=1))
+    flat = SearchEngine(engine.index, base=ds.base, coarse="flat")
+    res_flat = flat.search(ds.queries, 10, nprobe=args.nprobe, rerank_mult=0)
+    r1f = float(metrics.recall_at_r(res_flat.ids, ds.gt_ids, r=1))
     print(f"flat-coarse reference: recall@1={r1f:.3f} "
           f"(HNSW coarse loses {max(0.0, r1f - r1):.3f})")
+
+    if args.shards > 1:
+        sh = ShardedEngine(engine, args.shards)
+        res_s = sh.search(ds.queries, 10, nprobe=args.nprobe,
+                          rerank_mult=args.rerank_mult)
+        r1s = float(metrics.recall_at_r(res_s.ids, ds.gt_ids, r=1))
+        print(f"sharded x{args.shards} (flat coarse per shard): "
+              f"recall@1={r1s:.3f} "
+              f"(probed {int(res_s.stats.lists_probed[0])} lists/query total)")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,12 @@ TPU adaptation of the data structure: lists are *padded* to a fixed capacity
 so every shape is static and the whole probe+scan+merge pipeline lowers under
 jit/pjit on a 512-device mesh (no dynamic shapes anywhere — the brief's rule).
 Encoding is by-residual (faiss IVFPQ default): codes quantize x - centroid.
+
+List storage/gather lives in ``repro.core.lists.ListStore`` — a reusable
+component shared with the unified engine (``repro.engine``) and the
+shard-parallel path. ``scan_probes`` is the quantized-scan stage on its own:
+(query, probe_ids) -> per-candidate ADC distances, reused verbatim by the
+engine so ``SearchEngine.search`` and hand-composition are identical.
 """
 from __future__ import annotations
 
@@ -21,15 +27,14 @@ from repro.core import fastscan as fs
 from repro.core import pq as pq_mod
 from repro.core import topk as topk_mod
 from repro.core.kmeans import kmeans, pairwise_sqdist
+from repro.core.lists import ListStore, build_lists
 from repro.core.pq import PQCodebook
 
 
 class IVFIndex(NamedTuple):
-    centroids: jax.Array     # (nlist, D) coarse quantizer
-    codebook: PQCodebook     # residual PQ codebooks, K=16
-    list_codes: jax.Array    # (nlist, cap, M//2) uint8, nibble-packed
-    list_ids: jax.Array      # (nlist, cap) int32, -1 = padding
-    list_sizes: jax.Array    # (nlist,) int32
+    centroids: jax.Array  # (nlist, D) coarse quantizer
+    codebook: PQCodebook  # residual PQ codebooks, K=16
+    lists: ListStore      # padded posting lists (codes/ids/sizes)
 
     @property
     def nlist(self) -> int:
@@ -37,7 +42,20 @@ class IVFIndex(NamedTuple):
 
     @property
     def cap(self) -> int:
-        return self.list_ids.shape[1]
+        return self.lists.cap
+
+    # back-compat accessors for the pre-ListStore field layout
+    @property
+    def list_codes(self) -> jax.Array:
+        return self.lists.codes
+
+    @property
+    def list_ids(self) -> jax.Array:
+        return self.lists.ids
+
+    @property
+    def list_sizes(self) -> jax.Array:
+        return self.lists.sizes
 
 
 def build_ivf(key: jax.Array, train_x: jax.Array, base_x: jax.Array, *,
@@ -70,33 +88,17 @@ def build_ivf(key: jax.Array, train_x: jax.Array, base_x: jax.Array, *,
     codes = np.asarray(pq_mod.encode(cb, base_res), np.int32)  # (n, M)
     packed = np.asarray(fs.pack_codes(jnp.asarray(codes)), np.uint8)
 
-    counts = np.bincount(assign, minlength=nlist)
-    cap_ = int(cap or counts.max())
-    mh = packed.shape[1]
-    list_codes = np.zeros((nlist, cap_, mh), np.uint8)
-    list_ids = np.full((nlist, cap_), -1, np.int32)
-    cursor = np.zeros((nlist,), np.int64)
-    order = np.argsort(assign, kind="stable")
-    for i in order:
-        li = assign[i]
-        c = cursor[li]
-        if c < cap_:  # overflow beyond capacity is dropped (counted below)
-            list_codes[li, c] = packed[i]
-            list_ids[li, c] = i
-            cursor[li] += 1
     return IVFIndex(
         centroids=centroids,
         codebook=cb,
-        list_codes=jnp.asarray(list_codes),
-        list_ids=jnp.asarray(list_ids),
-        list_sizes=jnp.asarray(np.minimum(counts, cap_).astype(np.int32)),
+        lists=build_lists(assign, packed, nlist=nlist, cap=cap),
     )
 
 
 def _probe_tables(index: IVFIndex, q: jax.Array, probe_ids: jax.Array
                   ) -> fs.QuantizedLUT:
     """Residual ADC LUTs for each (query, probe): (Q, P, M, 16) u8."""
-    mu = index.centroids[probe_ids]            # (Q, P, D)
+    mu = index.centroids[jnp.maximum(probe_ids, 0)]  # (Q, P, D)
     resid = q[:, None, :] - mu                 # (Q, P, D)
     qq, p, d = resid.shape
     t = pq_mod.adc_table(index.codebook, resid.reshape(qq * p, d))  # (QP, M, 16)
@@ -108,24 +110,29 @@ def _probe_tables(index: IVFIndex, q: jax.Array, probe_ids: jax.Array
     )
 
 
-def _adc_scan_lists(table_q8: jax.Array, codes: jax.Array) -> jax.Array:
-    """Batched per-list ADC: (Q, P, M, 16) u8 x (Q, P, cap, M//2) -> (Q, P, cap) i32.
+@functools.partial(jax.jit, static_argnames=("impl",))
+def scan_probes(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
+                impl: str = "ref") -> tuple[jax.Array, jax.Array]:
+    """Quantized fine-scan stage: 4-bit ADC over the gathered probed lists.
 
-    Each (query, probe) cell has its own LUT and its own codes, so this is the
-    'memory path' formulation (vectorized gather); the shared-database kernel
-    path lives in repro.kernels and is used by the flat fast-scan index.
+    q: (Q, D); probe_ids: (Q, P) (-1 = no probe). Returns
+    (dists (Q, P, cap) f32, ids (Q, P, cap) i32, -1 = padding).
+
+    Each (query, probe) pair gets its own residual u8 LUT, so the scan is the
+    *grouped* kernel formulation: impl 'ref' is the vectorized jnp gather,
+    'select' the register-resident Pallas select-tree (repro.kernels).
     """
-    unpacked = fs.unpack_codes(codes.reshape(-1, codes.shape[-1]))  # (QPc, M)
-    qq, p, cap, _ = codes.shape
-    m = unpacked.shape[-1]
-    unpacked = unpacked.reshape(qq, p, cap, m)
-    t = table_q8.astype(jnp.int32)  # (Q, P, M, 16)
-    gathered = jnp.take_along_axis(
-        t[:, :, None, :, :],                                  # (Q,P,1,M,16)
-        unpacked[..., None],                                  # (Q,P,cap,M,1)
-        axis=-1,
-    )[..., 0]                                                 # (Q,P,cap,M)
-    return jnp.sum(gathered, axis=-1, dtype=jnp.int32)
+    from repro.kernels import ops  # local import: kernels depend on nothing here
+
+    qlut = _probe_tables(index, q, probe_ids)          # (Q, P, M, 16)
+    codes, ids = index.lists.gather(probe_ids)         # (Q,P,cap,Mh), (Q,P,cap)
+    qq, p, cap, mh = codes.shape
+    acc = ops.fastscan_grouped(
+        qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:]),
+        codes.reshape(qq * p, cap, mh), impl=impl).reshape(qq, p, cap)
+    dists = (qlut.scale[..., None] * acc.astype(jnp.float32)
+             + jnp.sum(qlut.bias, axis=-1)[..., None])  # (Q, P, cap)
+    return dists, ids
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "topk"))
@@ -139,20 +146,12 @@ def search_ivf(index: IVFIndex, q: jax.Array, *, nprobe: int = 8,
         q = q[None]
     coarse_d = pairwise_sqdist(q, index.centroids)            # (Q, nlist)
     _, probe_ids = topk_mod.smallest_k(coarse_d, nprobe)      # (Q, P)
-
-    qlut = _probe_tables(index, q, probe_ids)                 # (Q, P, M, 16)
-    codes = index.list_codes[probe_ids]                       # (Q, P, cap, M//2)
-    ids = index.list_ids[probe_ids]                           # (Q, P, cap)
-    acc = _adc_scan_lists(qlut.table_q8, codes)               # (Q, P, cap) i32
-    dists = (qlut.scale[..., None] * acc.astype(jnp.float32)
-             + jnp.sum(qlut.bias, axis=-1)[..., None])        # (Q, P, cap)
-
+    dists, ids = scan_probes(index, q, probe_ids)             # (Q, P, cap)
     qq = dists.shape[0]
     flat_d = dists.reshape(qq, -1)
     flat_ids = ids.reshape(qq, -1)
     vals, pos = topk_mod.masked_topk(flat_d, flat_ids >= 0, topk)
-    out_ids = jnp.where(pos >= 0, jnp.take_along_axis(flat_ids, jnp.maximum(pos, 0), axis=1), -1)
-    return vals, out_ids
+    return vals, topk_mod.gather_ids(flat_ids, pos)
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "topk"))
@@ -166,15 +165,9 @@ def search_ivf_precomputed_probes(index: IVFIndex, q: jax.Array,
     if q.ndim == 1:
         q = q[None]
     probe_ids = probe_ids[:, :nprobe]
-    qlut = _probe_tables(index, q, probe_ids)
-    codes = index.list_codes[probe_ids]
-    ids = index.list_ids[probe_ids]
-    acc = _adc_scan_lists(qlut.table_q8, codes)
-    dists = (qlut.scale[..., None] * acc.astype(jnp.float32)
-             + jnp.sum(qlut.bias, axis=-1)[..., None])
+    dists, ids = scan_probes(index, q, probe_ids)
     qq = dists.shape[0]
     flat_d = dists.reshape(qq, -1)
     flat_ids = ids.reshape(qq, -1)
     vals, pos = topk_mod.masked_topk(flat_d, flat_ids >= 0, topk)
-    out_ids = jnp.where(pos >= 0, jnp.take_along_axis(flat_ids, jnp.maximum(pos, 0), axis=1), -1)
-    return vals, out_ids
+    return vals, topk_mod.gather_ids(flat_ids, pos)

@@ -1,0 +1,122 @@
+"""Padded inverted-list storage: the reusable half of the IVF index.
+
+Extracted from ``core/ivf.py`` so that any component — the IVF index, the
+unified ``repro.engine`` search pipeline, shard-parallel serving — can own,
+gather, and slice posting lists without going through IVF-specific code.
+
+Layout (TPU rule: every shape static, no raggedness):
+  codes: (nlist, cap, M//2) uint8   nibble-packed PQ codes, zero-padded
+  ids:   (nlist, cap)       int32   global vector ids, -1 = padding
+  sizes: (nlist,)           int32   true occupancy per list (<= cap)
+
+Bucketing is host-side numpy (index build is offline); ``gather`` is pure
+jnp and lowers under jit/pjit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ListStore(NamedTuple):
+    codes: jax.Array  # (nlist, cap, M//2) uint8
+    ids: jax.Array    # (nlist, cap) int32, -1 = padding
+    sizes: jax.Array  # (nlist,) int32
+
+    @property
+    def nlist(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.ids.shape[1]
+
+    def gather(self, probe_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Gather probed lists: probe_ids (..., P) -> codes (..., P, cap, M//2),
+        ids (..., P, cap). Negative probe ids yield fully-padded lists."""
+        safe = jnp.maximum(probe_ids, 0)
+        codes = self.codes[safe]
+        ids = jnp.where((probe_ids >= 0)[..., None], self.ids[safe], -1)
+        return codes, ids
+
+    def probed_sizes(self, probe_ids: jax.Array) -> jax.Array:
+        """True occupancy of each probed list (0 for invalid probes)."""
+        return jnp.where(probe_ids >= 0, self.sizes[jnp.maximum(probe_ids, 0)], 0)
+
+
+def build_lists(assign: np.ndarray, packed_codes: np.ndarray, *, nlist: int,
+                cap: int | None = None, ids: np.ndarray | None = None) -> ListStore:
+    """Bucket packed codes into padded lists (host-side, offline).
+
+    assign: (n,) list assignment per vector; packed_codes: (n, M//2) uint8;
+    ids: optional global id per vector (defaults to arange — shards pass
+    their own offsets). Overflow beyond ``cap`` is dropped, reflected in
+    ``sizes`` (same semantics the IVF build always had).
+    """
+    assign = np.asarray(assign, np.int64)
+    packed = np.asarray(packed_codes, np.uint8)
+    n, mh = packed.shape
+    gids = np.arange(n, dtype=np.int32) if ids is None else np.asarray(ids, np.int32)
+    counts = np.bincount(assign, minlength=nlist)
+    cap_ = int(cap or max(1, counts.max()))
+    list_codes = np.zeros((nlist, cap_, mh), np.uint8)
+    list_ids = np.full((nlist, cap_), -1, np.int32)
+    cursor = np.zeros((nlist,), np.int64)
+    order = np.argsort(assign, kind="stable")
+    for i in order:
+        li = assign[i]
+        c = cursor[li]
+        if c < cap_:
+            list_codes[li, c] = packed[i]
+            list_ids[li, c] = gids[i]
+            cursor[li] += 1
+    return ListStore(
+        codes=jnp.asarray(list_codes),
+        ids=jnp.asarray(list_ids),
+        sizes=jnp.asarray(np.minimum(counts, cap_).astype(np.int32)),
+    )
+
+
+def partition_lists(store: ListStore, centroids: jax.Array, num_shards: int
+                    ) -> tuple[jax.Array, ListStore, jax.Array]:
+    """Round-robin partition of lists into shards for shard-parallel search.
+
+    Returns (centroids (S, L, D), ListStore with leading shard dim S,
+    real (S, L) bool), where L = ceil(nlist / S). Padding lists — marked
+    False in ``real`` — get a far-away centroid (probed only when a shard
+    holds fewer real lists than nprobe), size 0, and all-(-1) ids, so every
+    shard sees identical static shapes. ids stay *global* — the distributed
+    top-k merge needs no re-mapping.
+    """
+    nlist = store.nlist
+    s = int(num_shards)
+    l = -(-nlist // s)
+    pad = s * l - nlist
+    cen = np.asarray(centroids, np.float32)
+    codes = np.asarray(store.codes)
+    ids = np.asarray(store.ids)
+    sizes = np.asarray(store.sizes)
+    if pad:
+        far = np.full((pad, cen.shape[1]), 1e30, np.float32)
+        cen = np.concatenate([cen, far], axis=0)
+        codes = np.concatenate(
+            [codes, np.zeros((pad,) + codes.shape[1:], codes.dtype)], axis=0)
+        ids = np.concatenate([ids, np.full((pad,) + ids.shape[1:], -1, ids.dtype)],
+                             axis=0)
+        sizes = np.concatenate([sizes, np.zeros((pad,), sizes.dtype)], axis=0)
+    # round-robin: shard j owns lists j, j+S, j+2S, ... — balances sizes when
+    # k-means produces a long tail of small clusters
+    perm = np.arange(s * l).reshape(l, s).T.reshape(-1)
+    real = (perm < nlist).reshape(s, l)
+    return (
+        jnp.asarray(cen[perm].reshape(s, l, -1)),
+        ListStore(
+            codes=jnp.asarray(codes[perm].reshape((s, l) + codes.shape[1:])),
+            ids=jnp.asarray(ids[perm].reshape(s, l, -1)),
+            sizes=jnp.asarray(sizes[perm].reshape(s, l)),
+        ),
+        jnp.asarray(real),
+    )

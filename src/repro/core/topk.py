@@ -56,6 +56,16 @@ def masked_topk(dists: jax.Array, valid: jax.Array, k: int
     return vals, idx
 
 
+@jax.jit
+def gather_ids(ids: jax.Array, pos: jax.Array) -> jax.Array:
+    """Map masked_topk positions back to ids, preserving the -1 sentinel.
+
+    ids: (Q, N); pos: (Q, k) from masked_topk (-1 = no candidate).
+    """
+    return jnp.where(
+        pos >= 0, jnp.take_along_axis(ids, jnp.maximum(pos, 0), axis=1), -1)
+
+
 def distributed_topk(local_dists: jax.Array, local_ids: jax.Array, k: int,
                      axis_name: str) -> tuple[jax.Array, jax.Array]:
     """Merge shard-local top-k across a mesh axis (call under shard_map/pmap).

@@ -1,0 +1,18 @@
+"""Unified batched ANN search engine (coarse -> fast-scan -> re-rank -> merge).
+
+Public surface:
+  - ``SearchEngine``      single-host engine, ``search(queries, k)``
+  - ``EngineConfig``      static search knobs (nprobe, rerank_mult, ...)
+  - ``QueryStats``        per-query work counters
+  - ``SearchResult``      (dists, ids, stats)
+  - ``ShardedEngine``     shard-parallel execution + distributed top-k merge
+  - ``exact_rerank``      the exact refinement stage, usable standalone
+"""
+from repro.engine.engine import (  # noqa: F401
+    EngineConfig,
+    QueryStats,
+    SearchEngine,
+    SearchResult,
+)
+from repro.engine.rerank import exact_distances, exact_rerank  # noqa: F401
+from repro.engine.sharded import ShardedEngine  # noqa: F401

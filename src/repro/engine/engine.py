@@ -1,0 +1,149 @@
+"""Unified batched search engine: coarse -> 4-bit fast-scan -> exact re-rank.
+
+The single query path a server calls (``SearchEngine.search``), composing the
+pieces that previously lived disconnected across ``core``:
+
+  1. coarse: pluggable probe selection over the IVF centroids — flat
+     brute-force, HNSW graph routing (paper Table 1), or k-means tree;
+  2. scan: the 4-bit fast-scan ADC over the gathered posting lists
+     (``core.ivf.scan_probes``, grouped Pallas kernel underneath);
+  3. re-rank: exact float refinement of the top ``rerank_mult * k``
+     quantized candidates (``engine.rerank``), Quicker-ADC style;
+  4. merge: final masked top-k (single host) or the distributed 2k-scalar
+     shard merge (``engine.sharded`` over ``core.topk.distributed_topk``).
+
+Every stage is a jit'd function of static shapes; ``search`` is stage
+composition, so its results are *identical* to calling the stages by hand
+(tested). A ``QueryStats`` record rides along for observability: how many
+lists were probed, codes scanned, candidates re-ranked — per query.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coarse as coarse_mod
+from repro.core import ivf as ivf_mod
+from repro.engine import rerank as rerank_mod
+
+COARSE_KINDS = ("flat", "hnsw", "tree")
+
+
+class EngineConfig(NamedTuple):
+    """Static search-time knobs (all shapes derive from these => jit-stable)."""
+
+    nprobe: int = 8         # lists scanned per query
+    rerank_mult: int = 0    # refine rerank_mult*k candidates exactly; 0 = off
+    scan_impl: str = "ref"  # grouped ADC impl: 'ref' (jnp) | 'select' (Pallas)
+    ef: int = 64            # HNSW beam width (hnsw coarse only)
+
+
+class QueryStats(NamedTuple):
+    """Per-query work counters threaded through the pipeline."""
+
+    lists_probed: jax.Array   # (Q,) i32  valid probes issued
+    codes_scanned: jax.Array  # (Q,) i32  true occupancy of scanned lists
+    reranked: jax.Array       # (Q,) i32  candidates refined exactly
+
+
+class SearchResult(NamedTuple):
+    dists: jax.Array  # (Q, k) f32 ascending
+    ids: jax.Array    # (Q, k) i32 global ids, -1 = no candidate
+    stats: QueryStats
+
+
+class SearchEngine:
+    """IVF + fast-scan + exact re-rank behind one ``search(queries, k)``.
+
+    ``base`` (the raw float vectors) is optional: without it the engine
+    degrades gracefully to pure quantized search (re-rank requests are
+    rejected loudly rather than silently skipped).
+    """
+
+    def __init__(self, index: ivf_mod.IVFIndex, *, base: jax.Array | None = None,
+                 coarse: str | object = "flat",
+                 config: EngineConfig | None = None, hnsw_m: int = 16,
+                 ef_construction: int = 64):
+        self.index = index
+        self.base = base
+        self.config = config or EngineConfig()
+        if isinstance(coarse, str):
+            if coarse == "flat":
+                self.coarse = coarse_mod.build_flat(index.centroids)
+            elif coarse == "hnsw":
+                self.coarse = coarse_mod.build_hnsw_coarse(
+                    index.centroids, m=hnsw_m, ef_construction=ef_construction)
+            elif coarse == "tree":
+                self.coarse = coarse_mod.build_tree(jax.random.PRNGKey(0),
+                                                    index.centroids)
+            else:
+                raise ValueError(
+                    f"unknown coarse kind {coarse!r}; want one of {COARSE_KINDS}")
+        else:
+            self.coarse = coarse  # prebuilt object with .search(q, nprobe)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, key: jax.Array, train_x: jax.Array, base_x: jax.Array, *,
+              m: int, nlist: int, coarse: str = "flat",
+              config: EngineConfig | None = None, cap: int | None = None,
+              coarse_iters: int = 20, pq_iters: int = 25,
+              keep_base: bool = True, **coarse_kw) -> "SearchEngine":
+        """Train + bucket + wrap: one call from raw vectors to a live engine."""
+        index = ivf_mod.build_ivf(key, train_x, base_x, m=m, nlist=nlist,
+                                  cap=cap, coarse_iters=coarse_iters,
+                                  pq_iters=pq_iters)
+        return cls(index, base=base_x if keep_base else None, coarse=coarse,
+                   config=config, **coarse_kw)
+
+    # -- stages (each individually jit'd; search is their composition) ------
+
+    def select_probes(self, q: jax.Array, nprobe: int) -> jax.Array:
+        """Stage 1 — coarse: pick the nprobe most promising lists."""
+        if isinstance(self.coarse, coarse_mod.HNSWCoarse):
+            _, probes = self.coarse.search(q, nprobe, ef=max(self.config.ef,
+                                                             nprobe))
+            return probes
+        _, probes = self.coarse.search(q, nprobe)
+        return probes
+
+    def scan(self, q: jax.Array, probe_ids: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+        """Stage 2 — quantized scan: flattened ADC candidates per query."""
+        dists, ids = ivf_mod.scan_probes(self.index, q, probe_ids,
+                                         impl=self.config.scan_impl)
+        qq = dists.shape[0]
+        return dists.reshape(qq, -1), ids.reshape(qq, -1)
+
+    # -- the unified entry point -------------------------------------------
+
+    def search(self, queries: jax.Array, k: int = 10, *,
+               nprobe: int | None = None, rerank_mult: int | None = None
+               ) -> SearchResult:
+        """Batched ANN search. queries: (Q, D) or (D,). Returns SearchResult.
+
+        ``rerank_mult`` overrides the config: r > 0 refines the top r*k
+        quantized candidates with exact float distances before the final
+        merge (requires ``base``); 0 returns pure fast-scan results.
+        """
+        q = queries[None] if queries.ndim == 1 else queries
+        nprobe = self.config.nprobe if nprobe is None else nprobe
+        r = self.config.rerank_mult if rerank_mult is None else rerank_mult
+        if r and self.base is None:
+            raise ValueError("exact re-rank requested but engine holds no "
+                             "base vectors (build with keep_base=True)")
+
+        probes = self.select_probes(q, nprobe)          # (Q, P)
+        flat_d, flat_ids = self.scan(q, probes)         # (Q, P*cap)
+        vals, out_ids, reranked = rerank_mod.finalize_candidates(
+            flat_d, flat_ids, self.base, q, k, r)
+
+        stats = QueryStats(
+            lists_probed=jnp.sum((probes >= 0).astype(jnp.int32), axis=1),
+            codes_scanned=jnp.sum(self.index.lists.probed_sizes(probes), axis=1),
+            reranked=reranked,
+        )
+        return SearchResult(dists=vals, ids=out_ids, stats=stats)

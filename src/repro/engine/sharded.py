@@ -1,0 +1,130 @@
+"""Shard-parallel engine execution over a device mesh.
+
+The database's posting lists are partitioned round-robin into S shards
+(``core.lists.partition_lists``); every shard runs the same local pipeline —
+flat coarse over *its* centroids, grouped 4-bit scan, optional exact re-rank —
+and the shard-local top-k results meet in ``core.topk.distributed_topk``:
+an all-gather of 2k scalars per device, then one final re-top-k. ids are
+global throughout, so the merge needs no re-mapping.
+
+Two drivers over the same per-shard function:
+  - ``mesh=None``: ``jax.vmap`` with a named axis — S arbitrary, runs on one
+    host; this is also how the merge is unit-tested.
+  - ``mesh=...``: ``shard_map`` over a 1-D device mesh (axis ``"shards"``),
+    one shard per device — the production layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ivf as ivf_mod
+from repro.core import topk as topk_mod
+from repro.core.kmeans import pairwise_sqdist
+from repro.core.lists import ListStore, partition_lists
+from repro.engine import rerank as rerank_mod
+from repro.engine.engine import EngineConfig, QueryStats, SearchEngine, SearchResult
+
+AXIS = "shards"
+
+
+def _local_search(centroids, lists: ListStore, real, codebook, base, q, *,
+                  k: int, nprobe: int, r: int, scan_impl: str):
+    """One shard's pipeline + the cross-shard merge. Runs under a named axis."""
+    index = ivf_mod.IVFIndex(centroids=centroids, codebook=codebook, lists=lists)
+    nprobe_local = min(nprobe, centroids.shape[0])
+    coarse_d = pairwise_sqdist(q, centroids)
+    _, probes = topk_mod.smallest_k(coarse_d, nprobe_local)
+    dists, ids = ivf_mod.scan_probes(index, q, probes, impl=scan_impl)
+    qq = dists.shape[0]
+    vals, out_ids, reranked = rerank_mod.finalize_candidates(
+        dists.reshape(qq, -1), ids.reshape(qq, -1), base, q, k, r)
+    mvals, mids = topk_mod.distributed_topk(vals, out_ids, k, AXIS)
+    stats = QueryStats(
+        # count only probes of real lists — a shard with fewer real lists
+        # than nprobe inevitably "probes" padding, which is zero work
+        lists_probed=jax.lax.psum(
+            jnp.sum(real[probes].astype(jnp.int32), axis=1), AXIS),
+        codes_scanned=jax.lax.psum(
+            jnp.sum(lists.probed_sizes(probes), axis=1), AXIS),
+        reranked=jax.lax.psum(reranked, AXIS),
+    )
+    return mvals, mids, stats
+
+
+class ShardedEngine:
+    """A ``SearchEngine`` whose lists are partitioned across S shards.
+
+    Note: every shard selects probes with *flat* brute-force coarse over its
+    local centroids (each shard holds only nlist/S of them, so the wrapped
+    engine's HNSW/tree coarse structure does not partition); the wrapped
+    engine's coarse quantizer is intentionally not carried over.
+
+    Known limit: ``base`` (for re-rank) is replicated to every shard, so the
+    re-rank path is O(N*D) per device. Partitioning base rows by shard
+    list-membership is a ROADMAP item; until then, paper-scale sharded
+    deployments should re-rank on the caller after the merge or run with
+    rerank_mult=0.
+    """
+
+    def __init__(self, engine: SearchEngine, num_shards: int):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = int(num_shards)
+        self.codebook = engine.index.codebook
+        self.base = engine.base
+        self.config = engine.config
+        self.centroids_s, self.lists_s, self.real_s = partition_lists(
+            engine.index.lists, engine.index.centroids, self.num_shards)
+
+    def search(self, queries: jax.Array, k: int = 10, *,
+               nprobe: int | None = None, rerank_mult: int | None = None,
+               mesh: jax.sharding.Mesh | None = None) -> SearchResult:
+        """Batched search with the distributed shard merge.
+
+        Semantics note vs the unsharded engine: each shard probes ``nprobe``
+        of *its own* lists, so up to S*nprobe lists are scanned in total —
+        recall at a given nprobe is >= the single-shard engine's.
+        """
+        q = queries[None] if queries.ndim == 1 else queries
+        nprobe = self.config.nprobe if nprobe is None else nprobe
+        r = self.config.rerank_mult if rerank_mult is None else rerank_mult
+        if r and self.base is None:
+            raise ValueError("exact re-rank requested but engine holds no "
+                             "base vectors (build with keep_base=True)")
+        fn = functools.partial(_local_search, k=k, nprobe=nprobe, r=r,
+                               scan_impl=self.config.scan_impl)
+
+        if mesh is None:
+            mvals, mids, stats = jax.vmap(
+                fn, in_axes=(0, 0, 0, None, None, None), axis_name=AXIS,
+            )(self.centroids_s, self.lists_s, self.real_s, self.codebook,
+              self.base, q)
+            # merge output is replicated across the shard axis; take shard 0
+            return SearchResult(mvals[0], mids[0],
+                                QueryStats(*(s[0] for s in stats)))
+
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        if mesh.shape[AXIS] != self.num_shards:
+            raise ValueError(
+                f"mesh axis {AXIS!r} has {mesh.shape[AXIS]} devices but the "
+                f"engine holds {self.num_shards} shards")
+
+        def per_device(cen, lists, real, cb, base, qq):
+            # each device owns exactly one shard => leading block dim is 1
+            out_v, out_i, st = fn(cen[0], jax.tree.map(lambda x: x[0], lists),
+                                  real[0], cb, base, qq)
+            return out_v[None], out_i[None], jax.tree.map(lambda x: x[None], st)
+
+        sharded = shard_map(
+            per_device, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P()),
+            out_specs=(P(AXIS), P(AXIS), P(AXIS)),
+        )
+        mvals, mids, stats = sharded(self.centroids_s, self.lists_s,
+                                     self.real_s, self.codebook, self.base, q)
+        return SearchResult(mvals[0], mids[0], QueryStats(*(s[0] for s in stats)))

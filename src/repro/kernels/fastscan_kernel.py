@@ -59,6 +59,27 @@ def _unpack_nibbles_i32(packed_u8: jax.Array) -> jax.Array:
 # Variant A: select-tree (VPU)
 # ---------------------------------------------------------------------------
 
+def _select_tree_acc(t: jax.Array, codes: jax.Array) -> jax.Array:
+    """Select-tree ADC accumulation: t (M, 16) i32 LUT x codes (tn, M) i32
+    -> (tn,) i32 sums.
+
+    A 16-way LUT lookup decomposed into log2(16) = 4 levels of 2-way vector
+    selects (the paper's 256-bit shuffle via 2x128-bit shuffles, one level
+    deeper on TPU)."""
+    b0 = (codes & 1).astype(jnp.bool_)
+    b1 = (codes & 2).astype(jnp.bool_)
+    b2 = (codes & 4).astype(jnp.bool_)
+    b3 = (codes & 8).astype(jnp.bool_)
+
+    lo8 = t[None, :, 0:8]   # (1, M, 8) broadcast over the N tile
+    hi8 = t[None, :, 8:16]
+    s3 = jnp.where(b3[:, :, None], hi8, lo8)          # (tn, M, 8)
+    s2 = jnp.where(b2[:, :, None], s3[..., 4:8], s3[..., 0:4])  # (tn, M, 4)
+    s1 = jnp.where(b1[:, :, None], s2[..., 2:4], s2[..., 0:2])  # (tn, M, 2)
+    s0 = jnp.where(b0, s1[..., 1], s1[..., 0])        # (tn, M)
+    return jnp.sum(s0, axis=-1, dtype=jnp.int32)
+
+
 def _select_tree_kernel(table_ref, codes_ref, out_ref):
     """One query row x one N tile.
 
@@ -68,21 +89,7 @@ def _select_tree_kernel(table_ref, codes_ref, out_ref):
     """
     codes = _unpack_nibbles_i32(codes_ref[...])  # (tn, M)
     t = table_ref[0].astype(jnp.int32)  # (M, 16)
-
-    b0 = (codes & 1).astype(jnp.bool_)
-    b1 = (codes & 2).astype(jnp.bool_)
-    b2 = (codes & 4).astype(jnp.bool_)
-    b3 = (codes & 8).astype(jnp.bool_)
-
-    # 4-level binary select tree == one 16-way shuffle emulated with 2-way
-    # selects (the paper's trick, one level deeper on TPU).
-    lo8 = t[None, :, 0:8]   # (1, M, 8) broadcast over the N tile
-    hi8 = t[None, :, 8:16]
-    s3 = jnp.where(b3[:, :, None], hi8, lo8)          # (tn, M, 8)
-    s2 = jnp.where(b2[:, :, None], s3[..., 4:8], s3[..., 0:4])  # (tn, M, 4)
-    s1 = jnp.where(b1[:, :, None], s2[..., 2:4], s2[..., 0:2])  # (tn, M, 2)
-    s0 = jnp.where(b0, s1[..., 1], s1[..., 0])        # (tn, M)
-    out_ref[...] = jnp.sum(s0, axis=-1, dtype=jnp.int32)[None, :]
+    out_ref[...] = _select_tree_acc(t, codes)[None, :]
 
 
 def fastscan_select_tree(table_q8: jax.Array, packed_codes: jax.Array, *,
@@ -101,6 +108,45 @@ def fastscan_select_tree(table_q8: jax.Array, packed_codes: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((1, tile_n), lambda qi, ni: (qi, ni)),
         out_shape=jax.ShapeDtypeStruct((q, n), jnp.int32),
+        interpret=interpret,
+    )(table_q8, packed_codes)
+
+
+def _select_tree_grouped_kernel(table_ref, codes_ref, out_ref):
+    """One (query, probe) group x one N tile — each group has its OWN LUT
+    *and* its own code tile (gathered IVF lists), unlike the shared-database
+    variant above.
+
+    table_ref: (1, M, 16) u8 block; codes_ref: (1, tn, M//2) u8 block;
+    out_ref: (1, tn) i32 block.
+    """
+    codes = _unpack_nibbles_i32(codes_ref[0])  # (tn, M)
+    t = table_ref[0].astype(jnp.int32)  # (M, 16)
+    out_ref[...] = _select_tree_acc(t, codes)[None, :]
+
+
+def fastscan_select_tree_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
+                                 tile_n: int = TILE_N, interpret: bool = True
+                                 ) -> jax.Array:
+    """Grouped ADC: (G, M, 16) u8 x (G, N, M//2) u8 -> (G, N) i32.
+
+    The IVF 'memory path' made register-resident: group g = one
+    (query, probed-list) pair whose residual LUT scans only that list's code
+    tile. N (the padded list capacity) must be a tile_n multiple.
+    """
+    g, m, k = table_q8.shape
+    gc, n, mh = packed_codes.shape
+    assert k == 16 and mh * 2 == m and gc == g and n % tile_n == 0
+    grid = (g, n // tile_n)
+    return pl.pallas_call(
+        _select_tree_grouped_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, 16), lambda gi, ni: (gi, 0, 0)),
+            pl.BlockSpec((1, tile_n, mh), lambda gi, ni: (gi, ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_n), lambda gi, ni: (gi, ni)),
+        out_shape=jax.ShapeDtypeStruct((g, n), jnp.int32),
         interpret=interpret,
     )(table_q8, packed_codes)
 

@@ -70,6 +70,31 @@ def fastscan_distances(table_q8: jax.Array, packed_codes: jax.Array, *,
     return acc[:q, :n]
 
 
+@functools.partial(jax.jit, static_argnames=("impl", "tile_n", "interpret"))
+def fastscan_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
+                     impl: str = "ref", tile_n: int = 0,
+                     interpret: bool | None = None) -> jax.Array:
+    """Grouped ADC for gathered IVF lists: (G, M, 16) u8 x (G, cap, M//2) u8
+    -> (G, cap) i32. Group g = one (query, probed-list) pair.
+
+    impl: 'ref' (vectorized jnp gather — fastest off-TPU) | 'select'
+    (register-resident Pallas select-tree). Bit-identical.
+    """
+    g, m, k = table_q8.shape
+    cap = packed_codes.shape[1]
+    assert k == 16, f"4-bit PQ requires K=16, got {k}"
+    if impl == "ref":
+        return ref_mod.fastscan_grouped_ref(table_q8, packed_codes)
+    if impl != "select":
+        raise ValueError(f"unknown grouped impl {impl!r}; want 'ref' or 'select'")
+    interp = _default_interpret() if interpret is None else interpret
+    tn = tile_n or _auto_tile(cap, fk.TILE_N)
+    codes_p = _pad_to(packed_codes, 1, tn)
+    acc = fk.fastscan_select_tree_grouped(table_q8, codes_p, tile_n=tn,
+                                          interpret=interp)
+    return acc[:, :cap]
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def fastscan_blockmin(table_q8: jax.Array, packed_codes: jax.Array, *,
                       block: int = 1024, interpret: bool | None = None

@@ -37,6 +37,23 @@ def fastscan_distances_ref(table_q8: jax.Array, packed_codes: jax.Array) -> jax.
     return jax.vmap(per_query)(t)
 
 
+def fastscan_grouped_ref(table_q8: jax.Array, packed_codes: jax.Array) -> jax.Array:
+    """Grouped ADC oracle: each group has its own LUT and its own codes.
+
+    table_q8: (G, M, 16) uint8; packed_codes: (G, N, M//2) uint8.
+    Returns (G, N) int32: acc[g, n] = sum_m table_q8[g, m, codes[g, n, m]].
+    """
+    g, n, mh = packed_codes.shape
+    codes = unpack_nibbles(packed_codes.reshape(g * n, mh)).reshape(g, n, 2 * mh)
+    t = table_q8.astype(jnp.int32)  # (G, M, 16)
+    gathered = jnp.take_along_axis(
+        t[:, None, :, :],          # (G, 1, M, 16)
+        codes[..., None],          # (G, N, M, 1)
+        axis=-1,
+    )[..., 0]                      # (G, N, M)
+    return jnp.sum(gathered, axis=-1, dtype=jnp.int32)
+
+
 def fastscan_block_min_ref(table_q8: jax.Array, packed_codes: jax.Array,
                            block: int) -> tuple[jax.Array, jax.Array]:
     """Fused scan + per-block argmin oracle.

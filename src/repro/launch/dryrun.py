@@ -188,7 +188,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.launch.hlo_analysis import xla_cost_dict
+    cost = xla_cost_dict(compiled)
     result["lower_s"] = round(t_lower, 2)
     result["compile_s"] = round(t_compile, 2)
     result["status"] = "ok"

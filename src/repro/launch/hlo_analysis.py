@@ -51,6 +51,19 @@ WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
 _COLLECTIVE_BASES = tuple(WIRE_FACTOR)
 
 
+def xla_cost_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns one dict; newer versions return a list with one dict
+    per partition (often length 1). Always hand back a flat dict ({} when
+    the backend reports nothing).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
     """(elements, bytes) summed over all arrays in an HLO type string."""
     elems = total = 0

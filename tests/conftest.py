@@ -1,0 +1,74 @@
+"""Session shims: survive a missing ``hypothesis`` and gate ``tpu`` tests.
+
+The container that runs tier-1 CI does not ship ``hypothesis``. Instead of
+letting three modules die at collection (the seed-state failure mode), we
+install a minimal stand-in: modules still import, plain tests in them still
+run, and each ``@given`` property test individually reports as skipped.
+With the real package installed (``pip install -r requirements-dev.txt``)
+this shim is inert.
+"""
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import sys
+import types
+
+import pytest
+
+# `PYTHONPATH=src` is the documented invocation; make bare `pytest` work too.
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+if not HAVE_HYPOTHESIS:
+    class _AnyStrategy:
+        """Absorbs any strategy-construction call chain."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _given(*a, **k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.pytestmark = list(getattr(fn, "pytestmark", []))
+            return skipper
+        return deco
+
+    def _settings(*a, **k):
+        return lambda fn: fn
+
+    _settings.register_profile = lambda *a, **k: None
+    _settings.load_profile = lambda *a, **k: None
+
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.__getattr__ = lambda name: _AnyStrategy()
+    hyp.given = _given
+    hyp.settings = _settings
+    hyp.assume = lambda *a, **k: True
+    hyp.note = lambda *a, **k: None
+    hyp.HealthCheck = _AnyStrategy()
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip ``tpu``-marked tests unless a real TPU backend is present."""
+    import jax
+
+    if jax.default_backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(reason="requires a TPU backend")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)

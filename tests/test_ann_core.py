@@ -88,6 +88,7 @@ def test_fastscan_impls_agree():
 # top-k
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(n=st.integers(10, 3000), k=st.integers(1, 10), seed=st.integers(0, 10**6))
 def test_property_tournament_topk_matches_sort(n, k, seed):

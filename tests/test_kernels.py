@@ -79,6 +79,7 @@ def test_blockmin_ragged_padding_is_maskable():
         np.asarray(got_min)[in_range])
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     q=st.integers(1, 9),
@@ -95,6 +96,7 @@ def test_property_kernels_bitexact(q, n, mh, seed):
         np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(n=st.integers(1, 64), mh=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
 def test_property_pack_unpack_roundtrip(n, mh, seed):
@@ -106,6 +108,7 @@ def test_property_pack_unpack_roundtrip(n, mh, seed):
     np.testing.assert_array_equal(np.asarray(ref.unpack_nibbles(packed)), np.asarray(codes))
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(q=st.integers(1, 4), mh=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
 def test_property_lut_quantization_error_bound(q, mh, seed):

@@ -75,7 +75,7 @@ def test_analyzer_scan_trip_count():
     want = 2 * 10 * 64 * 32 * 32
     assert want <= costs.flops <= want * 1.2, costs.flops
     # XLA's own analysis undercounts the while body (the bug we fix)
-    xla = comp.cost_analysis()["flops"]
+    xla = ha.xla_cost_dict(comp)["flops"]
     assert xla < want / 2
 
 
@@ -100,7 +100,7 @@ def test_analyzer_remat_counts_recompute():
     # recomputed fwd matmul + dw matmul (fwd value itself is DCE'd by grad)
     assert costs_g.flops >= 1.9 * one_fwd
     # and our count agrees with XLA's within 5% on a while-free program
-    assert abs(costs_g.flops - comp_g.cost_analysis()["flops"]) < 0.05 * costs_g.flops
+    assert abs(costs_g.flops - ha.xla_cost_dict(comp_g)["flops"]) < 0.05 * costs_g.flops
 
 
 def test_analyzer_collective_wire_factors():
