@@ -1,0 +1,107 @@
+"""Serving-layer benchmark: offered-load sweep through the micro-batcher.
+
+Measures what the kernel benchmarks cannot: end-to-end request latency when
+queries arrive one at a time and the ``repro.serving`` loop must batch them
+dynamically. For each offered load (Poisson arrivals at a target QPS) we
+drive N requests through ``ServingLoop`` -> ``SearchEngine.search_jit`` and
+report:
+
+  - p50 / p99 submit->result latency (the ``us_per_call`` CSV column is p50);
+  - achieved throughput (completed requests / wall time);
+  - mean batch occupancy (real rows / dispatched rows — how well the
+    batcher fills its shape buckets at that load);
+  - fused-jit compiles observed during the timed run (should be 0 after
+    warmup: steady-state serving never recompiles).
+
+Also emits one ``serve_fused_speedup`` row comparing staged ``search``
+vs fused ``search_jit`` dispatch latency at Q=1 — the per-request win of
+tracing the whole pipeline into a single XLA program.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.data import vectors
+from repro.engine import SearchEngine
+from repro.serving import ServingLoop
+
+
+def _percentile(xs: list[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def _drive(loop: ServingLoop, queries: np.ndarray, qps: float,
+           n_requests: int, rng: np.random.Generator) -> dict:
+    """Submit Poisson arrivals at ``qps``; return latency/occupancy numbers."""
+    m0 = loop.metrics()
+    futs = []
+    t_start = time.monotonic()
+    t_next = t_start
+    for i in range(n_requests):
+        now = time.monotonic()
+        if t_next > now:
+            time.sleep(t_next - now)
+        futs.append(loop.submit(queries[i % queries.shape[0]], k=10,
+                                tenant=f"tenant{i % 4}"))
+        t_next += rng.exponential(1.0 / qps)
+    lats = [f.result(timeout=60).latency_s for f in futs]
+    wall = time.monotonic() - t_start
+    m1 = loop.metrics()
+    rows = m1.rows_served - m0.rows_served
+    padded = m1.rows_padded - m0.rows_padded
+    return {
+        "p50_s": _percentile(lats, 50),
+        "p99_s": _percentile(lats, 99),
+        "qps_achieved": n_requests / wall,
+        "occupancy": rows / (rows + padded) if rows + padded else 0.0,
+        "compiles": m1.compiles - m0.compiles,
+    }
+
+
+def main() -> None:
+    n_requests = 64 if common.SMOKE else 256
+    ds = vectors.make_sift_like(n=common.N_BASE, nt=common.N_TRAIN,
+                                nq=max(common.N_QUERY, 128), d=64)
+    nlist = max(16, int(math.sqrt(ds.base.shape[0])))
+    engine = SearchEngine.build(jax.random.PRNGKey(0), ds.train, ds.base,
+                                m=8, nlist=nlist, coarse_iters=8, pq_iters=8)
+    rng = np.random.default_rng(0)
+    queries = np.asarray(ds.queries, np.float32)
+
+    # staged-vs-fused single-dispatch latency at Q=1 (the small-batch regime
+    # the fused path exists for)
+    q1 = queries[:1]
+    t_staged = common.time_call(
+        lambda: engine.search(q1, 10, rerank_mult=4).ids, iters=5)
+    t_fused = common.time_call(
+        lambda: engine.search_jit(q1, 10, rerank_mult=4).ids, iters=5)
+    common.emit("serve_fused_speedup", t_fused,
+                f"staged_us={t_staged * 1e6:.1f};"
+                f"speedup={t_staged / max(t_fused, 1e-12):.2f}x")
+
+    loop = ServingLoop(engine, rerank_mult=4, max_wait_s=0.005)
+    loop.start(warmup=True)
+    try:
+        # calibrate offered loads off the fused dispatch time so the sweep
+        # spans under- and over-subscribed regimes on any machine
+        base_qps = 1.0 / max(t_fused, 1e-6)
+        for label, qps in (("light", 0.25 * base_qps),
+                           ("heavy", 2.0 * base_qps)):
+            r = _drive(loop, queries, qps, n_requests, rng)
+            common.emit(
+                f"serve_load_{label}", r["p50_s"],
+                f"p99_us={r['p99_s'] * 1e6:.1f};"
+                f"qps={r['qps_achieved']:.0f};"
+                f"occupancy={r['occupancy']:.2f};"
+                f"compiles={r['compiles']}")
+    finally:
+        loop.stop()
+
+
+if __name__ == "__main__":
+    main()

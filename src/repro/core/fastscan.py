@@ -10,6 +10,15 @@ The paper's fast path needs three ingredients:
 
 This module owns (1) and (2) plus the code layout, and exposes the search API
 that dispatches to the kernels.
+
+Conventions (shared across ``repro.core``, see docs/architecture.md):
+  shapes  all static — codes padded to fixed N, tables fixed (M, 16);
+          queries (Q, D) or (D,) auto-promoted to (1, D)
+  dtypes  queries/tables/distances float32; quantized LUT entries uint8;
+          packed codes uint8 (two 4-bit codes per byte, lo nibble = even m);
+          int accumulations int32
+  -1 id   not produced here (full-database scan has no padding); the IVF
+          layer introduces -1 sentinel ids and masks on ``id >= 0``
 """
 from __future__ import annotations
 

@@ -13,6 +13,15 @@ component shared with the unified engine (``repro.engine``) and the
 shard-parallel path. ``scan_probes`` is the quantized-scan stage on its own:
 (query, probe_ids) -> per-candidate ADC distances, reused verbatim by the
 engine so ``SearchEngine.search`` and hand-composition are identical.
+
+Conventions (shared across ``repro.core``, see docs/architecture.md):
+  shapes  all static — lists padded to ``cap``, probe sets to ``nprobe``;
+          queries (Q, D) or (D,) auto-promoted to (1, D)
+  dtypes  queries/centroids/distances float32; packed codes uint8;
+          ids and probe ids int32
+  -1 id   sentinel everywhere — probe_ids entry -1 = no probe (yields a
+          fully-padded list), candidate/result id -1 = padding/no candidate
+          (distance +inf); consumers mask on ``id >= 0``
 """
 from __future__ import annotations
 

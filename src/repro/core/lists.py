@@ -11,6 +11,14 @@ Layout (TPU rule: every shape static, no raggedness):
 
 Bucketing is host-side numpy (index build is offline); ``gather`` is pure
 jnp and lowers under jit/pjit.
+
+Conventions (shared across ``repro.core``, see docs/architecture.md):
+  shapes  all static — every list padded to ``cap``; gathers preserve the
+          leading probe-set shape
+  dtypes  packed codes uint8; ids/sizes int32
+  -1 id   sentinel — a padded list slot or an invalid (negative) probe id
+          gathers to id -1; code bytes at padded slots are zero and must be
+          masked by the id, never interpreted
 """
 from __future__ import annotations
 

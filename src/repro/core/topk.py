@@ -3,6 +3,14 @@
 The distributed variant is how a 1000+-node deployment merges shard-local
 fast-scan results: each device scans its own code shard, keeps k candidates,
 and only 2k scalars per device cross the wire (all-gather + re-top-k).
+
+Conventions (shared across ``repro.core``, see docs/architecture.md):
+  shapes  all static — results always exactly k wide, padded when fewer
+          candidates exist
+  dtypes  distances float32 (ascending on return); ids/positions int32
+  -1 id   sentinel — ``masked_topk`` emits position -1 (distance +inf) past
+          the valid candidates and ``gather_ids`` propagates it, so -1 ids
+          survive every merge layer unchanged
 """
 from __future__ import annotations
 

@@ -1,18 +1,23 @@
 """Unified batched ANN search engine (coarse -> fast-scan -> re-rank -> merge).
 
 Public surface:
-  - ``SearchEngine``      single-host engine, ``search(queries, k)``
-  - ``EngineConfig``      static search knobs (nprobe, rerank_mult, ...)
+  - ``SearchEngine``      single-host engine; ``search`` (staged) and
+    ``search_jit`` (whole pipeline fused in one ``jax.jit`` — serving path)
+  - ``EngineConfig``      static search knobs (nprobe, rerank_mult, ...),
+    validated against the coarse quantizer at construction
   - ``QueryStats``        per-query work counters
   - ``SearchResult``      (dists, ids, stats)
   - ``ShardedEngine``     shard-parallel execution + distributed top-k merge
   - ``exact_rerank``      the exact refinement stage, usable standalone
+  - ``fused_cache_size``  compiled-entry count of the shared fused-jit cache
 """
 from repro.engine.engine import (  # noqa: F401
     EngineConfig,
     QueryStats,
     SearchEngine,
     SearchResult,
+    fused_cache_size,
+    validate_config,
 )
 from repro.engine.rerank import exact_distances, exact_rerank  # noqa: F401
 from repro.engine.sharded import ShardedEngine  # noqa: F401

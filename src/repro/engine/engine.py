@@ -1,7 +1,7 @@
 """Unified batched search engine: coarse -> 4-bit fast-scan -> exact re-rank.
 
-The single query path a server calls (``SearchEngine.search``), composing the
-pieces that previously lived disconnected across ``core``:
+The single query path a server calls, composing the pieces that previously
+lived disconnected across ``core``:
 
   1. coarse: pluggable probe selection over the IVF centroids — flat
      brute-force, HNSW graph routing (paper Table 1), or k-means tree;
@@ -12,13 +12,30 @@ pieces that previously lived disconnected across ``core``:
   4. merge: final masked top-k (single host) or the distributed 2k-scalar
      shard merge (``engine.sharded`` over ``core.topk.distributed_topk``).
 
-Every stage is a jit'd function of static shapes; ``search`` is stage
-composition, so its results are *identical* to calling the stages by hand
-(tested). A ``QueryStats`` record rides along for observability: how many
-lists were probed, codes scanned, candidates re-ranked — per query.
+Every stage is a *pure function* of (coarse pytree, index pytree, arrays) —
+see ``coarse_probes`` / ``scan_candidates`` / ``make_stats`` — and the engine
+offers two compositions of the same stage functions:
+
+  - ``SearchEngine.search``      staged: each stage dispatches on its own
+    (stages are individually jit'd); convenient for debugging and for
+    composing custom pipelines by hand.
+  - ``SearchEngine.search_jit``  fused: the whole pipeline in ONE ``jax.jit``
+    with ``(k, nprobe, rerank_mult, scan_impl, ef)`` static. One XLA program,
+    one dispatch — the serving path (``repro.serving``). Results are
+    bit-identical to the staged path (tested).
+
+Because the fused jit lives at module level, its compile cache is shared by
+every engine in the process and keyed only on static knobs + input shapes:
+steady-state serving over a fixed set of batch-shape buckets never
+recompiles. ``fused_cache_size()`` exposes the cache occupancy so tests and
+serving metrics can assert "at most one compile per shape bucket".
+
+A ``QueryStats`` record rides along for observability: how many lists were
+probed, codes scanned, candidates re-ranked — per query.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -29,6 +46,7 @@ from repro.core import ivf as ivf_mod
 from repro.engine import rerank as rerank_mod
 
 COARSE_KINDS = ("flat", "hnsw", "tree")
+SCAN_IMPLS = ("ref", "select")
 
 
 class EngineConfig(NamedTuple):
@@ -38,6 +56,9 @@ class EngineConfig(NamedTuple):
     rerank_mult: int = 0    # refine rerank_mult*k candidates exactly; 0 = off
     scan_impl: str = "ref"  # grouped ADC impl: 'ref' (jnp) | 'select' (Pallas)
     ef: int = 64            # HNSW beam width (hnsw coarse only)
+
+
+_EF_DEFAULT = EngineConfig._field_defaults["ef"]
 
 
 class QueryStats(NamedTuple):
@@ -54,12 +75,114 @@ class SearchResult(NamedTuple):
     stats: QueryStats
 
 
+def validate_config(config: EngineConfig, *, coarse_kind: str,
+                    has_base: bool) -> None:
+    """Reject nonsense config/coarse combinations at construction time.
+
+    Raises ``ValueError`` on knobs that would otherwise be silently ignored
+    (``ef`` without HNSW coarse) or blow up on the first search
+    (``rerank_mult > 0`` without base vectors, unknown ``scan_impl``).
+    """
+    if config.nprobe < 1:
+        raise ValueError(f"EngineConfig.nprobe must be >= 1, got {config.nprobe}")
+    if config.rerank_mult < 0:
+        raise ValueError(
+            f"EngineConfig.rerank_mult must be >= 0, got {config.rerank_mult}")
+    if config.scan_impl not in SCAN_IMPLS:
+        raise ValueError(f"EngineConfig.scan_impl {config.scan_impl!r} unknown; "
+                         f"want one of {SCAN_IMPLS}")
+    if config.ef < 1:
+        raise ValueError(f"EngineConfig.ef must be >= 1, got {config.ef}")
+    if config.ef != _EF_DEFAULT and coarse_kind != "hnsw":
+        raise ValueError(
+            f"EngineConfig.ef={config.ef} is set but coarse={coarse_kind!r}; "
+            "ef is the HNSW beam width and is ignored by every other coarse "
+            "quantizer — drop it or build with coarse='hnsw'")
+    if config.rerank_mult > 0 and not has_base:
+        raise ValueError(
+            f"EngineConfig.rerank_mult={config.rerank_mult} requires the raw "
+            "base vectors for exact re-rank, but the engine holds none "
+            "(build with keep_base=True or pass base=...)")
+
+
+# ---------------------------------------------------------------------------
+# stages — pure functions of (coarse/index pytrees, arrays, static ints).
+# ``search`` composes them eagerly stage-by-stage; ``_fused_pipeline`` traces
+# the very same functions into one XLA program.
+# ---------------------------------------------------------------------------
+
+def coarse_probes(coarse, q: jax.Array, *, nprobe: int, ef: int) -> jax.Array:
+    """Stage 1 — coarse: pick the nprobe most promising lists.
+
+    coarse: any of the ``core.coarse`` quantizer pytrees (or a custom object
+    with ``.search(q, nprobe)``). q: (Q, D) f32. Returns (Q, nprobe) i32
+    list ids, -1 = no probe.
+    """
+    if isinstance(coarse, coarse_mod.HNSWCoarse):
+        _, probes = coarse.search(q, nprobe, ef=max(ef, nprobe))
+        return probes
+    _, probes = coarse.search(q, nprobe)
+    return probes
+
+
+def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
+                    *, scan_impl: str) -> tuple[jax.Array, jax.Array]:
+    """Stage 2 — quantized scan, flattened to one candidate pool per query.
+
+    Returns (dists (Q, nprobe*cap) f32, ids (Q, nprobe*cap) i32, -1 = pad).
+    """
+    dists, ids = ivf_mod.scan_probes(index, q, probes, impl=scan_impl)
+    qq = dists.shape[0]
+    return dists.reshape(qq, -1), ids.reshape(qq, -1)
+
+
+def make_stats(index: ivf_mod.IVFIndex, probes: jax.Array,
+               reranked: jax.Array) -> QueryStats:
+    """Work counters from the probe set + the re-rank stage's counter."""
+    return QueryStats(
+        lists_probed=jnp.sum((probes >= 0).astype(jnp.int32), axis=1),
+        codes_scanned=jnp.sum(index.lists.probed_sizes(probes), axis=1),
+        reranked=reranked,
+    )
+
+
+def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
+              q: jax.Array, *, k: int, nprobe: int, r: int, scan_impl: str,
+              ef: int) -> SearchResult:
+    """The whole engine as one pure function (stages 1-4 + stats)."""
+    probes = coarse_probes(coarse, q, nprobe=nprobe, ef=ef)
+    flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl)
+    vals, out_ids, reranked = rerank_mod.finalize_candidates(
+        flat_d, flat_ids, base, q, k, r)
+    return SearchResult(dists=vals, ids=out_ids,
+                        stats=make_stats(index, probes, reranked))
+
+
+# ONE process-wide jit: cache is keyed on static knobs + pytree structure +
+# leaf shapes/dtypes, so N engines serving the same bucket shapes share
+# compiles. This is the serving fast path.
+_fused_pipeline = jax.jit(
+    _pipeline, static_argnames=("k", "nprobe", "r", "scan_impl", "ef"))
+
+
+def fused_cache_size() -> int:
+    """Number of compiled entries in the fused-pipeline jit cache.
+
+    Serving tests assert the delta of this across a request stream: at most
+    one new entry per (shape bucket x static-knob combination).
+    """
+    return _fused_pipeline._cache_size()
+
+
 class SearchEngine:
     """IVF + fast-scan + exact re-rank behind one ``search(queries, k)``.
 
     ``base`` (the raw float vectors) is optional: without it the engine
     degrades gracefully to pure quantized search (re-rank requests are
     rejected loudly rather than silently skipped).
+
+    Config/coarse combinations are validated at construction
+    (``validate_config``): a nonsense knob raises here, not on first search.
     """
 
     def __init__(self, index: ivf_mod.IVFIndex, *, base: jax.Array | None = None,
@@ -81,8 +204,13 @@ class SearchEngine:
             else:
                 raise ValueError(
                     f"unknown coarse kind {coarse!r}; want one of {COARSE_KINDS}")
+            kind = coarse
         else:
             self.coarse = coarse  # prebuilt object with .search(q, nprobe)
+            kind = _coarse_kind_of(coarse)
+        self.coarse_kind = kind
+        validate_config(self.config, coarse_kind=kind,
+                        has_base=self.base is not None)
 
     # -- construction -------------------------------------------------------
 
@@ -99,51 +227,72 @@ class SearchEngine:
         return cls(index, base=base_x if keep_base else None, coarse=coarse,
                    config=config, **coarse_kw)
 
-    # -- stages (each individually jit'd; search is their composition) ------
+    # -- stages (kept as methods for hand-composition; each delegates to the
+    #    pure stage functions above) ----------------------------------------
 
     def select_probes(self, q: jax.Array, nprobe: int) -> jax.Array:
         """Stage 1 — coarse: pick the nprobe most promising lists."""
-        if isinstance(self.coarse, coarse_mod.HNSWCoarse):
-            _, probes = self.coarse.search(q, nprobe, ef=max(self.config.ef,
-                                                             nprobe))
-            return probes
-        _, probes = self.coarse.search(q, nprobe)
-        return probes
+        return coarse_probes(self.coarse, q, nprobe=nprobe, ef=self.config.ef)
 
     def scan(self, q: jax.Array, probe_ids: jax.Array
              ) -> tuple[jax.Array, jax.Array]:
         """Stage 2 — quantized scan: flattened ADC candidates per query."""
-        dists, ids = ivf_mod.scan_probes(self.index, q, probe_ids,
-                                         impl=self.config.scan_impl)
-        qq = dists.shape[0]
-        return dists.reshape(qq, -1), ids.reshape(qq, -1)
+        return scan_candidates(self.index, q, probe_ids,
+                               scan_impl=self.config.scan_impl)
 
-    # -- the unified entry point -------------------------------------------
+    # -- the unified entry points ------------------------------------------
 
-    def search(self, queries: jax.Array, k: int = 10, *,
-               nprobe: int | None = None, rerank_mult: int | None = None
-               ) -> SearchResult:
-        """Batched ANN search. queries: (Q, D) or (D,). Returns SearchResult.
-
-        ``rerank_mult`` overrides the config: r > 0 refines the top r*k
-        quantized candidates with exact float distances before the final
-        merge (requires ``base``); 0 returns pure fast-scan results.
-        """
+    def _resolve(self, queries, nprobe, rerank_mult):
         q = queries[None] if queries.ndim == 1 else queries
         nprobe = self.config.nprobe if nprobe is None else nprobe
         r = self.config.rerank_mult if rerank_mult is None else rerank_mult
         if r and self.base is None:
             raise ValueError("exact re-rank requested but engine holds no "
                              "base vectors (build with keep_base=True)")
+        return q, nprobe, r
 
-        probes = self.select_probes(q, nprobe)          # (Q, P)
-        flat_d, flat_ids = self.scan(q, probes)         # (Q, P*cap)
-        vals, out_ids, reranked = rerank_mod.finalize_candidates(
-            flat_d, flat_ids, self.base, q, k, r)
+    def search(self, queries: jax.Array, k: int = 10, *,
+               nprobe: int | None = None, rerank_mult: int | None = None
+               ) -> SearchResult:
+        """Batched ANN search, staged. queries: (Q, D) or (D,).
 
-        stats = QueryStats(
-            lists_probed=jnp.sum((probes >= 0).astype(jnp.int32), axis=1),
-            codes_scanned=jnp.sum(self.index.lists.probed_sizes(probes), axis=1),
-            reranked=reranked,
-        )
-        return SearchResult(dists=vals, ids=out_ids, stats=stats)
+        ``rerank_mult`` overrides the config: r > 0 refines the top r*k
+        quantized candidates with exact float distances before the final
+        merge (requires ``base``); 0 returns pure fast-scan results.
+        """
+        q, nprobe, r = self._resolve(queries, nprobe, rerank_mult)
+        return _pipeline(self.coarse, self.index, self.base, q, k=k,
+                         nprobe=nprobe, r=r, scan_impl=self.config.scan_impl,
+                         ef=self.config.ef)
+
+    def search_jit(self, queries: jax.Array, k: int = 10, *,
+                   nprobe: int | None = None, rerank_mult: int | None = None
+                   ) -> SearchResult:
+        """Batched ANN search, fused: the whole pipeline in one ``jax.jit``.
+
+        Same semantics and bit-identical results to ``search``, but a single
+        XLA dispatch with ``(k, nprobe, rerank_mult)`` static — the serving
+        path. Steady-state traffic over fixed shape buckets hits the shared
+        process-wide compile cache (``fused_cache_size``) and never
+        recompiles. Requires the coarse quantizer to be a jax pytree (all of
+        ``core.coarse``'s are; a custom non-pytree object falls back to
+        ``search``).
+        """
+        q, nprobe, r = self._resolve(queries, nprobe, rerank_mult)
+        if self.coarse_kind == "custom":
+            # unknown coarse objects may not be jax pytrees => not traceable
+            return self.search(queries, k, nprobe=nprobe, rerank_mult=r)
+        return _fused_pipeline(self.coarse, self.index, self.base, q, k=k,
+                               nprobe=nprobe, r=r,
+                               scan_impl=self.config.scan_impl,
+                               ef=self.config.ef)
+
+
+def _coarse_kind_of(coarse) -> str:
+    if isinstance(coarse, coarse_mod.FlatCoarse):
+        return "flat"
+    if isinstance(coarse, coarse_mod.HNSWCoarse):
+        return "hnsw"
+    if isinstance(coarse, coarse_mod.TreeCoarse):
+        return "tree"
+    return "custom"

@@ -1,0 +1,27 @@
+"""Async batched ANN serving on top of ``repro.engine`` (docs/serving.md).
+
+A dynamic micro-batching layer that turns ragged request streams into the
+static shape buckets the fused single-jit engine pipeline wants:
+
+  - ``Batcher``       thread-safe queue; groups by ``k``, pads to buckets
+  - ``ServingLoop``   dispatch thread; futures + asyncio entry points
+  - ``ServeResult``   per-request results + work counters + latency
+  - ``StatsRegistry`` / ``TenantStats``  per-caller accounting
+
+Quickstart::
+
+    from repro.serving import ServingLoop
+    loop = ServingLoop(engine, rerank_mult=4).start(warmup=True)
+    fut = loop.submit(query, k=10, tenant="alice")
+    print(fut.result().ids)
+    loop.stop()
+"""
+from repro.serving.batcher import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    Batcher,
+    Request,
+    bucket_for,
+    pad_to_bucket,
+)
+from repro.serving.loop import LoopMetrics, ServeResult, ServingLoop  # noqa: F401
+from repro.serving.stats import StatsRegistry, TenantStats  # noqa: F401

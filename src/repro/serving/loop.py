@@ -1,0 +1,226 @@
+"""The serving loop: batcher -> fused engine dispatch -> futures + accounting.
+
+One daemon thread owns the engine: it drains the ``Batcher``, pads each
+batch to its shape bucket, runs ``SearchEngine.search_jit`` (the whole
+coarse -> scan -> re-rank -> merge pipeline as ONE ``jax.jit`` dispatch),
+then splits results/stats back to per-request futures with a single
+device->host sync per batch. Padding rows are sliced off before anything
+reaches a caller or the ``StatsRegistry``.
+
+Callers interact through futures (``submit``) or asyncio (``asearch``):
+
+    loop = ServingLoop(engine, rerank_mult=4)
+    loop.start(warmup=True)        # pre-compile every (bucket, k) pair
+    fut = loop.submit(q, k=10, tenant="alice")
+    res = fut.result()             # ServeResult: dists, ids, stats, latency
+
+``warmup`` pushes one dummy batch through every shape bucket so steady-state
+traffic never sees a compile; ``metrics()`` exposes batch occupancy and the
+fused-jit compile count to verify exactly that.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from concurrent.futures import Future
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import SearchEngine, fused_cache_size
+from repro.serving.batcher import DEFAULT_BUCKETS, Batcher, Request
+from repro.serving.stats import StatsRegistry
+
+
+class ServeResult(NamedTuple):
+    """What one request's future resolves to."""
+
+    dists: np.ndarray     # (k,) f32 ascending
+    ids: np.ndarray       # (k,) i32 global ids, -1 = no candidate
+    lists_probed: int     # this query's QueryStats row
+    codes_scanned: int
+    reranked: int
+    latency_s: float      # submit -> results on host
+
+
+class LoopMetrics(NamedTuple):
+    """Point-in-time serving-loop counters (see ``ServingLoop.metrics``)."""
+
+    batches: int           # dispatches issued
+    rows_served: int       # real queries completed
+    rows_padded: int       # zero-pad rows dispatched alongside them
+    occupancy: float       # rows_served / (rows_served + rows_padded)
+    compiles: int          # compiles triggered by THIS loop (incl. warmup)
+    bucket_counts: dict    # bucket size -> dispatch count
+
+
+class ServingLoop:
+    """Dynamic micro-batching server around one ``SearchEngine``.
+
+    ``nprobe`` / ``rerank_mult`` are fixed per loop (they are static knobs of
+    the fused pipeline; run one loop per serving configuration). ``k`` stays
+    per-request — the batcher groups requests by ``k``.
+    """
+
+    def __init__(self, engine: SearchEngine, *,
+                 batcher: Batcher | None = None,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 max_wait_s: float = 0.002,
+                 nprobe: int | None = None, rerank_mult: int | None = None,
+                 stats: StatsRegistry | None = None):
+        self.engine = engine
+        self.batcher = batcher or Batcher(buckets=buckets, max_wait_s=max_wait_s)
+        self.nprobe = engine.config.nprobe if nprobe is None else int(nprobe)
+        self.rerank_mult = (engine.config.rerank_mult if rerank_mult is None
+                            else int(rerank_mult))
+        if self.rerank_mult and engine.base is None:
+            raise ValueError("rerank_mult > 0 but the engine holds no base "
+                             "vectors (build with keep_base=True)")
+        self.stats = stats or StatsRegistry()
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._batches = 0
+        self._rows_served = 0
+        self._rows_padded = 0
+        self._bucket_counts: dict[int, int] = {}
+        self._compiles = 0
+        self._dim = int(engine.index.centroids.shape[1])
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self, *, warmup: bool = False, warmup_ks: tuple[int, ...] = (10,)
+              ) -> "ServingLoop":
+        """Spawn the dispatch thread; optionally pre-compile every bucket.
+
+        A stopped loop can be started again (pending state was cancelled at
+        stop; counters keep accumulating).
+        """
+        if self._thread is not None:
+            raise RuntimeError("loop already started")
+        self.batcher.reopen()
+        if warmup:
+            self.warmup(ks=warmup_ks)
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, name="repro-serve",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Stop dispatching; cancel anything still queued."""
+        if self._thread is None:
+            return
+        self.batcher.close()
+        self._stop.set()
+        self._thread.join(timeout)
+        self._thread = None
+        while (reqs := self.batcher.next_batch(timeout=0)):
+            for r in reqs:
+                r.future.cancel()
+
+    def __enter__(self) -> "ServingLoop":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def warmup(self, ks: tuple[int, ...] = (10,)) -> None:
+        """Compile the fused pipeline for every (bucket, k) pair up front.
+
+        Warmup compiles count toward ``metrics().compiles`` (they are real
+        cache entries); steady-state traffic after warmup should add zero.
+        """
+        for b in self.batcher.buckets:
+            dummy = jnp.zeros((b, self._dim), jnp.float32)
+            for k in ks:
+                self._call_engine(dummy, k)
+
+    # -- request entry points ------------------------------------------------
+
+    def submit(self, query, k: int = 10, tenant: str = "default") -> Future:
+        """Enqueue one (D,) query -> Future[ServeResult]."""
+        if self._thread is None:
+            raise RuntimeError("loop is not running (call start())")
+        q = np.asarray(query, np.float32)
+        # reject wrong-D here, where the engine's D is known — a bad query
+        # must fail alone, never poison the co-riders in its batch
+        if q.shape != (self._dim,):
+            raise ValueError(
+                f"query shape {q.shape} does not match engine dim "
+                f"({self._dim},)")
+        return self.batcher.submit(q, k=k, tenant=tenant)
+
+    async def asearch(self, query, k: int = 10, tenant: str = "default"
+                      ) -> ServeResult:
+        """Asyncio-native entry: await one query's ServeResult."""
+        return await asyncio.wrap_future(self.submit(query, k=k, tenant=tenant))
+
+    # -- observability -------------------------------------------------------
+
+    def metrics(self) -> LoopMetrics:
+        with self._lock:
+            total = self._rows_served + self._rows_padded
+            return LoopMetrics(
+                batches=self._batches,
+                rows_served=self._rows_served,
+                rows_padded=self._rows_padded,
+                occupancy=self._rows_served / total if total else 0.0,
+                compiles=self._compiles,
+                bucket_counts=dict(self._bucket_counts),
+            )
+
+    # -- dispatch thread -----------------------------------------------------
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            reqs = self.batcher.next_batch(timeout=0.05)
+            if not reqs:
+                continue
+            try:
+                self._dispatch(reqs)
+            except Exception as e:  # engine failure -> fail the whole batch
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+
+    def _call_engine(self, q, k: int):
+        """search_jit + per-loop compile attribution (cache delta around the
+        call; warmup runs before the dispatch thread and dispatches are
+        single-threaded, so the delta is this loop's own)."""
+        c0 = fused_cache_size()
+        res = self.engine.search_jit(q, k, nprobe=self.nprobe,
+                                     rerank_mult=self.rerank_mult)
+        with self._lock:
+            self._compiles += fused_cache_size() - c0
+        return res
+
+    def _dispatch(self, reqs: list[Request]) -> None:
+        padded, bucket = self.batcher.form(reqs)
+        n = len(reqs)
+        res = self._call_engine(jnp.asarray(padded), reqs[0].k)
+        # one device->host sync for the whole batch
+        dists = np.asarray(res.dists)
+        ids = np.asarray(res.ids)
+        lp = np.asarray(res.stats.lists_probed)
+        cs = np.asarray(res.stats.codes_scanned)
+        rr = np.asarray(res.stats.reranked)
+        t_done = time.monotonic()
+        lats = [t_done - r.t_submit for r in reqs]
+
+        for i, r in enumerate(reqs):
+            r.future.set_result(ServeResult(
+                dists=dists[i], ids=ids[i], lists_probed=int(lp[i]),
+                codes_scanned=int(cs[i]), reranked=int(rr[i]),
+                latency_s=lats[i]))
+        # padding rows [n:] are dropped on the floor here — accounting and
+        # callers only ever see rows [:n]
+        self.stats.record_batch([r.tenant for r in reqs], lp[:n], cs[:n],
+                                rr[:n], lats)
+        with self._lock:
+            self._batches += 1
+            self._rows_served += n
+            self._rows_padded += bucket - n
+            self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1

@@ -1,0 +1,88 @@
+"""Per-tenant serving accounting on top of the engine's ``QueryStats``.
+
+The engine reports *work* per query (lists probed, codes scanned, candidates
+re-ranked); the serving loop knows *who asked* and *how long they waited*.
+``TenantStats`` joins the two: one aggregate record per caller id, updated
+once per dispatched batch from the batch's ``QueryStats`` rows.
+
+All counters are plain python ints/floats (updated after a single
+device->host sync per batch, never per request) and the registry is
+thread-safe — the serving loop mutates from its dispatch thread while
+callers snapshot from theirs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterable, Mapping
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Aggregate serving counters for one caller id."""
+
+    tenant: str
+    queries: int = 0            # requests completed
+    batches: int = 0            # dispatches this tenant had >= 1 row in
+    lists_probed: int = 0       # sum of QueryStats.lists_probed
+    codes_scanned: int = 0      # sum of QueryStats.codes_scanned
+    reranked: int = 0           # sum of QueryStats.reranked
+    latency_sum_s: float = 0.0  # submit -> result, summed
+    latency_max_s: float = 0.0
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.latency_sum_s / self.queries if self.queries else 0.0
+
+    @property
+    def mean_codes_scanned(self) -> float:
+        return self.codes_scanned / self.queries if self.queries else 0.0
+
+
+class StatsRegistry:
+    """Thread-safe map tenant id -> ``TenantStats``.
+
+    The serving loop calls ``record_batch`` once per dispatched bucket with
+    the *valid* (non-padding) rows of the batch's ``QueryStats``; padding
+    rows never reach accounting.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats: dict[str, TenantStats] = {}
+
+    def record_batch(self, tenants: Iterable[str], lists_probed: np.ndarray,
+                     codes_scanned: np.ndarray, reranked: np.ndarray,
+                     latencies_s: Iterable[float]) -> None:
+        """Fold one batch's per-row counters into the per-tenant aggregates.
+
+        tenants / latencies_s: one entry per *real* row of the batch, aligned
+        with the stat arrays (each (Q_real,)).
+        """
+        with self._lock:
+            seen: set[str] = set()
+            for i, (tenant, lat) in enumerate(zip(tenants, latencies_s)):
+                st = self._stats.get(tenant)
+                if st is None:
+                    st = self._stats[tenant] = TenantStats(tenant)
+                st.queries += 1
+                st.lists_probed += int(lists_probed[i])
+                st.codes_scanned += int(codes_scanned[i])
+                st.reranked += int(reranked[i])
+                st.latency_sum_s += float(lat)
+                st.latency_max_s = max(st.latency_max_s, float(lat))
+                if tenant not in seen:
+                    st.batches += 1
+                    seen.add(tenant)
+
+    def snapshot(self) -> Mapping[str, TenantStats]:
+        """Point-in-time copy of every tenant's aggregates."""
+        with self._lock:
+            return {t: dataclasses.replace(s) for t, s in self._stats.items()}
+
+    def get(self, tenant: str) -> TenantStats:
+        with self._lock:
+            st = self._stats.get(tenant)
+            return dataclasses.replace(st) if st is not None else TenantStats(tenant)

@@ -1,0 +1,360 @@
+"""Serving-layer tests: bucket padding, fused-vs-staged bit-identity,
+recompile discipline across mixed batch sizes, per-tenant accounting, and
+construction-time config validation."""
+import functools
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import vectors
+from repro.engine import (EngineConfig, SearchEngine, fused_cache_size,
+                          validate_config)
+from repro.serving import (Batcher, ServingLoop, StatsRegistry, bucket_for,
+                           pad_to_bucket)
+
+
+@functools.lru_cache(maxsize=None)
+def small_ds():
+    return vectors.make_sift_like(n=5000, nt=2000, nq=32, d=32, ncl=32, seed=3)
+
+
+@functools.lru_cache(maxsize=None)
+def small_engine():
+    ds = small_ds()
+    return SearchEngine.build(jax.random.PRNGKey(0), ds.train, ds.base,
+                              m=8, nlist=32, coarse_iters=6, pq_iters=6)
+
+
+def make_loop(**kw):
+    kw.setdefault("rerank_mult", 2)
+    kw.setdefault("max_wait_s", 0.005)
+    return ServingLoop(small_engine(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# fused single-jit pipeline == staged pipeline, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("coarse", ["flat", "hnsw", "tree"])
+def test_search_jit_bit_identical_to_staged(coarse):
+    ds = small_ds()
+    eng = SearchEngine(small_engine().index, base=ds.base, coarse=coarse,
+                       hnsw_m=8, ef_construction=32)
+    for r in (0, 3):
+        staged = eng.search(ds.queries, 10, nprobe=6, rerank_mult=r)
+        fused = eng.search_jit(ds.queries, 10, nprobe=6, rerank_mult=r)
+        np.testing.assert_array_equal(np.asarray(staged.ids),
+                                      np.asarray(fused.ids))
+        np.testing.assert_array_equal(np.asarray(staged.dists),
+                                      np.asarray(fused.dists))
+        for s, f in zip(staged.stats, fused.stats):
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(f))
+
+
+def test_search_jit_reuses_compile_across_engines_same_shapes():
+    """The fused jit cache is process-wide: a second engine with identical
+    static knobs and array shapes adds zero compiles."""
+    ds = small_ds()
+    eng1 = small_engine()
+    eng1.search_jit(ds.queries, 10, nprobe=6)
+    c0 = fused_cache_size()
+    # same build key => identical array shapes (list cap depends on the
+    # k-means assignment); a different key may change cap and legitimately
+    # need its own compile
+    eng2 = SearchEngine.build(jax.random.PRNGKey(0), ds.train, ds.base,
+                              m=8, nlist=32, coarse_iters=6, pq_iters=6)
+    eng2.search_jit(ds.queries, 10, nprobe=6)
+    assert fused_cache_size() == c0
+
+
+# ---------------------------------------------------------------------------
+# bucket padding
+# ---------------------------------------------------------------------------
+
+def test_bucket_for_picks_smallest_fitting():
+    assert bucket_for(1) == 1
+    assert bucket_for(2) == 8
+    assert bucket_for(8) == 8
+    assert bucket_for(9) == 32
+    assert bucket_for(128) == 128
+    with pytest.raises(ValueError, match="exceeds"):
+        bucket_for(129)
+
+
+def test_pad_to_bucket_shapes_and_content():
+    q = np.arange(6, dtype=np.float32).reshape(3, 2)
+    out = pad_to_bucket(q, 8)
+    assert out.shape == (8, 2) and out.dtype == np.float32
+    np.testing.assert_array_equal(out[:3], q)
+    np.testing.assert_array_equal(out[3:], 0)
+    with pytest.raises(ValueError, match="fit"):
+        pad_to_bucket(q, 2)
+
+
+def test_padded_queries_never_leak_into_results():
+    """3 requests -> bucket 8: results are exactly the 3 direct-search rows;
+    the 5 zero-pad rows influence nothing and reach no caller."""
+    ds, eng = small_ds(), small_engine()
+    loop = make_loop()
+    loop.start(warmup=True)
+    try:
+        futs = [loop.submit(ds.queries[i], k=10) for i in range(3)]
+        got = [f.result(timeout=30) for f in futs]
+    finally:
+        loop.stop()
+    direct = eng.search(ds.queries[:3], 10, rerank_mult=2)
+    for i, r in enumerate(got):
+        np.testing.assert_array_equal(r.ids, np.asarray(direct.ids)[i])
+        np.testing.assert_array_equal(r.dists, np.asarray(direct.dists)[i])
+    m = loop.metrics()
+    assert m.rows_served == 3
+    assert m.batches == 1 and m.bucket_counts == {8: 1}
+    assert m.rows_padded == 5
+    total_rows = sum(s.queries for s in loop.stats.snapshot().values())
+    assert total_rows == 3  # accounting sees real rows only
+
+
+def test_mixed_k_requests_never_share_a_batch():
+    ds = small_ds()
+    loop = make_loop()
+    loop.start(warmup=True)
+    try:
+        f_a = loop.submit(ds.queries[0], k=10)
+        f_b = loop.submit(ds.queries[1], k=5)
+        ra, rb = f_a.result(timeout=30), f_b.result(timeout=30)
+    finally:
+        loop.stop()
+    assert ra.ids.shape == (10,) and rb.ids.shape == (5,)
+    assert loop.metrics().batches == 2
+
+
+# ---------------------------------------------------------------------------
+# recompile discipline
+# ---------------------------------------------------------------------------
+
+def test_mixed_sizes_compile_at_most_once_per_bucket():
+    """A ragged stream (sizes 1..20 interleaved) through the batcher triggers
+    at most one fused compile per shape bucket, asserted via the jit cache."""
+    ds = small_ds()
+    loop = make_loop(max_wait_s=0.02)
+    loop.start()  # no warmup: we count the organic compiles
+    c0 = fused_cache_size()
+    try:
+        futs = []
+        for burst in (1, 7, 20, 2, 1, 15, 8):
+            for i in range(burst):
+                futs.append(loop.submit(ds.queries[i % 32], k=10))
+            time.sleep(0.03)  # let each burst form its own batch
+        for f in futs:
+            f.result(timeout=60)
+    finally:
+        loop.stop()
+    m = loop.metrics()
+    buckets_used = set(m.bucket_counts)
+    assert fused_cache_size() - c0 <= len(buckets_used)
+    assert buckets_used <= set(loop.batcher.buckets)
+
+
+def test_warmup_precompiles_all_buckets():
+    loop = make_loop()
+    c0 = fused_cache_size()
+    loop.start(warmup=True)
+    try:
+        warm = fused_cache_size() - c0
+        assert warm <= len(loop.batcher.buckets)
+        ds = small_ds()
+        futs = [loop.submit(ds.queries[i % 32], k=10) for i in range(40)]
+        for f in futs:
+            f.result(timeout=60)
+        assert fused_cache_size() - c0 == warm  # steady state: no new compiles
+    finally:
+        loop.stop()
+
+
+# ---------------------------------------------------------------------------
+# batcher mechanics
+# ---------------------------------------------------------------------------
+
+def test_batcher_groups_fifo_and_caps_at_largest_bucket():
+    b = Batcher(buckets=(1, 4), max_wait_s=0.0)
+    for i in range(6):
+        b.submit(np.zeros(3, np.float32) + i, k=10)
+    first = b.next_batch(timeout=1)
+    second = b.next_batch(timeout=1)
+    assert [int(r.query[0]) for r in first] == [0, 1, 2, 3]
+    assert [int(r.query[0]) for r in second] == [4, 5]
+    assert b.next_batch(timeout=0.01) is None
+
+
+def test_batcher_waits_for_coriders_until_deadline():
+    b = Batcher(buckets=(1, 8), max_wait_s=0.2)
+    b.submit(np.zeros(3, np.float32), k=10)
+
+    def late_submit():
+        time.sleep(0.05)
+        b.submit(np.ones(3, np.float32), k=10)
+
+    t = threading.Thread(target=late_submit)
+    t.start()
+    batch = b.next_batch(timeout=2)
+    t.join()
+    assert len(batch) == 2  # the late request caught the open window
+
+
+def test_batcher_rejects_bad_input():
+    b = Batcher()
+    with pytest.raises(ValueError, match="single"):
+        b.submit(np.zeros((2, 3), np.float32))
+    with pytest.raises(ValueError, match="k must be"):
+        b.submit(np.zeros(3, np.float32), k=0)
+    with pytest.raises(ValueError, match="ascending"):
+        Batcher(buckets=(8, 1))
+    b.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        b.submit(np.zeros(3, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# per-tenant accounting
+# ---------------------------------------------------------------------------
+
+def test_tenant_stats_aggregate_per_caller():
+    """Tenant aggregates must equal the per-query stats of a direct search
+    over the same rows, bucketed by tenant."""
+    ds, eng = small_ds(), small_engine()
+    loop = make_loop()
+    loop.start(warmup=True)
+    tenants = [("alice", "bob")[i % 2] for i in range(10)]
+    try:
+        futs = [loop.submit(ds.queries[i], k=10, tenant=t)
+                for i, t in enumerate(tenants)]
+        for f in futs:
+            f.result(timeout=30)
+    finally:
+        loop.stop()
+    direct = eng.search(ds.queries[:10], 10, rerank_mult=2)
+    lp = np.asarray(direct.stats.lists_probed)
+    cs = np.asarray(direct.stats.codes_scanned)
+    rr = np.asarray(direct.stats.reranked)
+    snap = loop.stats.snapshot()
+    for tenant in ("alice", "bob"):
+        rows = [i for i, t in enumerate(tenants) if t == tenant]
+        st = snap[tenant]
+        assert st.queries == len(rows)
+        assert st.lists_probed == int(lp[rows].sum())
+        assert st.codes_scanned == int(cs[rows].sum())
+        assert st.reranked == int(rr[rows].sum())
+        assert st.latency_max_s >= st.mean_latency_s > 0
+
+
+def test_stats_registry_thread_safety_and_snapshot_isolation():
+    reg = StatsRegistry()
+    one = np.ones(1, np.int32)
+
+    def hammer(tenant):
+        for _ in range(200):
+            reg.record_batch([tenant], one, one, one, [0.001])
+
+    threads = [threading.Thread(target=hammer, args=(f"t{i % 2}",))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = reg.snapshot()
+    assert snap["t0"].queries == snap["t1"].queries == 400
+    snap["t0"].queries = -1  # mutating a snapshot must not touch the registry
+    assert reg.get("t0").queries == 400
+
+
+# ---------------------------------------------------------------------------
+# construction-time config validation
+# ---------------------------------------------------------------------------
+
+def test_ef_with_non_hnsw_coarse_raises_at_construction():
+    eng = small_engine()
+    with pytest.raises(ValueError, match="ef"):
+        SearchEngine(eng.index, config=EngineConfig(ef=128))  # flat coarse
+    # same knob with hnsw coarse is fine
+    SearchEngine(eng.index, coarse="hnsw", hnsw_m=8, ef_construction=32,
+                 config=EngineConfig(ef=128))
+
+
+def test_rerank_without_base_raises_at_build_not_first_search():
+    ds = small_ds()
+    with pytest.raises(ValueError, match="rerank_mult"):
+        SearchEngine.build(jax.random.PRNGKey(0), ds.train, ds.base,
+                           m=8, nlist=32, coarse_iters=2, pq_iters=2,
+                           keep_base=False,
+                           config=EngineConfig(rerank_mult=4))
+
+
+@pytest.mark.parametrize("bad", [
+    EngineConfig(nprobe=0),
+    EngineConfig(rerank_mult=-1),
+    EngineConfig(scan_impl="simd"),
+    EngineConfig(ef=0),
+])
+def test_invalid_config_knobs_raise(bad):
+    with pytest.raises(ValueError):
+        validate_config(bad, coarse_kind="hnsw", has_base=True)
+
+
+def test_serving_loop_rejects_rerank_without_base():
+    eng = small_engine()
+    bare = SearchEngine(eng.index, base=None)
+    with pytest.raises(ValueError, match="base"):
+        ServingLoop(bare, rerank_mult=2)
+
+
+# ---------------------------------------------------------------------------
+# loop robustness
+# ---------------------------------------------------------------------------
+
+def test_wrong_dim_submit_fails_alone_not_the_batch():
+    """A wrong-D query is rejected at submit; co-riders are unaffected."""
+    ds = small_ds()
+    loop = make_loop()
+    loop.start(warmup=True)
+    try:
+        good = loop.submit(ds.queries[0], k=10)
+        with pytest.raises(ValueError, match="does not match engine dim"):
+            loop.submit(np.zeros(7, np.float32), k=10)
+        assert good.result(timeout=30).ids.shape == (10,)
+    finally:
+        loop.stop()
+
+
+def test_loop_restart_after_stop_serves_again():
+    ds = small_ds()
+    loop = make_loop()
+    loop.start(warmup=True)
+    loop.submit(ds.queries[0], k=10).result(timeout=30)
+    loop.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        loop.submit(ds.queries[0], k=10)
+    loop.start()
+    try:
+        res = loop.submit(ds.queries[1], k=10).result(timeout=30)
+        assert res.ids.shape == (10,)
+        assert loop.metrics().rows_served == 2
+    finally:
+        loop.stop()
+
+
+def test_loop_compiles_metric_ignores_other_engines():
+    """Per-loop compile attribution: another engine compiling a new shape in
+    the shared process-wide cache must not show up in this loop's metrics."""
+    ds = small_ds()
+    loop = make_loop()
+    loop.start(warmup=True)
+    try:
+        c_loop = loop.metrics().compiles
+        small_engine().search_jit(ds.queries[:5], 3, nprobe=2)  # foreign compile
+        assert loop.metrics().compiles == c_loop
+    finally:
+        loop.stop()

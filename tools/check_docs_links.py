@@ -1,0 +1,59 @@
+"""Markdown link check for the docs tree (stdlib-only; CI docs job).
+
+Scans README.md, docs/*.md, and the other top-level *.md files for inline
+markdown links/images `[text](target)` and verifies every **relative**
+target resolves to an existing file or directory (anchors are stripped;
+http(s)/mailto targets are skipped — no network in CI). Also checks that
+intra-repo targets don't escape the repo root.
+
+    python tools/check_docs_links.py          # exit 1 + report on dead links
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# inline links/images; [1] skips fenced code via the scrub below
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"```.*?```", re.S)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files() -> list[pathlib.Path]:
+    files = sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("**/*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    text = FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    errors = []
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:  # pure-anchor link
+            continue
+        resolved = (md.parent / path).resolve()
+        rel = md.relative_to(ROOT)
+        if resolved != ROOT and ROOT not in resolved.parents:
+            errors.append(f"{rel}: link escapes repo root: {target}")
+        elif not resolved.exists():
+            errors.append(f"{rel}: dead link: {target}")
+    return errors
+
+
+def main() -> int:
+    files = md_files()
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(f"ERROR {e}", file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAILED' if errors else 'ok'} ({len(errors)} dead links)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
