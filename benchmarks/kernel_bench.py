@@ -13,6 +13,9 @@ eliminates the per-code random LUT load).
 """
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -20,6 +23,10 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.kernels import ops, ref
 from repro.launch import roofline as rl
+
+# machine-readable grouped-kernel sweep artifact (CI uploads it; the perf
+# trajectory across PRs reads it). Override the path with REPRO_BENCH_KERNELS.
+KERNELS_JSON = os.environ.get("REPRO_BENCH_KERNELS", "BENCH_kernels.json")
 
 
 def roofline_model(m: int = 16, n: int = 10**6, q: int = 1) -> dict:
@@ -39,6 +46,33 @@ def roofline_model(m: int = 16, n: int = 10**6, q: int = 1) -> dict:
     }
 
 
+def grouped_sweep(m: int = 16) -> list[dict]:
+    """Time every grouped impl (incl. the autotuned dispatch) over (G, cap)
+    points of the IVF hot path: G = Q*nprobe gathered lists of capacity cap.
+
+    Returns one record per (shape, impl) for BENCH_kernels.json.
+    """
+    rng = np.random.default_rng(0)
+    points = ([(8, 128), (32, 256), (8, 1024)] if common.SMOKE else
+              [(8, 256), (64, 256), (8, 1024), (256, 512)])
+    records = []
+    for g, cap in points:
+        table = jnp.asarray(rng.integers(0, 256, (g, m, 16), np.uint8))
+        codes = jnp.asarray(rng.integers(0, 256, (g, cap, m // 2), np.uint8))
+        for impl in ops.SCAN_IMPLS:  # ref / select / mxu / auto
+            t = common.time_call(ops.fastscan_grouped, table, codes, impl=impl)
+            rec = {"kernel": "fastscan_grouped", "impl": impl, "G": g,
+                   "cap": cap, "M": m, "us_per_call": t * 1e6,
+                   "backend": jax.default_backend()}
+            if impl == "auto":
+                tuned = ops.resolve_grouped_impl(g, cap, m)
+                rec["resolved"] = {"impl": tuned.impl, "tile_n": tuned.tile_n}
+            records.append(rec)
+            common.emit(f"kernel_grouped_{impl}_G{g}_cap{cap}_M{m}", t,
+                        "grouped IVF-hot-path scan (interpret mode off-TPU)")
+    return records
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     q_, n_, m_ = 8, 65536, 16
@@ -49,6 +83,13 @@ def main() -> None:
         t = common.time_call(ops.fastscan_distances, table, packed, impl=impl)
         common.emit(f"kernel_{impl}_Q{q_}_N{n_}_M{m_}", t / q_,
                     "interpret-mode wall clock (CPU correctness path)")
+
+    records = grouped_sweep()
+    with open(KERNELS_JSON, "w") as f:
+        json.dump({"schema": "repro.kernel_bench/v1", "records": records}, f,
+                  indent=2)
+    common.emit("kernel_grouped_json", 0.0,
+                f"wrote {len(records)} records to {KERNELS_JSON}")
 
     t_min = common.time_call(ops.fastscan_blockmin, table, packed, block=1024)
     common.emit(f"kernel_blockmin_Q{q_}_N{n_}_M{m_}", t_min / q_,

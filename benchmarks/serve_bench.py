@@ -13,9 +13,11 @@ report:
   - fused-jit compiles observed during the timed run (should be 0 after
     warmup: steady-state serving never recompiles).
 
-Also emits one ``serve_fused_speedup`` row comparing staged ``search``
-vs fused ``search_jit`` dispatch latency at Q=1 — the per-request win of
-tracing the whole pipeline into a single XLA program.
+Also emits one ``serve_fused_speedup_{impl}`` row per grouped-scan kernel
+impl (ref / select / mxu / auto) comparing staged ``search`` vs fused
+``search_jit`` dispatch latency at Q=1 — separating the kernel win (which
+impl scans fastest) from the dispatch win (tracing the whole pipeline into
+a single XLA program).
 """
 from __future__ import annotations
 
@@ -27,7 +29,8 @@ import numpy as np
 
 from benchmarks import common
 from repro.data import vectors
-from repro.engine import SearchEngine
+from repro.engine import EngineConfig, SearchEngine
+from repro.kernels.ops import SCAN_IMPLS
 from repro.serving import ServingLoop
 
 
@@ -74,15 +77,23 @@ def main() -> None:
     queries = np.asarray(ds.queries, np.float32)
 
     # staged-vs-fused single-dispatch latency at Q=1 (the small-batch regime
-    # the fused path exists for)
+    # the fused path exists for), per grouped-scan kernel impl — so the
+    # serving numbers separate the kernel win from the dispatch win
     q1 = queries[:1]
-    t_staged = common.time_call(
-        lambda: engine.search(q1, 10, rerank_mult=4).ids, iters=5)
-    t_fused = common.time_call(
-        lambda: engine.search_jit(q1, 10, rerank_mult=4).ids, iters=5)
-    common.emit("serve_fused_speedup", t_fused,
-                f"staged_us={t_staged * 1e6:.1f};"
-                f"speedup={t_staged / max(t_fused, 1e-12):.2f}x")
+    t_fused = None
+    for impl in SCAN_IMPLS:
+        eng_i = SearchEngine(engine.index, base=engine.base,
+                             config=engine.config._replace(scan_impl=impl))
+        t_s = common.time_call(
+            lambda e=eng_i: e.search(q1, 10, rerank_mult=4).ids, iters=5)
+        t_f = common.time_call(
+            lambda e=eng_i: e.search_jit(q1, 10, rerank_mult=4).ids, iters=5)
+        common.emit(f"serve_fused_speedup_{impl}", t_f,
+                    f"staged_us={t_s * 1e6:.1f};"
+                    f"speedup={t_s / max(t_f, 1e-12):.2f}x")
+        if impl == engine.config.scan_impl:
+            t_fused = t_f
+    assert t_fused is not None  # SCAN_IMPLS always contains the default impl
 
     loop = ServingLoop(engine, rerank_mult=4, max_wait_s=0.005)
     loop.start(warmup=True)

@@ -129,7 +129,10 @@ def scan_probes(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
 
     Each (query, probe) pair gets its own residual u8 LUT, so the scan is the
     *grouped* kernel formulation: impl 'ref' is the vectorized jnp gather,
-    'select' the register-resident Pallas select-tree (repro.kernels).
+    'select' the register-resident Pallas select-tree, 'mxu' the per-group
+    one-hot GEMM on the MXU, and 'auto' the autotuned dispatch
+    (``kernels.ops.SCAN_IMPLS``; resolution happens at trace time since all
+    shapes here are static). All bit-identical.
     """
     from repro.kernels import ops  # local import: kernels depend on nothing here
 

@@ -128,3 +128,45 @@ def partition_lists(store: ListStore, centroids: jax.Array, num_shards: int
         ),
         jnp.asarray(real),
     )
+
+
+def partition_base(lists_s: ListStore, base: jax.Array
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard base-vector slices + the id->row remap for sharded re-rank.
+
+    Each base vector lives in exactly one posting list, hence on exactly one
+    shard — so the exact-re-rank stage only ever needs the rows whose lists
+    that shard owns. This builds those slices (host-side, offline, like
+    ``build_lists``) so ``ShardedEngine`` stops replicating the full (N, D)
+    base to every device.
+
+    lists_s: ListStore with leading shard dim S (from ``partition_lists``,
+    ids still global); base: (N, D) f32.
+
+    Returns:
+      base_s    (S, R, D) f32 — shard-local base rows, zero-padded;
+      gids_s    (S, R)    i32 — global id of each local row (-1 = padding);
+      local_ids (S, L, cap) i32 — ``lists_s.ids`` remapped to shard-local
+                row indices into ``base_s`` (-1 where ids was -1).
+
+    R = max over shards of the shard's vector count (static shapes — the
+    round-robin list partition keeps shards balanced, so the padding slack
+    is small). Search runs on local ids end-to-end and maps back to global
+    via ``gids_s`` just before the distributed merge.
+    """
+    ids = np.asarray(lists_s.ids)              # (S, L, cap) global ids
+    s = ids.shape[0]
+    base_np = np.asarray(base, np.float32)
+    flat = ids.reshape(s, -1)
+    mask = flat >= 0
+    r_cap = max(1, int(mask.sum(axis=1).max()))
+    base_s = np.zeros((s, r_cap, base_np.shape[1]), np.float32)
+    gids_s = np.full((s, r_cap), -1, np.int32)
+    local_flat = np.full(flat.shape, -1, np.int32)
+    for j in range(s):
+        g = flat[j][mask[j]]                   # globals in order of appearance
+        base_s[j, :g.size] = base_np[g]
+        gids_s[j, :g.size] = g
+        local_flat[j][mask[j]] = np.arange(g.size, dtype=np.int32)
+    return (jnp.asarray(base_s), jnp.asarray(gids_s),
+            jnp.asarray(local_flat.reshape(ids.shape)))

@@ -44,9 +44,9 @@ import jax.numpy as jnp
 from repro.core import coarse as coarse_mod
 from repro.core import ivf as ivf_mod
 from repro.engine import rerank as rerank_mod
+from repro.kernels.ops import SCAN_IMPLS  # single source of truth (kernels.ops)
 
 COARSE_KINDS = ("flat", "hnsw", "tree")
-SCAN_IMPLS = ("ref", "select")
 
 
 class EngineConfig(NamedTuple):
@@ -54,7 +54,8 @@ class EngineConfig(NamedTuple):
 
     nprobe: int = 8         # lists scanned per query
     rerank_mult: int = 0    # refine rerank_mult*k candidates exactly; 0 = off
-    scan_impl: str = "ref"  # grouped ADC impl: 'ref' (jnp) | 'select' (Pallas)
+    scan_impl: str = "ref"  # grouped ADC impl: 'ref' | 'select' | 'mxu' |
+    #                         'auto' (autotuned; see kernels.ops.SCAN_IMPLS)
     ef: int = 64            # HNSW beam width (hnsw coarse only)
 
 

@@ -4,8 +4,13 @@ The database's posting lists are partitioned round-robin into S shards
 (``core.lists.partition_lists``); every shard runs the same local pipeline —
 flat coarse over *its* centroids, grouped 4-bit scan, optional exact re-rank —
 and the shard-local top-k results meet in ``core.topk.distributed_topk``:
-an all-gather of 2k scalars per device, then one final re-top-k. ids are
-global throughout, so the merge needs no re-mapping.
+an all-gather of 2k scalars per device, then one final re-top-k.
+
+Base vectors for the exact re-rank are sharded too (``core.lists.
+partition_base``): each shard holds only the (R, D) rows of the lists it
+owns, with posting-list ids remapped to shard-local rows; results map back
+to global ids via the shard's ``gids`` table just before the merge, so the
+2k-scalar merge still needs no re-mapping.
 
 Two drivers over the same per-shard function:
   - ``mesh=None``: ``jax.vmap`` with a named axis — S arbitrary, runs on one
@@ -23,16 +28,23 @@ import jax.numpy as jnp
 from repro.core import ivf as ivf_mod
 from repro.core import topk as topk_mod
 from repro.core.kmeans import pairwise_sqdist
-from repro.core.lists import ListStore, partition_lists
+from repro.core.lists import ListStore, partition_base, partition_lists
 from repro.engine import rerank as rerank_mod
 from repro.engine.engine import EngineConfig, QueryStats, SearchEngine, SearchResult
 
 AXIS = "shards"
 
 
-def _local_search(centroids, lists: ListStore, real, codebook, base, q, *,
-                  k: int, nprobe: int, r: int, scan_impl: str):
-    """One shard's pipeline + the cross-shard merge. Runs under a named axis."""
+def _local_search(centroids, lists: ListStore, real, gids, codebook, base, q, *,
+                  k: int, nprobe: int, r: int, scan_impl: str, remap: bool):
+    """One shard's pipeline + the cross-shard merge. Runs under a named axis.
+
+    With ``remap=True`` the shard's list ids are *local* rows into its own
+    ``base`` slice (see ``partition_base``): the scan and re-rank both work
+    on local ids and ``gids`` translates back to global just before the
+    distributed merge. With ``remap=False`` (no base held) ids are global
+    throughout and ``gids`` is an unused dummy.
+    """
     index = ivf_mod.IVFIndex(centroids=centroids, codebook=codebook, lists=lists)
     nprobe_local = min(nprobe, centroids.shape[0])
     coarse_d = pairwise_sqdist(q, centroids)
@@ -41,6 +53,8 @@ def _local_search(centroids, lists: ListStore, real, codebook, base, q, *,
     qq = dists.shape[0]
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
         dists.reshape(qq, -1), ids.reshape(qq, -1), base, q, k, r)
+    if remap:
+        out_ids = jnp.where(out_ids >= 0, gids[jnp.maximum(out_ids, 0)], -1)
     mvals, mids = topk_mod.distributed_topk(vals, out_ids, k, AXIS)
     stats = QueryStats(
         # count only probes of real lists — a shard with fewer real lists
@@ -62,11 +76,11 @@ class ShardedEngine:
     engine's HNSW/tree coarse structure does not partition); the wrapped
     engine's coarse quantizer is intentionally not carried over.
 
-    Known limit: ``base`` (for re-rank) is replicated to every shard, so the
-    re-rank path is O(N*D) per device. Partitioning base rows by shard
-    list-membership is a ROADMAP item; until then, paper-scale sharded
-    deployments should re-rank on the caller after the merge or run with
-    rerank_mult=0.
+    When the wrapped engine holds base vectors, they are partitioned by
+    shard list-membership (``partition_base``): each shard's re-rank reads
+    only its own (R, D) slice, R ~= N/S, instead of a replicated (N, D)
+    copy. Shard-local ListStore ids become local row indices; ``gids_s``
+    maps them back to global ids after the per-shard pipeline.
     """
 
     def __init__(self, engine: SearchEngine, num_shards: int):
@@ -74,10 +88,22 @@ class ShardedEngine:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         self.num_shards = int(num_shards)
         self.codebook = engine.index.codebook
-        self.base = engine.base
         self.config = engine.config
         self.centroids_s, self.lists_s, self.real_s = partition_lists(
             engine.index.lists, engine.index.centroids, self.num_shards)
+        if engine.base is not None:
+            self.base_s, self.gids_s, local_ids = partition_base(
+                self.lists_s, engine.base)
+            self.lists_s = self.lists_s._replace(ids=local_ids)
+        else:
+            self.base_s = None
+            # unused dummy so both vmap and shard_map see a uniform arity
+            self.gids_s = jnp.full((self.num_shards, 1), -1, jnp.int32)
+
+    @property
+    def base(self) -> jax.Array | None:
+        """Sharded base slices (S, R, D), or None when no base is held."""
+        return self.base_s
 
     def search(self, queries: jax.Array, k: int = 10, *,
                nprobe: int | None = None, rerank_mult: int | None = None,
@@ -91,17 +117,19 @@ class ShardedEngine:
         q = queries[None] if queries.ndim == 1 else queries
         nprobe = self.config.nprobe if nprobe is None else nprobe
         r = self.config.rerank_mult if rerank_mult is None else rerank_mult
-        if r and self.base is None:
+        if r and self.base_s is None:
             raise ValueError("exact re-rank requested but engine holds no "
                              "base vectors (build with keep_base=True)")
         fn = functools.partial(_local_search, k=k, nprobe=nprobe, r=r,
-                               scan_impl=self.config.scan_impl)
+                               scan_impl=self.config.scan_impl,
+                               remap=self.base_s is not None)
+        base_ax = 0 if self.base_s is not None else None
 
         if mesh is None:
             mvals, mids, stats = jax.vmap(
-                fn, in_axes=(0, 0, 0, None, None, None), axis_name=AXIS,
-            )(self.centroids_s, self.lists_s, self.real_s, self.codebook,
-              self.base, q)
+                fn, in_axes=(0, 0, 0, 0, None, base_ax, None), axis_name=AXIS,
+            )(self.centroids_s, self.lists_s, self.real_s, self.gids_s,
+              self.codebook, self.base_s, q)
             # merge output is replicated across the shard axis; take shard 0
             return SearchResult(mvals[0], mids[0],
                                 QueryStats(*(s[0] for s in stats)))
@@ -114,17 +142,20 @@ class ShardedEngine:
                 f"mesh axis {AXIS!r} has {mesh.shape[AXIS]} devices but the "
                 f"engine holds {self.num_shards} shards")
 
-        def per_device(cen, lists, real, cb, base, qq):
+        def per_device(cen, lists, real, gids, cb, base, qq):
             # each device owns exactly one shard => leading block dim is 1
             out_v, out_i, st = fn(cen[0], jax.tree.map(lambda x: x[0], lists),
-                                  real[0], cb, base, qq)
+                                  real[0], gids[0], cb,
+                                  None if base is None else base[0], qq)
             return out_v[None], out_i[None], jax.tree.map(lambda x: x[None], st)
 
+        base_spec = P() if self.base_s is None else P(AXIS)
         sharded = shard_map(
             per_device, mesh=mesh,
-            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P()),
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), base_spec, P()),
             out_specs=(P(AXIS), P(AXIS), P(AXIS)),
         )
         mvals, mids, stats = sharded(self.centroids_s, self.lists_s,
-                                     self.real_s, self.codebook, self.base, q)
+                                     self.real_s, self.gids_s, self.codebook,
+                                     self.base_s, q)
         return SearchResult(mvals[0], mids[0], QueryStats(*(s[0] for s in stats)))

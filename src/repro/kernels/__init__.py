@@ -1,5 +1,21 @@
 """Pallas TPU kernels for the paper's hot spot: 4-bit PQ fast-scan ADC."""
 from repro.kernels import ops, ref
-from repro.kernels.ops import fastscan_blockmin, fastscan_distances
+from repro.kernels.ops import (
+    GROUPED_IMPLS,
+    IMPLS,
+    SCAN_IMPLS,
+    autotune_cache,
+    autotune_cache_size,
+    clear_autotune_cache,
+    fastscan_blockmin,
+    fastscan_distances,
+    fastscan_grouped,
+    resolve_grouped_impl,
+)
 
-__all__ = ["ops", "ref", "fastscan_distances", "fastscan_blockmin"]
+__all__ = [
+    "ops", "ref", "fastscan_distances", "fastscan_blockmin",
+    "fastscan_grouped", "resolve_grouped_impl", "autotune_cache",
+    "autotune_cache_size", "clear_autotune_cache",
+    "GROUPED_IMPLS", "IMPLS", "SCAN_IMPLS",
+]

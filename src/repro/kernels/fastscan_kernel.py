@@ -22,6 +22,11 @@ Variant B — ``one-hot MXU`` (beyond-paper):
     accumulation of <= M*16 terms (<= 32640 for M <= 128) are exact in f32,
     so the result is still bit-identical to the int oracle.
 
+    Both the flat (shared database, ``fastscan_onehot_mxu``) and the grouped
+    (gathered IVF lists, ``fastscan_onehot_mxu_grouped``) scans have MXU
+    forms; the grouped one is the serving hot path (``core.ivf.scan_probes``)
+    where each (query, probe) pair owns its own residual LUT.
+
 Variant C — ``fused block-min``: variant B plus an in-kernel per-tile
     min/argmin reduction, the TPU stand-in for faiss' SIMD top-k candidate
     filtering via ``_mm256_movemask_epi8`` (which has no Pallas equivalent).
@@ -191,6 +196,62 @@ def fastscan_onehot_mxu(table_q8: jax.Array, packed_codes: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((tile_q, tile_n), lambda qi, ni: (qi, ni)),
         out_shape=jax.ShapeDtypeStruct((q, n), jnp.int32),
+        interpret=interpret,
+    )(t_flat, packed_codes)
+
+
+def _onehot_mxu_grouped_kernel(table_ref, codes_ref, out_ref):
+    """One (query, probe) group x one cap tile, on the MXU.
+
+    table_ref: (1, M*16) u8 block — this group's flattened LUT
+    codes_ref: (1, tn, M//2) u8 block — this group's gathered code tile
+    out_ref:   (1, tn) i32 block
+
+    The grouped ADC gather is a per-group matvec: unpack the nibble codes to
+    one-hot (tn, M, 16) planes, flatten to (tn, M*16) bf16, and contract
+    against the group's own (1, M*16) LUT row on the MXU with f32
+    accumulation. Exactness argument is identical to the flat variant above
+    (u8 and 0/1 exact in bf16; <= M*16 f32 summands exact).
+    """
+    codes = _unpack_nibbles_i32(codes_ref[0])  # (tn, M)
+    tn, m = codes.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tn, m, 16), dimension=2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.bfloat16).reshape(tn, m * 16)
+    t = table_ref[...].astype(jnp.bfloat16)  # (1, M*16)
+    acc = jax.lax.dot_general(
+        t, onehot,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, tn)
+    out_ref[...] = acc.astype(jnp.int32)
+
+
+def fastscan_onehot_mxu_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
+                                tile_n: int = TILE_N, interpret: bool = True
+                                ) -> jax.Array:
+    """Grouped one-hot MXU ADC: (G, M, 16) u8 x (G, cap, M//2) u8 -> (G, cap) i32.
+
+    The MXU formulation of the gathered-list scan — the path every real IVF
+    search takes (``scan_probes``). Group g = one (query, probed-list) pair
+    with its OWN residual LUT and its own gathered code tile; the grid runs
+    over (group, cap tile) and each program does one LUT-row x one-hot-codes
+    contraction on the MXU. cap must be a tile_n multiple (pre-padded).
+    Bit-identical to the ref/select formulations.
+    """
+    g, m, k = table_q8.shape
+    gc, n, mh = packed_codes.shape
+    assert k == 16 and mh * 2 == m and gc == g and n % tile_n == 0
+    t_flat = table_q8.reshape(g, m * 16)
+    grid = (g, n // tile_n)
+    return pl.pallas_call(
+        _onehot_mxu_grouped_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m * 16), lambda gi, ni: (gi, 0)),
+            pl.BlockSpec((1, tile_n, mh), lambda gi, ni: (gi, ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_n), lambda gi, ni: (gi, ni)),
+        out_shape=jax.ShapeDtypeStruct((g, n), jnp.int32),
         interpret=interpret,
     )(t_flat, packed_codes)
 

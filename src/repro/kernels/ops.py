@@ -1,20 +1,44 @@
-"""jit'd dispatch wrappers around the fast-scan kernels.
+"""jit'd dispatch wrappers around the fast-scan kernels, plus autotuning.
 
 Handles padding (queries to the Q tile, database to the N tile), backend
 selection (compiled Pallas on TPU, interpret mode elsewhere), and the
 pure-jnp reference fallback. All variants are bit-identical; see ref.py.
+
+Impl registries — ONE source of truth, everything else derives from it:
+
+  ``GROUPED_IMPLS``  concrete grouped-scan formulations ('ref' jnp gather /
+                     'select' VPU select-tree / 'mxu' one-hot GEMM);
+  ``IMPLS``          the flat (shared-database) scan supports the same set;
+  ``SCAN_IMPLS``     what callers may request: GROUPED_IMPLS + 'auto'.
+
+``impl='auto'`` resolves to a concrete (impl, tile_n) via a one-time timed
+micro-sweep per ``(backend, interpret, G, cap, M)`` signature
+(``resolve_grouped_impl``),
+cached process-wide — the analogue of the paper picking the widest SIMD unit
+per target CPU, done empirically per shape instead of hard-coded per arch.
+``autotune_cache()`` / ``autotune_cache_size()`` expose the cache for
+inspection, mirroring ``engine.fused_cache_size``.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import functools
+import threading
+import time
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import fastscan_kernel as fk
 from repro.kernels import ref as ref_mod
 
-IMPLS = ("ref", "select", "mxu")
+# Concrete grouped-scan kernel formulations. The flat scan supports the same
+# three; the engine additionally accepts 'auto' (autotuned dispatch below).
+GROUPED_IMPLS = ("ref", "select", "mxu")
+IMPLS = GROUPED_IMPLS
+SCAN_IMPLS = GROUPED_IMPLS + ("auto",)
 
 
 def _default_interpret() -> bool:
@@ -70,7 +94,28 @@ def fastscan_distances(table_q8: jax.Array, packed_codes: jax.Array, *,
     return acc[:q, :n]
 
 
+# ---------------------------------------------------------------------------
+# grouped scan (the IVF hot path) + autotuned dispatch
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("impl", "tile_n", "interpret"))
+def _fastscan_grouped_pallas(table_q8: jax.Array, packed_codes: jax.Array, *,
+                             impl: str, tile_n: int,
+                             interpret: bool | None) -> jax.Array:
+    """Pallas half of the grouped dispatch ('select' | 'mxu'), pre-validated."""
+    cap = packed_codes.shape[1]
+    interp = _default_interpret() if interpret is None else interpret
+    tn = tile_n or _auto_tile(cap, fk.TILE_N)
+    codes_p = _pad_to(packed_codes, 1, tn)
+    if impl == "select":
+        acc = fk.fastscan_select_tree_grouped(table_q8, codes_p, tile_n=tn,
+                                              interpret=interp)
+    else:
+        acc = fk.fastscan_onehot_mxu_grouped(table_q8, codes_p, tile_n=tn,
+                                             interpret=interp)
+    return acc[:, :cap]
+
+
 def fastscan_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
                      impl: str = "ref", tile_n: int = 0,
                      interpret: bool | None = None) -> jax.Array:
@@ -78,21 +123,168 @@ def fastscan_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
     -> (G, cap) i32. Group g = one (query, probed-list) pair.
 
     impl: 'ref' (vectorized jnp gather — fastest off-TPU) | 'select'
-    (register-resident Pallas select-tree). Bit-identical.
+    (register-resident Pallas select-tree) | 'mxu' (per-group one-hot GEMM on
+    the MXU) | 'auto' (timed micro-sweep picks the (impl, tile_n) pair per
+    (backend, interpret, G, cap, M) signature, cached process-wide; an
+    explicit ``tile_n`` is ignored under 'auto' since the sweep timed pairs).
+    Bit-identical.
+
+    Shapes are static under jit, so 'auto' resolves at trace time: the sweep
+    runs once per signature and the chosen concrete impl is what gets staged
+    into the XLA program.
     """
     g, m, k = table_q8.shape
     cap = packed_codes.shape[1]
     assert k == 16, f"4-bit PQ requires K=16, got {k}"
+    if impl not in SCAN_IMPLS:
+        raise ValueError(f"unknown grouped impl {impl!r}; "
+                         f"want one of {SCAN_IMPLS}")
+    if impl == "auto":
+        tuned = resolve_grouped_impl(g, cap, m, interpret=interpret)
+        # the sweep timed (impl, tile) PAIRS — honoring a caller tile_n here
+        # could pair the winning impl with a tile it never won with, so an
+        # explicit tile_n is ignored under 'auto' (pass a concrete impl to
+        # control tiling by hand)
+        impl, tile_n = tuned.impl, tuned.tile_n
     if impl == "ref":
-        return ref_mod.fastscan_grouped_ref(table_q8, packed_codes)
-    if impl != "select":
-        raise ValueError(f"unknown grouped impl {impl!r}; want 'ref' or 'select'")
+        return _fastscan_grouped_ref_jit(table_q8, packed_codes)
+    return _fastscan_grouped_pallas(table_q8, packed_codes, impl=impl,
+                                    tile_n=tile_n, interpret=interpret)
+
+
+_fastscan_grouped_ref_jit = jax.jit(ref_mod.fastscan_grouped_ref)
+
+
+class TunedScan(NamedTuple):
+    """Autotune verdict for one (backend, interpret, G, cap, M) signature."""
+
+    impl: str          # winning concrete impl (in GROUPED_IMPLS)
+    tile_n: int        # winning cap tile (0 = impl has no tiling knob)
+    timings_us: tuple  # ((f"{impl}@{tile}", median_us), ...) — full sweep
+
+
+_AUTOTUNE_CACHE: dict[tuple, TunedScan] = {}
+# serializes first resolutions: without it, two threads racing on the same
+# signature would pay the sweep twice and could cache divergent verdicts
+_AUTOTUNE_LOCK = threading.Lock()
+
+
+class _TraceEscapeError(RuntimeError):
+    """The autotune sweep was staged into an ambient trace instead of run."""
+
+
+def _grouped_tile_candidates(cap: int) -> tuple[int, ...]:
+    """Cap-tile sizes worth timing: the shape-fit auto tile plus smaller
+    power-of-two tiles (more grid parallelism / smaller VMEM blocks)."""
+    fit = _auto_tile(cap, fk.TILE_N)
+    cands = {fit}
+    for t in (128, 512):
+        if t < fit:
+            cands.add(t)
+    return tuple(sorted(cands))
+
+
+def _median_time_us(fn, iters: int = 3) -> float:
+    out = fn()  # warmup: compile (or first interpret pass)
+    if isinstance(out, jax.core.Tracer):
+        # Staged into an ambient trace instead of executed — the "timing"
+        # would measure tracing overhead, not the kernel. resolve_grouped_impl
+        # escapes to a worker thread precisely to prevent this.
+        raise _TraceEscapeError("autotune sweep ran under an ambient jax trace")
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def resolve_grouped_impl(g: int, cap: int, m: int, *,
+                         interpret: bool | None = None) -> TunedScan:
+    """Resolve ``impl='auto'`` for the grouped scan at one shape signature.
+
+    Times every concrete impl (x its tile candidates) on synthetic data of
+    the exact workload shape and caches the winner per
+    ``(backend, interpret, G, cap, M)`` — one sweep per signature per
+    process (interpret mode is part of the key: a verdict timed on the
+    Pallas interpreter must never be reused for compiled execution, or vice
+    versa). The fixed-seed synthetic data makes the sweep reproducible; the
+    cache makes resolution deterministic for the life of the process
+    (asserted in tests/test_kernels.py). A candidate that fails to build at
+    this shape (e.g. an MXU tile blowing VMEM) is dropped, not fatal —
+    'ref' always survives.
+    """
     interp = _default_interpret() if interpret is None else interpret
-    tn = tile_n or _auto_tile(cap, fk.TILE_N)
-    codes_p = _pad_to(packed_codes, 1, tn)
-    acc = fk.fastscan_select_tree_grouped(table_q8, codes_p, tile_n=tn,
-                                          interpret=interp)
-    return acc[:, :cap]
+    sig = (jax.default_backend(), interp, int(g), int(cap), int(m))
+    hit = _AUTOTUNE_CACHE.get(sig)
+    if hit is not None:
+        return hit
+    with _AUTOTUNE_LOCK:
+        hit = _AUTOTUNE_CACHE.get(sig)  # racing thread may have resolved it
+        if hit is not None:
+            return hit
+        # The sweep must EXECUTE even when resolution happens at trace time
+        # (scan_probes and the fused pipeline are jit'd, so that is the
+        # normal case): under an ambient trace every jax call made here
+        # would be staged into the caller's jaxpr instead of run, and the
+        # "timings" would measure tracing overhead. JAX trace state is
+        # thread-local, so a worker thread is a clean escape hatch —
+        # everything it runs dispatches eagerly on concrete arrays.
+        with concurrent.futures.ThreadPoolExecutor(max_workers=1) as ex:
+            tuned = ex.submit(_run_grouped_sweep, int(g), int(cap), int(m),
+                              interp).result()
+        _AUTOTUNE_CACHE[sig] = tuned
+    return tuned
+
+
+def _run_grouped_sweep(g: int, cap: int, m: int, interp: bool) -> TunedScan:
+    rng = np.random.default_rng(0)
+    # plain numpy on purpose: jnp.asarray under an ambient trace would make
+    # these tracers; as numpy they only become device arrays inside the
+    # worker thread's eager calls
+    table = rng.integers(0, 256, (g, m, 16), dtype=np.uint8)
+    codes = rng.integers(0, 256, (g, cap, m // 2), dtype=np.uint8)
+    sweep = []
+    for impl in GROUPED_IMPLS:
+        tiles = (0,) if impl == "ref" else _grouped_tile_candidates(cap)
+        for tn in tiles:
+            try:
+                us = _median_time_us(functools.partial(
+                    fastscan_grouped, table, codes, impl=impl, tile_n=tn,
+                    interpret=interp))
+            except _TraceEscapeError:
+                raise  # a trace-escape regression, not a bad candidate
+            except Exception:  # candidate unbuildable at this shape: skip it
+                continue
+            sweep.append((impl, tn, us))
+    if not sweep:
+        raise RuntimeError(
+            f"autotune sweep produced no working candidate at "
+            f"(G={g}, cap={cap}, M={m}) — 'ref' should never fail")
+    best = min(sweep, key=lambda r: r[2])
+    tuned = TunedScan(
+        impl=best[0], tile_n=best[1],
+        timings_us=tuple((f"{i}@{tn}", us) for i, tn, us in sweep))
+    return tuned
+
+
+def autotune_cache() -> dict[tuple, TunedScan]:
+    """Snapshot of the process-wide autotune cache, keyed by
+    (backend, interpret, G, cap, M). For inspection/metrics — mutations
+    don't stick."""
+    return dict(_AUTOTUNE_CACHE)
+
+
+def autotune_cache_size() -> int:
+    """Number of resolved signatures (mirrors ``engine.fused_cache_size``)."""
+    return len(_AUTOTUNE_CACHE)
+
+
+def clear_autotune_cache() -> None:
+    """Drop all resolutions (tests; a backend change mid-process)."""
+    _AUTOTUNE_CACHE.clear()
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

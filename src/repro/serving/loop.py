@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import SearchEngine, fused_cache_size
+from repro.kernels.ops import autotune_cache_size
 from repro.serving.batcher import DEFAULT_BUCKETS, Batcher, Request
 from repro.serving.stats import StatsRegistry
 
@@ -54,6 +55,9 @@ class LoopMetrics(NamedTuple):
     occupancy: float       # rows_served / (rows_served + rows_padded)
     compiles: int          # compiles triggered by THIS loop (incl. warmup)
     bucket_counts: dict    # bucket size -> dispatch count
+    autotuned: int         # autotune sweeps THIS loop's dispatches triggered
+    #                        (incl. warmup; only grows when scan_impl='auto'
+    #                        meets a new shape signature)
 
 
 class ServingLoop:
@@ -87,6 +91,7 @@ class ServingLoop:
         self._rows_padded = 0
         self._bucket_counts: dict[int, int] = {}
         self._compiles = 0
+        self._autotuned = 0
         self._dim = int(engine.index.centroids.shape[1])
 
     # -- lifecycle ----------------------------------------------------------
@@ -132,6 +137,11 @@ class ServingLoop:
 
         Warmup compiles count toward ``metrics().compiles`` (they are real
         cache entries); steady-state traffic after warmup should add zero.
+        When the engine runs ``scan_impl='auto'``, tracing each bucket here
+        also runs the kernel autotune sweep for that bucket's (G, cap, M)
+        signature (``kernels.ops.resolve_grouped_impl``), so steady-state
+        traffic never pays the timed micro-sweep either —
+        ``metrics().autotuned`` should be flat after warmup.
         """
         for b in self.batcher.buckets:
             dummy = jnp.zeros((b, self._dim), jnp.float32)
@@ -170,6 +180,7 @@ class ServingLoop:
                 occupancy=self._rows_served / total if total else 0.0,
                 compiles=self._compiles,
                 bucket_counts=dict(self._bucket_counts),
+                autotuned=self._autotuned,
             )
 
     # -- dispatch thread -----------------------------------------------------
@@ -187,14 +198,16 @@ class ServingLoop:
                         r.future.set_exception(e)
 
     def _call_engine(self, q, k: int):
-        """search_jit + per-loop compile attribution (cache delta around the
-        call; warmup runs before the dispatch thread and dispatches are
-        single-threaded, so the delta is this loop's own)."""
+        """search_jit + per-loop compile/autotune attribution (cache deltas
+        around the call; warmup runs before the dispatch thread and
+        dispatches are single-threaded, so the deltas are this loop's own)."""
         c0 = fused_cache_size()
+        a0 = autotune_cache_size()
         res = self.engine.search_jit(q, k, nprobe=self.nprobe,
                                      rerank_mult=self.rerank_mult)
         with self._lock:
             self._compiles += fused_cache_size() - c0
+            self._autotuned += autotune_cache_size() - a0
         return res
 
     def _dispatch(self, reqs: list[Request]) -> None:

@@ -65,18 +65,24 @@ def test_search_matches_hand_composed_hnsw_pipeline():
     np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ids_hand))
 
 
-def test_scan_impl_select_matches_ref_through_engine():
-    """The grouped Pallas select-tree kernel and the jnp gather formulation
-    produce identical search results end-to-end."""
+@pytest.mark.parametrize("impl", ["select", "mxu", "auto"])
+def test_scan_impl_matches_ref_through_engine(impl):
+    """Every grouped kernel formulation — select-tree VPU, one-hot MXU, and
+    the autotuned dispatch — produces results identical to the jnp gather
+    end-to-end, through both the staged and the fused pipeline."""
     ds, eng = small_ds(), small_engine()
-    eng_sel = SearchEngine(eng.index, base=ds.base,
-                           config=EngineConfig(scan_impl="select"))
+    eng_i = SearchEngine(eng.index, base=ds.base,
+                         config=EngineConfig(scan_impl=impl))
     q = ds.queries[:4]
-    res_ref = eng.search(q, 10, nprobe=4, rerank_mult=0)
-    res_sel = eng_sel.search(q, 10, nprobe=4, rerank_mult=0)
-    np.testing.assert_array_equal(np.asarray(res_ref.ids), np.asarray(res_sel.ids))
+    res_ref = eng.search(q, 10, nprobe=4, rerank_mult=2)
+    res_i = eng_i.search(q, 10, nprobe=4, rerank_mult=2)
+    np.testing.assert_array_equal(np.asarray(res_ref.ids), np.asarray(res_i.ids))
     np.testing.assert_array_equal(np.asarray(res_ref.dists),
-                                  np.asarray(res_sel.dists))
+                                  np.asarray(res_i.dists))
+    res_j = eng_i.search_jit(q, 10, nprobe=4, rerank_mult=2)
+    np.testing.assert_array_equal(np.asarray(res_ref.ids), np.asarray(res_j.ids))
+    np.testing.assert_array_equal(np.asarray(res_ref.dists),
+                                  np.asarray(res_j.dists))
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +212,65 @@ def test_partition_lists_preserves_every_vector_once():
     assert cen_s.shape[0] == 3 and lists_s.ids.shape[0] == 3
     # real mask covers exactly the original lists; padding is marked False
     assert int(np.asarray(real_s).sum()) == eng.index.nlist
+
+
+def test_partition_base_covers_every_row_once_without_replication():
+    """The sharded re-rank base: every base row lands on exactly one shard,
+    shard slices are ~N/S (not a replicated full copy), and the local-id
+    remap round-trips through gids back to the global posting-list ids."""
+    from repro.core.lists import partition_base
+    ds, eng = small_ds(), small_engine()
+    s = 4
+    cen_s, lists_s, real_s = partition_lists(eng.index.lists,
+                                             eng.index.centroids, s)
+    base_s, gids_s, local_ids = partition_base(lists_s, ds.base)
+    n, d = ds.base.shape
+    # each global id appears exactly once across all shards' gids
+    g = np.asarray(gids_s).reshape(-1)
+    np.testing.assert_array_equal(np.sort(g[g >= 0]), np.arange(n))
+    # per-shard slices are a partition, not replicas: R < N for S > 1
+    assert base_s.shape[0] == s and base_s.shape[2] == d
+    assert base_s.shape[1] < n
+    # local ids point at the right rows: base_s[shard, local] == base[global]
+    li = np.asarray(local_ids)
+    gi = np.asarray(lists_s.ids)
+    bs = np.asarray(base_s)
+    b = np.asarray(ds.base)
+    valid = gi >= 0
+    np.testing.assert_array_equal(valid, li >= 0)
+    for j in range(s):
+        np.testing.assert_array_equal(bs[j][li[j][valid[j]]], b[gi[j][valid[j]]])
+        np.testing.assert_array_equal(np.asarray(gids_s)[j][li[j][valid[j]]],
+                                      gi[j][valid[j]])
+
+
+def test_sharded_rerank_on_local_base_matches_replicated_semantics():
+    """Single shard + re-rank: local-base slicing and the id remap must be
+    invisible — results identical to the unsharded engine's."""
+    ds, eng = small_ds(), small_engine()
+    sh = ShardedEngine(eng, 1)
+    res = eng.search(ds.queries, 10, nprobe=8, rerank_mult=3)
+    res_s = sh.search(ds.queries, 10, nprobe=8, rerank_mult=3)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res_s.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists), np.asarray(res_s.dists))
+
+
+def test_sharded_rerank_multi_shard_returns_global_ids():
+    """S > 1 with re-rank: result ids are global (valid range, deduped) and
+    the re-ranked distances are the true float distances to those ids."""
+    ds, eng = small_ds(), small_engine()
+    sh = ShardedEngine(eng, 3)
+    res = sh.search(ds.queries, 10, nprobe=4, rerank_mult=2)
+    ids = np.asarray(res.ids)
+    d = np.asarray(res.dists)
+    b = np.asarray(ds.base)
+    q = np.asarray(ds.queries)
+    assert ids.max() < b.shape[0]
+    for qi in range(ids.shape[0]):
+        row = ids[qi][ids[qi] >= 0]
+        assert len(row) == len(set(row.tolist()))
+        want = ((b[row] - q[qi][None, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(d[qi][ids[qi] >= 0], want, rtol=1e-5)
 
 
 def test_sharded_stats_exclude_padding_lists():

@@ -358,3 +358,37 @@ def test_loop_compiles_metric_ignores_other_engines():
         assert loop.metrics().compiles == c_loop
     finally:
         loop.stop()
+
+
+def test_auto_scan_impl_warmup_absorbs_autotune_and_stays_flat():
+    """The docs/serving.md contract for scan_impl='auto': warmup runs the
+    kernel autotune micro-sweep per bucket signature, and steady-state
+    traffic adds neither compiles nor autotune sweeps. Also: results through
+    the loop are identical to the ref-impl engine's."""
+    from repro.kernels import ops
+
+    ds = small_ds()
+    eng_auto = SearchEngine(small_engine().index, base=ds.base,
+                            config=EngineConfig(scan_impl="auto"))
+    ops.clear_autotune_cache()
+    try:
+        loop = ServingLoop(eng_auto, rerank_mult=2, buckets=(1, 4),
+                           max_wait_s=0.005)
+        loop.start(warmup=True)
+        try:
+            m0 = loop.metrics()
+            assert m0.autotuned > 0  # warmup resolved each bucket's signature
+            futs = [loop.submit(np.asarray(ds.queries[i]), k=10)
+                    for i in range(6)]
+            res = [f.result(timeout=60) for f in futs]
+            m1 = loop.metrics()
+            assert m1.compiles == m0.compiles
+            assert m1.autotuned == m0.autotuned  # flat after warmup
+        finally:
+            loop.stop()
+        want = small_engine().search(ds.queries[:6], 10, nprobe=8,
+                                     rerank_mult=2)
+        got_ids = np.stack([r.ids for r in res])
+        np.testing.assert_array_equal(got_ids, np.asarray(want.ids))
+    finally:
+        ops.clear_autotune_cache()
