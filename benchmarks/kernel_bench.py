@@ -13,6 +13,7 @@ eliminates the per-code random LUT load).
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 
@@ -21,8 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.core import ivf
+from repro.core.lists import ListStore
+from repro.core.pq import PQCodebook
 from repro.kernels import ops, ref
 from repro.launch import roofline as rl
+from repro.launch.hlo_analysis import xla_cost_dict
 
 # machine-readable grouped-kernel sweep artifact (CI uploads it; the perf
 # trajectory across PRs reads it). Override the path with REPRO_BENCH_KERNELS.
@@ -50,7 +55,9 @@ def grouped_sweep(m: int = 16) -> list[dict]:
     """Time every grouped impl (incl. the autotuned dispatch) over (G, cap)
     points of the IVF hot path: G = Q*nprobe gathered lists of capacity cap.
 
-    Returns one record per (shape, impl) for BENCH_kernels.json.
+    Returns one record per (shape, impl) for BENCH_kernels.json; each record
+    carries cost_analysis ``bytes_accessed`` alongside wall time so the perf
+    trajectory tracks HBM traffic, not just clock.
     """
     rng = np.random.default_rng(0)
     points = ([(8, 128), (32, 256), (8, 1024)] if common.SMOKE else
@@ -59,10 +66,13 @@ def grouped_sweep(m: int = 16) -> list[dict]:
     for g, cap in points:
         table = jnp.asarray(rng.integers(0, 256, (g, m, 16), np.uint8))
         codes = jnp.asarray(rng.integers(0, 256, (g, cap, m // 2), np.uint8))
-        for impl in ops.SCAN_IMPLS:  # ref / select / mxu / auto
+        for impl in ops.SCAN_IMPLS:  # ref / select / mxu / stream / auto
             t = common.time_call(ops.fastscan_grouped, table, codes, impl=impl)
+            cost = xla_cost_dict(jax.jit(functools.partial(
+                ops.fastscan_grouped, impl=impl)).lower(table, codes).compile())
             rec = {"kernel": "fastscan_grouped", "impl": impl, "G": g,
                    "cap": cap, "M": m, "us_per_call": t * 1e6,
+                   "bytes_accessed": cost.get("bytes accessed", 0.0),
                    "backend": jax.default_backend()}
             if impl == "auto":
                 tuned = ops.resolve_grouped_impl(g, cap, m)
@@ -70,6 +80,55 @@ def grouped_sweep(m: int = 16) -> list[dict]:
             records.append(rec)
             common.emit(f"kernel_grouped_{impl}_G{g}_cap{cap}_M{m}", t,
                         "grouped IVF-hot-path scan (interpret mode off-TPU)")
+    return records
+
+
+def scan_stage_traffic(q: int = 32, p: int = 16, cap: int = 1024,
+                       m: int = 16, nlist: int = 64) -> list[dict]:
+    """HBM bytes-accessed of the whole scan STAGE, gathered vs gather-free.
+
+    The gathered path is ``core.ivf.scan_probes(impl='ref')``: gather the
+    probed lists, scan, write the full (Q, P, cap) distances + ids back.
+    The streamed path is ``scan_probes_stream``: in-kernel list DMA + fused
+    per-tile reduction — only (Q, P, n_tiles, kc) candidates return to HBM.
+    Both are *compiled only* (cost_analysis needs no execution), so this
+    runs at the acceptance shape (Q=32, P=16, cap=1024, M=16) even in the
+    CI smoke job. ``keep=40`` is the serving default's selection budget
+    (rerank_mult=4 x k=10).
+    """
+    rng = np.random.default_rng(0)
+    d = 32
+    codes = rng.integers(0, 256, (nlist, cap, m // 2), np.uint8)
+    ids = np.arange(nlist * cap, dtype=np.int32).reshape(nlist, cap)
+    index = ivf.IVFIndex(
+        centroids=jnp.asarray(rng.normal(size=(nlist, d)).astype(np.float32)),
+        codebook=PQCodebook(jnp.asarray(
+            rng.normal(size=(m, 16, d // m)).astype(np.float32))),
+        lists=ListStore(codes=jnp.asarray(codes), ids=jnp.asarray(ids),
+                        sizes=jnp.asarray(np.full(nlist, cap, np.int32))),
+    )
+    qs = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
+    probes = jnp.asarray(rng.integers(0, nlist, (q, p)).astype(np.int32))
+    stages = (
+        ("gathered", jax.jit(
+            lambda i, qq, pr: ivf.scan_probes(i, qq, pr, impl="ref"))),
+        ("stream", jax.jit(functools.partial(ivf.scan_probes_stream,
+                                             keep=40))),
+    )
+    records = []
+    for name, fn in stages:
+        cost = xla_cost_dict(fn.lower(index, qs, probes).compile())
+        rec = {"kernel": "scan_stage", "impl": name, "Q": q, "P": p,
+               "cap": cap, "M": m, "nlist": nlist,
+               "bytes_accessed": cost.get("bytes accessed", 0.0),
+               "backend": jax.default_backend()}
+        records.append(rec)
+        common.emit(f"scan_stage_bytes_{name}", 0.0,
+                    f"bytes_accessed={rec['bytes_accessed']:.0f}")
+    if records[1]["bytes_accessed"]:
+        ratio = records[0]["bytes_accessed"] / records[1]["bytes_accessed"]
+        common.emit("scan_stage_traffic_ratio", 0.0,
+                    f"gathered/stream={ratio:.1f}x (acceptance: >= 4x)")
     return records
 
 
@@ -84,7 +143,7 @@ def main() -> None:
         common.emit(f"kernel_{impl}_Q{q_}_N{n_}_M{m_}", t / q_,
                     "interpret-mode wall clock (CPU correctness path)")
 
-    records = grouped_sweep()
+    records = grouped_sweep() + scan_stage_traffic()
     with open(KERNELS_JSON, "w") as f:
         json.dump({"schema": "repro.kernel_bench/v1", "records": records}, f,
                   indent=2)

@@ -14,10 +14,12 @@ report:
     warmup: steady-state serving never recompiles).
 
 Also emits one ``serve_fused_speedup_{impl}`` row per grouped-scan kernel
-impl (ref / select / mxu / auto) comparing staged ``search`` vs fused
-``search_jit`` dispatch latency at Q=1 — separating the kernel win (which
-impl scans fastest) from the dispatch win (tracing the whole pipeline into
-a single XLA program).
+impl (ref / select / mxu / stream / auto) comparing staged ``search`` vs
+fused ``search_jit`` dispatch latency at Q=1 — separating the kernel win
+(which impl scans fastest; ``stream`` is the gather-free in-kernel DMA
+path) from the dispatch win (tracing the whole pipeline into a single XLA
+program). The stream-vs-ref fused delta is the end-to-end cost/benefit of
+removing the gathered candidate pool at serving batch sizes.
 """
 from __future__ import annotations
 

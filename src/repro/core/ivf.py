@@ -122,7 +122,7 @@ def _probe_tables(index: IVFIndex, q: jax.Array, probe_ids: jax.Array
 @functools.partial(jax.jit, static_argnames=("impl",))
 def scan_probes(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
                 impl: str = "ref") -> tuple[jax.Array, jax.Array]:
-    """Quantized fine-scan stage: 4-bit ADC over the gathered probed lists.
+    """Quantized fine-scan stage: 4-bit ADC over the probed lists.
 
     q: (Q, D); probe_ids: (Q, P) (-1 = no probe). Returns
     (dists (Q, P, cap) f32, ids (Q, P, cap) i32, -1 = padding).
@@ -130,21 +130,84 @@ def scan_probes(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
     Each (query, probe) pair gets its own residual u8 LUT, so the scan is the
     *grouped* kernel formulation: impl 'ref' is the vectorized jnp gather,
     'select' the register-resident Pallas select-tree, 'mxu' the per-group
-    one-hot GEMM on the MXU, and 'auto' the autotuned dispatch
+    one-hot GEMM on the MXU, 'stream' the gather-free in-kernel list DMA
+    (codes scanned in place in ``index.lists`` — the (Q, P, cap, M//2)
+    gathered copy never exists), and 'auto' the autotuned dispatch
     (``kernels.ops.SCAN_IMPLS``; resolution happens at trace time since all
-    shapes here are static). All bit-identical.
+    shapes here are static, and may itself pick 'stream'). All bit-identical
+    on every real candidate (invalid probes yield unmasked garbage distances
+    under any impl; consumers mask on ``ids >= 0``).
     """
     from repro.kernels import ops  # local import: kernels depend on nothing here
 
     qlut = _probe_tables(index, q, probe_ids)          # (Q, P, M, 16)
-    codes, ids = index.lists.gather(probe_ids)         # (Q,P,cap,Mh), (Q,P,cap)
-    qq, p, cap, mh = codes.shape
-    acc = ops.fastscan_grouped(
-        qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:]),
-        codes.reshape(qq * p, cap, mh), impl=impl).reshape(qq, p, cap)
+    qq, p = probe_ids.shape
+    cap = index.lists.cap
+    m = qlut.table_q8.shape[-2]
+    impl, tile_n = ops.resolve_scan_impl(impl, qq * p, cap, m)
+    tables = qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:])
+    if impl == "stream":
+        # in-place calling convention: the ListStore never gets copied —
+        # only the probed tiles cross into VMEM, and only the ids (needed
+        # downstream for masking/re-rank) are gathered
+        acc = ops.fastscan_stream_grouped(
+            tables, index.lists.codes, probe_ids.reshape(-1),
+            tile_n=tile_n).reshape(qq, p, cap)
+        ids = index.lists.gather_ids(probe_ids)        # (Q, P, cap)
+    else:
+        codes, ids = index.lists.gather(probe_ids)     # (Q,P,cap,Mh), (Q,P,cap)
+        acc = ops.fastscan_grouped(
+            tables, codes.reshape(qq * p, cap, -1),
+            impl=impl, tile_n=tile_n).reshape(qq, p, cap)
     dists = (qlut.scale[..., None] * acc.astype(jnp.float32)
              + jnp.sum(qlut.bias, axis=-1)[..., None])  # (Q, P, cap)
     return dists, ids
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "tile_n"))
+def scan_probes_stream(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
+                       keep: int, tile_n: int = 0
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Gather-free fine scan with fused candidate reduction.
+
+    The ``impl='stream'`` serving hot path: ADC runs over ``index.lists``
+    *in place* and the kernel reduces each cap tile to its ``kc =
+    min(keep, tile)`` best candidates in VMEM, so neither the gathered
+    (Q, P, cap, M//2) code copy nor the full (Q, P, cap) distance tensor
+    ever reaches HBM. Returns a *reduced* candidate pool
+    (dists (Q, C') f32, ids (Q, C') i32, -1 = absent) with
+    C' = P * n_tiles * kc.
+
+    Exactness: any final selection of <= ``keep`` candidates per query over
+    (dists, ids) — e.g. ``rerank.finalize_candidates`` with
+    ``r*k <= keep`` — is bit-identical to the same selection over the full
+    ``scan_probes`` pool: every true survivor is within its own tile's
+    top-kc (i32 ADC scores are exact), the pool preserves
+    (probe, tile, slot) order, and in-tile ties resolve lowest-slot-first,
+    matching ``masked_topk``'s lowest-flat-index tie-break.
+    """
+    from repro.kernels import ops
+
+    qlut = _probe_tables(index, q, probe_ids)          # (Q, P, M, 16)
+    qq, p = probe_ids.shape
+    vals, slots = ops.fastscan_stream_topk(
+        qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:]),
+        index.lists.codes, probe_ids.reshape(-1), index.lists.sizes,
+        keep=keep, tile_n=tile_n)                      # (G, n_tiles, kc) x2
+    n_tiles, kc = vals.shape[1], vals.shape[2]
+    vals = vals.reshape(qq, p, n_tiles * kc)
+    slots = slots.reshape(qq, p, n_tiles * kc)
+    valid = slots >= 0
+    # same affine dequantization expression as scan_probes -> f32-identical
+    dists = (qlut.scale[..., None] * vals.astype(jnp.float32)
+             + jnp.sum(qlut.bias, axis=-1)[..., None])
+    dists = jnp.where(valid, dists, jnp.inf)
+    # ids only for the kept candidates: a (Q, P, n_tiles*kc) gather instead
+    # of the full (Q, P, cap) one
+    lids = jnp.maximum(probe_ids, 0)[..., None]
+    ids = index.lists.ids[lids, jnp.maximum(slots, 0)]
+    ids = jnp.where(valid & (probe_ids >= 0)[..., None], ids, -1)
+    return dists.reshape(qq, -1), ids.reshape(qq, -1)
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe", "topk"))

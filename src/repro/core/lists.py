@@ -44,11 +44,26 @@ class ListStore(NamedTuple):
 
     def gather(self, probe_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
         """Gather probed lists: probe_ids (..., P) -> codes (..., P, cap, M//2),
-        ids (..., P, cap). Negative probe ids yield fully-padded lists."""
+        ids (..., P, cap). Negative probe ids yield fully-padded lists: ids
+        all -1 AND codes all zero (the early mask) — without it an invalid
+        probe hands list 0's real codes to the scan, which then does work
+        that ``probed_sizes`` (and ``QueryStats.codes_scanned``) never
+        counted, and which the gather-free stream kernel — skipping the DMA
+        outright — would disagree with."""
+        valid = probe_ids >= 0
         safe = jnp.maximum(probe_ids, 0)
-        codes = self.codes[safe]
-        ids = jnp.where((probe_ids >= 0)[..., None], self.ids[safe], -1)
+        codes = jnp.where(valid[..., None, None], self.codes[safe], 0)
+        ids = jnp.where(valid[..., None], self.ids[safe], -1)
         return codes, ids
+
+    def gather_ids(self, probe_ids: jax.Array) -> jax.Array:
+        """ids of ``gather`` alone: probe_ids (..., P) -> (..., P, cap) i32.
+
+        The gather-free scan path (``core.ivf.scan_probes`` with
+        impl='stream') reads codes in place and only needs this — the
+        (..., P, cap, M//2) code copy never exists."""
+        return jnp.where((probe_ids >= 0)[..., None],
+                         self.ids[jnp.maximum(probe_ids, 0)], -1)
 
     def probed_sizes(self, probe_ids: jax.Array) -> jax.Array:
         """True occupancy of each probed list (0 for invalid probes)."""

@@ -5,8 +5,10 @@ lived disconnected across ``core``:
 
   1. coarse: pluggable probe selection over the IVF centroids — flat
      brute-force, HNSW graph routing (paper Table 1), or k-means tree;
-  2. scan: the 4-bit fast-scan ADC over the gathered posting lists
-     (``core.ivf.scan_probes``, grouped Pallas kernel underneath);
+  2. scan: the 4-bit fast-scan ADC over the probed posting lists
+     (``core.ivf.scan_probes``, grouped Pallas kernel underneath; with
+     ``scan_impl='stream'`` the codes are scanned *in place* with fused
+     candidate reduction — no gathered copy, no full distance writeback);
   3. re-rank: exact float refinement of the top ``rerank_mult * k``
      quantized candidates (``engine.rerank``), Quicker-ADC style;
   4. merge: final masked top-k (single host) or the distributed 2k-scalar
@@ -55,6 +57,7 @@ class EngineConfig(NamedTuple):
     nprobe: int = 8         # lists scanned per query
     rerank_mult: int = 0    # refine rerank_mult*k candidates exactly; 0 = off
     scan_impl: str = "ref"  # grouped ADC impl: 'ref' | 'select' | 'mxu' |
+    #                         'stream' (gather-free in-kernel list DMA) |
     #                         'auto' (autotuned; see kernels.ops.SCAN_IMPLS)
     ef: int = 64            # HNSW beam width (hnsw coarse only)
 
@@ -127,11 +130,29 @@ def coarse_probes(coarse, q: jax.Array, *, nprobe: int, ef: int) -> jax.Array:
 
 
 def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
-                    *, scan_impl: str) -> tuple[jax.Array, jax.Array]:
+                    *, scan_impl: str, keep: int | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
     """Stage 2 — quantized scan, flattened to one candidate pool per query.
 
-    Returns (dists (Q, nprobe*cap) f32, ids (Q, nprobe*cap) i32, -1 = pad).
+    Returns (dists (Q, C) f32, ids (Q, C) i32, -1 = pad). With the gathered
+    impls C = nprobe*cap. ``keep`` is the per-query candidate budget the
+    downstream selection will take (r*k, or k without re-rank): when the
+    resolved impl is 'stream' and ``keep`` is given, the scan runs gather-
+    free over the in-place ListStore with fused per-tile reduction
+    (``core.ivf.scan_probes_stream``) and C shrinks to
+    nprobe*n_tiles*min(keep, tile) — bit-identical through any final
+    selection of <= keep candidates. ``keep=None`` always yields the full
+    pool (hand-composition back-compat).
     """
+    if keep is not None:
+        from repro.kernels import ops
+        qq, p = probes.shape
+        impl, tile_n = ops.resolve_scan_impl(
+            scan_impl, qq * p, index.lists.cap,
+            2 * index.lists.codes.shape[-1])
+        if impl == "stream":
+            return ivf_mod.scan_probes_stream(index, q, probes, keep=keep,
+                                              tile_n=tile_n)
     dists, ids = ivf_mod.scan_probes(index, q, probes, impl=scan_impl)
     qq = dists.shape[0]
     return dists.reshape(qq, -1), ids.reshape(qq, -1)
@@ -152,7 +173,11 @@ def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
               ef: int) -> SearchResult:
     """The whole engine as one pure function (stages 1-4 + stats)."""
     probes = coarse_probes(coarse, q, nprobe=nprobe, ef=ef)
-    flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl)
+    # the selection budget stage 3+4 will take — under 'stream' this lets
+    # the scan kernel reduce candidates in VMEM instead of writing the full
+    # (Q, nprobe*cap) pool to HBM
+    flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
+                                       keep=(r * k) if r else k)
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
         flat_d, flat_ids, base, q, k, r)
     return SearchResult(dists=vals, ids=out_ids,

@@ -30,7 +30,8 @@ from repro.core import topk as topk_mod
 from repro.core.kmeans import pairwise_sqdist
 from repro.core.lists import ListStore, partition_base, partition_lists
 from repro.engine import rerank as rerank_mod
-from repro.engine.engine import EngineConfig, QueryStats, SearchEngine, SearchResult
+from repro.engine.engine import (EngineConfig, QueryStats, SearchEngine,
+                                 SearchResult, scan_candidates)
 
 AXIS = "shards"
 
@@ -49,10 +50,15 @@ def _local_search(centroids, lists: ListStore, real, gids, codebook, base, q, *,
     nprobe_local = min(nprobe, centroids.shape[0])
     coarse_d = pairwise_sqdist(q, centroids)
     _, probes = topk_mod.smallest_k(coarse_d, nprobe_local)
-    dists, ids = ivf_mod.scan_probes(index, q, probes, impl=scan_impl)
-    qq = dists.shape[0]
+    # same stage function as the single-host engine, including its stream
+    # routing: each shard's local ListStore already has the
+    # (nlist_local, cap, M//2) layout the stream kernel scans in place, so a
+    # 'stream' (or 'auto'-resolved-to-stream) shard never materializes its
+    # gathered code copy either
+    flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
+                                       keep=(r * k) if r else k)
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
-        dists.reshape(qq, -1), ids.reshape(qq, -1), base, q, k, r)
+        flat_d, flat_ids, base, q, k, r)
     if remap:
         out_ids = jnp.where(out_ids >= 0, gids[jnp.maximum(out_ids, 0)], -1)
     mvals, mids = topk_mod.distributed_topk(vals, out_ids, k, AXIS)
@@ -154,6 +160,10 @@ class ShardedEngine:
             per_device, mesh=mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), base_spec, P()),
             out_specs=(P(AXIS), P(AXIS), P(AXIS)),
+            # jax has no replication rule for pallas_call (the 'stream' scan
+            # kernel); the merge replicates results itself via all_gather,
+            # so skipping the static replication check is sound
+            check_rep=False,
         )
         mvals, mids, stats = sharded(self.centroids_s, self.lists_s,
                                      self.real_s, self.gids_s, self.codebook,

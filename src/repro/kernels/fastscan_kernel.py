@@ -31,6 +31,20 @@ Variant C — ``fused block-min``: variant B plus an in-kernel per-tile
     min/argmin reduction, the TPU stand-in for faiss' SIMD top-k candidate
     filtering via ``_mm256_movemask_epi8`` (which has no Pallas equivalent).
 
+Variant D — ``stream`` (gather-free probe streaming):
+    The grouped variants above consume a *gathered* ``(G, cap, M//2)`` copy
+    of every probed list — an O(G·cap) HBM round trip that exists only to
+    feed the kernel. The stream kernels instead take ``ListStore.codes``
+    **in place** (``(nlist, cap, M//2)`` u8, memory space ANY) plus
+    scalar-prefetched probe ids, and each grid step DMAs only the probed
+    list's ``(tile_n, M//2)`` tile into VMEM — the gathered copy never
+    exists, and invalid probes (id -1) skip the DMA entirely.
+    ``fastscan_stream_topk_grouped`` additionally fuses the candidate
+    reduction: instead of writing the full ``(G, cap)`` accumulation back to
+    HBM it keeps a per-tile partial selection in VMEM and emits only
+    ``(G, n_tiles, kc)`` (quantized dist, slot) candidate pairs — shrinking
+    the scan-stage writeback by ~cap/kc.
+
 All kernels are tiled with explicit BlockSpecs. Codes arrive nibble-packed
 ``(N, M//2) u8`` — one VMEM tile feeds every variant with lane-contiguous
 access (the TPU adaptation of the paper's interleaved register layout).
@@ -42,6 +56,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # Default tile sizes. Lane dim multiples of 128, sublane multiples of 8
 # (f32/i32 VREG tile is 8x128). N tile of 1024 keeps the code tile
@@ -304,3 +319,205 @@ def fastscan_blockmin(table_q8: jax.Array, packed_codes: jax.Array, *,
         ],
         interpret=interpret,
     )(t_flat, packed_codes)
+
+
+# ---------------------------------------------------------------------------
+# Variant D: gather-free probe streaming (in-kernel list DMA)
+# ---------------------------------------------------------------------------
+
+# Larger than any reachable ADC sum (<= 128 sub-spaces * 255 = 32640), used
+# to mark padded/invalid candidate slots inside the fused selection.
+ACC_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _stream_grouped_kernel(probe_ref, table_ref, codes_hbm, out_ref,
+                           scratch, sem, *, tile_n: int):
+    """One (query, probe) group x one cap tile, codes DMA'd from HBM in place.
+
+    probe_ref: (G,) i32 scalar-prefetched flat probe ids (-1 = no probe)
+    table_ref: (1, M, 16) u8 block — this group's LUT (VMEM)
+    codes_hbm: (nlist, cap, M//2) u8, memory space ANY — the ListStore,
+               untouched; only the probed tile ever crosses into VMEM
+    out_ref:   (1, tile_n) i32 block
+    scratch:   (tile_n, M//2) u8 VMEM landing pad for the DMA
+    """
+    gi = pl.program_id(0)
+    ni = pl.program_id(1)
+    lid = probe_ref[gi]
+
+    @pl.when(lid >= 0)
+    def _scan():
+        dma = pltpu.make_async_copy(
+            codes_hbm.at[lid, pl.ds(ni * tile_n, tile_n), :], scratch, sem)
+        dma.start()
+        dma.wait()
+        codes = _unpack_nibbles_i32(scratch[...])  # (tn, M)
+        t = table_ref[0].astype(jnp.int32)         # (M, 16)
+        out_ref[...] = _select_tree_acc(t, codes)[None, :]
+
+    @pl.when(lid < 0)
+    def _skip():  # no DMA, no scan: invalid probes cost nothing
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def fastscan_stream_grouped(table_q8: jax.Array, list_codes: jax.Array,
+                            probe_ids: jax.Array, *, tile_n: int = TILE_N,
+                            interpret: bool = True) -> jax.Array:
+    """Gather-free grouped ADC: (G, M, 16) u8 LUTs x (nlist, cap, M//2) u8
+    codes *in place* + (G,) i32 probe ids -> (G, cap) i32.
+
+    Semantically ``fastscan_select_tree_grouped(table, codes[probe_ids])``
+    without the gathered copy ever existing: a PrefetchScalarGridSpec makes
+    ``probe_ids`` available before the grid runs, and each (group, cap-tile)
+    step DMAs only that probed list's tile from HBM into a VMEM scratch.
+    Invalid probes (id -1) skip the DMA entirely and emit zeros (their
+    output is id-masked downstream, like gathered padding). cap must be a
+    ``tile_n`` multiple — the store is scanned in place, never padded.
+    """
+    g, m, k = table_q8.shape
+    nlist, cap, mh = list_codes.shape
+    assert k == 16 and mh * 2 == m and probe_ids.shape == (g,)
+    assert cap % tile_n == 0, (cap, tile_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, cap // tile_n),
+        in_specs=[
+            pl.BlockSpec((1, m, 16), lambda gi, ni, pr: (gi, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, tile_n), lambda gi, ni, pr: (gi, ni)),
+        scratch_shapes=[
+            pltpu.VMEM((tile_n, mh), jnp.uint8),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    kernel = functools.partial(_stream_grouped_kernel, tile_n=tile_n)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, cap), jnp.int32),
+        interpret=interpret,
+    )(probe_ids, table_q8, list_codes)
+
+
+def _tile_topk(acc: jax.Array, slot_base: jax.Array, kc: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """Smallest kc of acc (1, tn) i32 by iterative min-extraction, in VMEM.
+
+    Entries equal to ACC_SENTINEL are treated as absent. Returns
+    (vals (1, kc) i32 ascending, slots (1, kc) i32 global slot ids, -1 where
+    fewer than kc real entries exist). Ties resolve to the lowest slot
+    (argmin takes the first occurrence), matching ``masked_topk``'s
+    lowest-flat-index tie-break on the full array.
+    """
+    tn = acc.shape[-1]
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, kc), 1)
+
+    def body(j, carry):
+        a, vals, slots = carry
+        mn = jnp.min(a, axis=-1, keepdims=True)                    # (1, 1)
+        am = jnp.argmin(a, axis=-1).astype(jnp.int32)[:, None]     # (1, 1)
+        vals = jnp.where(iota_k == j, mn, vals)
+        slots = jnp.where(iota_k == j, am, slots)
+        a = jnp.where(iota_n == am, ACC_SENTINEL, a)
+        return a, vals, slots
+
+    init = (acc,
+            jnp.full((1, kc), ACC_SENTINEL, jnp.int32),
+            jnp.zeros((1, kc), jnp.int32))
+    _, vals, slots = jax.lax.fori_loop(0, kc, body, init)
+    slots = jnp.where(vals == ACC_SENTINEL, -1, slots + slot_base)
+    return vals, slots
+
+
+def _stream_topk_kernel(probe_ref, sizes_ref, table_ref, codes_hbm,
+                        vals_ref, slots_ref, scratch, sem, *,
+                        tile_n: int, kc: int):
+    """Stream kernel + fused per-tile candidate selection.
+
+    Outputs per (group, cap-tile): the kc smallest quantized dists and their
+    global slot ids within the list (-1 = absent). Slots past the list's
+    true occupancy (``sizes_ref``) are masked to ACC_SENTINEL *before* the
+    selection, so padding can never displace a real candidate.
+    """
+    gi = pl.program_id(0)
+    ni = pl.program_id(1)
+    lid = probe_ref[gi]
+
+    @pl.when(lid >= 0)
+    def _scan():
+        dma = pltpu.make_async_copy(
+            codes_hbm.at[lid, pl.ds(ni * tile_n, tile_n), :], scratch, sem)
+        dma.start()
+        dma.wait()
+        codes = _unpack_nibbles_i32(scratch[...])  # (tn, M)
+        t = table_ref[0].astype(jnp.int32)
+        acc = _select_tree_acc(t, codes)[None, :]  # (1, tn)
+        slot = (jax.lax.broadcasted_iota(jnp.int32, (1, tile_n), 1)
+                + ni * tile_n)
+        acc = jnp.where(slot < sizes_ref[lid], acc, ACC_SENTINEL)
+        vals, slots = _tile_topk(acc, ni * tile_n, kc)
+        vals_ref[...] = vals[:, None, :]
+        slots_ref[...] = slots[:, None, :]
+
+    @pl.when(lid < 0)
+    def _skip():
+        vals_ref[...] = jnp.full_like(vals_ref, ACC_SENTINEL)
+        slots_ref[...] = jnp.full_like(slots_ref, -1)
+
+
+def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
+                                 probe_ids: jax.Array, sizes: jax.Array, *,
+                                 kc: int, tile_n: int = TILE_N,
+                                 interpret: bool = True
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Gather-free grouped ADC with fused candidate reduction.
+
+    table_q8 (G, M, 16) u8; list_codes (nlist, cap, M//2) u8 in place;
+    probe_ids (G,) i32 (-1 = no probe); sizes (nlist,) i32 true occupancy.
+    Returns (vals (G, n_tiles, kc) i32, slots (G, n_tiles, kc) i32): per
+    (group, cap-tile) the kc smallest quantized distances and their slot
+    position inside the probed list, -1 slot = absent (padding past the
+    list's occupancy, or an invalid probe — whose DMA is skipped outright).
+
+    The full (G, cap) accumulation never reaches HBM: selection happens in
+    VMEM on the tile the DMA just landed, so scan-stage writeback shrinks
+    by ~cap/kc. Keeping the per-tile top-kc is exact for any final
+    selection of <= kc candidates (every survivor is within its own tile's
+    top-kc), with ties resolved identically to ``masked_topk`` over the
+    full array (lowest slot wins).
+    """
+    g, m, k = table_q8.shape
+    nlist, cap, mh = list_codes.shape
+    assert k == 16 and mh * 2 == m and probe_ids.shape == (g,)
+    assert sizes.shape == (nlist,)
+    assert cap % tile_n == 0, (cap, tile_n)
+    assert 1 <= kc <= tile_n, (kc, tile_n)
+    n_tiles = cap // tile_n
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, m, 16), lambda gi, ni, pr, sz: (gi, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
+            pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_n, mh), jnp.uint8),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    kernel = functools.partial(_stream_topk_kernel, tile_n=tile_n, kc=kc)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((g, n_tiles, kc), jnp.int32),
+            jax.ShapeDtypeStruct((g, n_tiles, kc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probe_ids, sizes, table_q8, list_codes)

@@ -7,8 +7,10 @@ pure-jnp reference fallback. All variants are bit-identical; see ref.py.
 Impl registries — ONE source of truth, everything else derives from it:
 
   ``GROUPED_IMPLS``  concrete grouped-scan formulations ('ref' jnp gather /
-                     'select' VPU select-tree / 'mxu' one-hot GEMM);
-  ``IMPLS``          the flat (shared-database) scan supports the same set;
+                     'select' VPU select-tree / 'mxu' one-hot GEMM /
+                     'stream' gather-free in-kernel list DMA);
+  ``IMPLS``          the flat (shared-database) scan: the gathered subset
+                     (no probe indirection exists in the flat layout);
   ``SCAN_IMPLS``     what callers may request: GROUPED_IMPLS + 'auto'.
 
 ``impl='auto'`` resolves to a concrete (impl, tile_n) via a one-time timed
@@ -17,12 +19,17 @@ micro-sweep per ``(backend, interpret, G, cap, M)`` signature
 cached process-wide — the analogue of the paper picking the widest SIMD unit
 per target CPU, done empirically per shape instead of hard-coded per arch.
 ``autotune_cache()`` / ``autotune_cache_size()`` expose the cache for
-inspection, mirroring ``engine.fused_cache_size``.
+inspection, mirroring ``engine.fused_cache_size``;
+``save_autotune_cache()`` / ``load_autotune_cache()`` persist the resolved
+table to JSON so a serving fleet stops re-timing identical signatures on
+every boot (``ServingLoop(warmup_cache=...)``).
 """
 from __future__ import annotations
 
 import concurrent.futures
 import functools
+import json
+import os
 import threading
 import time
 from typing import NamedTuple
@@ -34,10 +41,11 @@ import numpy as np
 from repro.kernels import fastscan_kernel as fk
 from repro.kernels import ref as ref_mod
 
-# Concrete grouped-scan kernel formulations. The flat scan supports the same
-# three; the engine additionally accepts 'auto' (autotuned dispatch below).
-GROUPED_IMPLS = ("ref", "select", "mxu")
-IMPLS = GROUPED_IMPLS
+# Concrete grouped-scan kernel formulations. The flat scan supports the
+# gathered three; the engine additionally accepts 'auto' (autotuned dispatch
+# below).
+GROUPED_IMPLS = ("ref", "select", "mxu", "stream")
+IMPLS = ("ref", "select", "mxu")
 SCAN_IMPLS = GROUPED_IMPLS + ("auto",)
 
 
@@ -49,6 +57,22 @@ def _auto_tile(size: int, cap: int) -> int:
     """Largest power-of-two tile <= cap covering size (min 8, VREG sublane)."""
     pow2 = 1 << max(size - 1, 1).bit_length()
     return max(8, min(cap, pow2))
+
+
+def _stream_tile(cap: int, tile_n: int = 0) -> int:
+    """A cap tile for the in-place stream kernels: must DIVIDE cap (the
+    ListStore is scanned where it lives — there is nothing to pad). Honors
+    ``tile_n`` when it divides cap, otherwise falls back to the largest
+    power-of-two divisor <= TILE_N, then to cap itself (one tile per list).
+    """
+    if tile_n and cap % tile_n == 0:
+        return tile_n
+    t = fk.TILE_N
+    while t >= 8:
+        if cap % t == 0:
+            return t
+        t //= 2
+    return cap
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value: int = 0) -> jax.Array:
@@ -116,6 +140,26 @@ def _fastscan_grouped_pallas(table_q8: jax.Array, packed_codes: jax.Array, *,
     return acc[:, :cap]
 
 
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def _fastscan_grouped_stream(table_q8: jax.Array, packed_codes: jax.Array, *,
+                             tile_n: int, interpret: bool | None) -> jax.Array:
+    """Stream impl under the *gathered* calling convention: treat the
+    (G, cap, M//2) codes as an in-place store of G lists probed by
+    arange(G). Exists so 'stream' slots into the same registry/sweep as the
+    gathered impls; the gather-free payoff comes from calling
+    ``fastscan_stream_grouped`` on the real ListStore instead."""
+    g, cap = packed_codes.shape[0], packed_codes.shape[1]
+    interp = _default_interpret() if interpret is None else interpret
+    # padding a copy is fine here (this is the parity/sweep path, not the
+    # in-place hot path), so any tile works — pad cap up to it
+    tn = tile_n if (tile_n and cap % tile_n == 0) else _auto_tile(cap, fk.TILE_N)
+    codes_p = _pad_to(packed_codes, 1, tn)
+    probes = jnp.arange(g, dtype=jnp.int32)
+    acc = fk.fastscan_stream_grouped(table_q8, codes_p, probes, tile_n=tn,
+                                     interpret=interp)
+    return acc[:, :cap]
+
+
 def fastscan_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
                      impl: str = "ref", tile_n: int = 0,
                      interpret: bool | None = None) -> jax.Array:
@@ -124,7 +168,10 @@ def fastscan_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
 
     impl: 'ref' (vectorized jnp gather — fastest off-TPU) | 'select'
     (register-resident Pallas select-tree) | 'mxu' (per-group one-hot GEMM on
-    the MXU) | 'auto' (timed micro-sweep picks the (impl, tile_n) pair per
+    the MXU) | 'stream' (in-kernel DMA of one cap tile per grid step; under
+    this gathered signature it scans the codes as a G-list store probed by
+    arange — see ``fastscan_stream_grouped`` for the true in-place entry) |
+    'auto' (timed micro-sweep picks the (impl, tile_n) pair per
     (backend, interpret, G, cap, M) signature, cached process-wide; an
     explicit ``tile_n`` is ignored under 'auto' since the sweep timed pairs).
     Bit-identical.
@@ -148,11 +195,85 @@ def fastscan_grouped(table_q8: jax.Array, packed_codes: jax.Array, *,
         impl, tile_n = tuned.impl, tuned.tile_n
     if impl == "ref":
         return _fastscan_grouped_ref_jit(table_q8, packed_codes)
+    if impl == "stream":
+        return _fastscan_grouped_stream(table_q8, packed_codes, tile_n=tile_n,
+                                        interpret=interpret)
     return _fastscan_grouped_pallas(table_q8, packed_codes, impl=impl,
                                     tile_n=tile_n, interpret=interpret)
 
 
 _fastscan_grouped_ref_jit = jax.jit(ref_mod.fastscan_grouped_ref)
+
+
+def resolve_scan_impl(impl: str, g: int, cap: int, m: int, *,
+                      interpret: bool | None = None) -> tuple[str, int]:
+    """Resolve a requested scan impl to a concrete ``(impl, tile_n)``.
+
+    Concrete impls pass through with tile 0 (shape-fit default); ``'auto'``
+    consults the autotune table (``resolve_grouped_impl``) — which may pick
+    ``'stream'``, letting callers that hold the codes in place
+    (``core.ivf.scan_probes``) route to the gather-free path. Shared by the
+    single-host and sharded pipelines so dispatch cannot drift.
+    """
+    if impl not in SCAN_IMPLS:
+        raise ValueError(f"unknown grouped impl {impl!r}; "
+                         f"want one of {SCAN_IMPLS}")
+    if impl != "auto":
+        return impl, 0
+    tuned = resolve_grouped_impl(g, cap, m, interpret=interpret)
+    return tuned.impl, tuned.tile_n
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def fastscan_stream_grouped(table_q8: jax.Array, list_codes: jax.Array,
+                            probe_ids: jax.Array, *, tile_n: int = 0,
+                            interpret: bool | None = None) -> jax.Array:
+    """Gather-free grouped ADC over an in-place ListStore.
+
+    table_q8: (G, M, 16) u8 per-group LUTs; list_codes: (nlist, cap, M//2)
+    u8 — ``ListStore.codes``, scanned where it lives (no gathered copy);
+    probe_ids: (G,) i32, -1 = no probe (DMA skipped, zeros emitted).
+    Returns (G, cap) i32, identical at every real slot to
+    ``fastscan_grouped(table, list_codes[probe_ids])``.
+    """
+    g, m, k = table_q8.shape
+    cap = list_codes.shape[1]
+    assert k == 16, f"4-bit PQ requires K=16, got {k}"
+    assert probe_ids.shape == (g,), (probe_ids.shape, g)
+    interp = _default_interpret() if interpret is None else interpret
+    tn = _stream_tile(cap, tile_n)
+    return fk.fastscan_stream_grouped(table_q8, list_codes,
+                                      probe_ids.astype(jnp.int32),
+                                      tile_n=tn, interpret=interp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("keep", "tile_n", "interpret"))
+def fastscan_stream_topk(table_q8: jax.Array, list_codes: jax.Array,
+                         probe_ids: jax.Array, sizes: jax.Array, *,
+                         keep: int, tile_n: int = 0,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Gather-free scan + fused candidate reduction over an in-place store.
+
+    Like ``fastscan_stream_grouped`` but the full (G, cap) accumulation
+    never reaches HBM: each cap tile keeps only its ``kc = min(keep,
+    tile_n)`` smallest entries, so any final selection of <= ``keep``
+    candidates per query is exact (see the kernel docstring for the
+    tie-break argument). ``sizes`` (nlist,) i32 masks slots past each
+    list's true occupancy before selection. Returns
+    (vals (G, n_tiles, kc) i32, slots (G, n_tiles, kc) i32, -1 = absent).
+    """
+    g, m, k = table_q8.shape
+    cap = list_codes.shape[1]
+    assert k == 16, f"4-bit PQ requires K=16, got {k}"
+    assert probe_ids.shape == (g,), (probe_ids.shape, g)
+    interp = _default_interpret() if interpret is None else interpret
+    tn = _stream_tile(cap, tile_n)
+    kc = max(1, min(keep, tn))
+    return fk.fastscan_stream_topk_grouped(
+        table_q8, list_codes, probe_ids.astype(jnp.int32),
+        sizes.astype(jnp.int32), kc=kc, tile_n=tn, interpret=interp)
 
 
 class TunedScan(NamedTuple):
@@ -248,7 +369,16 @@ def _run_grouped_sweep(g: int, cap: int, m: int, interp: bool) -> TunedScan:
     codes = rng.integers(0, 256, (g, cap, m // 2), dtype=np.uint8)
     sweep = []
     for impl in GROUPED_IMPLS:
-        tiles = (0,) if impl == "ref" else _grouped_tile_candidates(cap)
+        if impl == "ref":
+            tiles = (0,)
+        elif impl == "stream":
+            # stream scans the store in place, so only cap-dividing tiles
+            # are realizable — map each candidate to its realizable tile so
+            # the verdict's (impl, tile) pair is exactly what executes
+            tiles = tuple(sorted({_stream_tile(cap, t)
+                                  for t in _grouped_tile_candidates(cap)}))
+        else:
+            tiles = _grouped_tile_candidates(cap)
         for tn in tiles:
             try:
                 us = _median_time_us(functools.partial(
@@ -285,6 +415,71 @@ def autotune_cache_size() -> int:
 def clear_autotune_cache() -> None:
     """Drop all resolutions (tests; a backend change mid-process)."""
     _AUTOTUNE_CACHE.clear()
+
+
+_AUTOTUNE_SCHEMA = "repro.autotune/v1"
+
+
+def save_autotune_cache(path: str) -> int:
+    """Serialize the resolved TunedScan table to JSON at ``path``.
+
+    Returns the number of entries written. The key quintuple
+    (backend, interpret, G, cap, M) is stored per entry, so one file can
+    hold verdicts for several backends; ``load_autotune_cache`` re-keys
+    them verbatim and lookups still only ever hit the running backend's
+    signatures. A serving fleet saves after its first warmup and ships the
+    file to every replica (``ServingLoop(warmup_cache=...)``).
+    """
+    with _AUTOTUNE_LOCK:  # a concurrent sweep may be inserting its verdict
+        snapshot = dict(_AUTOTUNE_CACHE)
+    entries = [
+        {"backend": b, "interpret": bool(i), "g": g, "cap": c, "m": m,
+         "impl": t.impl, "tile_n": t.tile_n,
+         "timings_us": [[name, us] for name, us in t.timings_us]}
+        for (b, i, g, c, m), t in snapshot.items()
+    ]
+    with open(path, "w") as f:
+        json.dump({"schema": _AUTOTUNE_SCHEMA, "entries": entries}, f,
+                  indent=2)
+    return len(entries)
+
+
+def load_autotune_cache(path: str) -> int:
+    """Merge a ``save_autotune_cache`` file into the process-wide table.
+
+    Returns the number of entries adopted. Missing file, wrong schema, or
+    malformed JSON load nothing (0) — a stale or absent warmup cache must
+    never stop a boot, it just means the sweeps run again. Entries naming
+    an impl that no longer exists in ``GROUPED_IMPLS`` are skipped (stale
+    file from an older build); entries already resolved in this process
+    keep their in-process verdict.
+    """
+    if not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return 0
+    if not isinstance(data, dict) or data.get("schema") != _AUTOTUNE_SCHEMA:
+        return 0
+    loaded = 0
+    with _AUTOTUNE_LOCK:
+        for e in data.get("entries", ()):
+            try:
+                key = (str(e["backend"]), bool(e["interpret"]), int(e["g"]),
+                       int(e["cap"]), int(e["m"]))
+                tuned = TunedScan(
+                    impl=str(e["impl"]), tile_n=int(e["tile_n"]),
+                    timings_us=tuple((str(n), float(us))
+                                     for n, us in e["timings_us"]))
+            except (KeyError, TypeError, ValueError):
+                continue
+            if tuned.impl not in GROUPED_IMPLS or key in _AUTOTUNE_CACHE:
+                continue
+            _AUTOTUNE_CACHE[key] = tuned
+            loaded += 1
+    return loaded
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import SearchEngine, fused_cache_size
-from repro.kernels.ops import autotune_cache_size
+from repro.kernels.ops import (autotune_cache_size, load_autotune_cache,
+                               save_autotune_cache)
 from repro.serving.batcher import DEFAULT_BUCKETS, Batcher, Request
 from repro.serving.stats import StatsRegistry
 
@@ -73,8 +74,14 @@ class ServingLoop:
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  max_wait_s: float = 0.002,
                  nprobe: int | None = None, rerank_mult: int | None = None,
-                 stats: StatsRegistry | None = None):
+                 stats: StatsRegistry | None = None,
+                 warmup_cache: str | None = None):
         self.engine = engine
+        # path of a persisted autotune table (kernels.ops.save_autotune_cache
+        # format): loaded before warmup so a fleet replica skips the timed
+        # kernel sweeps its siblings already ran, re-saved after warmup so
+        # first boot populates it. None = per-process sweeps only.
+        self.warmup_cache = warmup_cache
         self.batcher = batcher or Batcher(buckets=buckets, max_wait_s=max_wait_s)
         self.nprobe = engine.config.nprobe if nprobe is None else int(nprobe)
         self.rerank_mult = (engine.config.rerank_mult if rerank_mult is None
@@ -100,6 +107,10 @@ class ServingLoop:
               ) -> "ServingLoop":
         """Spawn the dispatch thread; optionally pre-compile every bucket.
 
+        With ``warmup_cache`` set, the persisted autotune table is loaded
+        before the warmup (so a fleet replica pays zero timed sweeps for
+        signatures its siblings already resolved) and re-saved after it.
+
         A stopped loop can be started again (pending state was cancelled at
         stop; counters keep accumulating).
         """
@@ -107,7 +118,17 @@ class ServingLoop:
             raise RuntimeError("loop already started")
         self.batcher.reopen()
         if warmup:
+            if self.warmup_cache:
+                load_autotune_cache(self.warmup_cache)
             self.warmup(ks=warmup_ks)
+            if self.warmup_cache:
+                try:
+                    save_autotune_cache(self.warmup_cache)
+                except OSError:
+                    # a read-only fleet mount (replicas share the file) or a
+                    # missing parent dir must never stop a boot — the cache
+                    # only saves re-timing, it is not required state
+                    pass
         self._stop.clear()
         self._thread = threading.Thread(target=self._run, name="repro-serve",
                                         daemon=True)

@@ -65,11 +65,12 @@ def test_search_matches_hand_composed_hnsw_pipeline():
     np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ids_hand))
 
 
-@pytest.mark.parametrize("impl", ["select", "mxu", "auto"])
+@pytest.mark.parametrize("impl", ["select", "mxu", "stream", "auto"])
 def test_scan_impl_matches_ref_through_engine(impl):
-    """Every grouped kernel formulation — select-tree VPU, one-hot MXU, and
-    the autotuned dispatch — produces results identical to the jnp gather
-    end-to-end, through both the staged and the fused pipeline."""
+    """Every grouped kernel formulation — select-tree VPU, one-hot MXU, the
+    gather-free stream DMA, and the autotuned dispatch — produces results
+    identical to the jnp gather end-to-end, through both the staged and the
+    fused pipeline."""
     ds, eng = small_ds(), small_engine()
     eng_i = SearchEngine(eng.index, base=ds.base,
                          config=EngineConfig(scan_impl=impl))

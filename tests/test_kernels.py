@@ -155,9 +155,12 @@ def test_grouped_unknown_impl_raises():
 
 
 def test_impl_registries_are_one_source_of_truth():
-    """engine.SCAN_IMPLS and ops.IMPLS both derive from ops.GROUPED_IMPLS."""
+    """engine.SCAN_IMPLS derives from ops.GROUPED_IMPLS; the flat scan
+    supports the gathered subset (no probe indirection to stream through)."""
     from repro.engine import engine as engine_mod
-    assert ops.IMPLS == ops.GROUPED_IMPLS
+    assert ops.IMPLS == ("ref", "select", "mxu")
+    assert set(ops.IMPLS) < set(ops.GROUPED_IMPLS)
+    assert "stream" in ops.GROUPED_IMPLS
     assert ops.SCAN_IMPLS == ops.GROUPED_IMPLS + ("auto",)
     assert engine_mod.SCAN_IMPLS is ops.SCAN_IMPLS
 

@@ -1,0 +1,78 @@
+"""Non-blocking scan-traffic regression check for the CI bench smoke.
+
+Diffs the ``bytes_accessed`` fields of a freshly produced BENCH_kernels.json
+against the committed baseline and emits a GitHub Actions ``::warning``
+annotation for every record whose scan-stage HBM traffic grew more than the
+threshold (default 10%). Always exits 0 — traffic is a trend to watch, not
+a gate (shapes and backends legitimately change); the annotation puts the
+regression in the job summary where a reviewer sees it.
+
+Usage:
+    python tools/check_bench_traffic.py --baseline /tmp/baseline.json \
+        --fresh BENCH_kernels.json [--threshold 0.10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load_records(path: str) -> dict[tuple, dict]:
+    """Index records by identity key; records without bytes are skipped."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::notice::traffic check skipped: cannot read {path} ({e})")
+        return {}
+    out = {}
+    for rec in data.get("records", []):
+        if rec.get("bytes_accessed") is None:
+            continue
+        key = (rec.get("kernel"), rec.get("impl"), rec.get("backend"),
+               rec.get("G"), rec.get("Q"), rec.get("P"), rec.get("cap"),
+               rec.get("M"))
+        out[key] = rec
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_kernels.json (pre-run copy)")
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH_kernels.json produced by this run")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative growth that triggers a warning")
+    args = ap.parse_args(argv)
+
+    base = _load_records(args.baseline)
+    fresh = _load_records(args.fresh)
+    if not base or not fresh:
+        print("::notice::traffic check: nothing to compare")
+        return 0
+
+    grew = checked = 0
+    for key, rec in sorted(fresh.items(), key=str):
+        old = base.get(key)
+        if old is None or not old["bytes_accessed"]:
+            continue
+        checked += 1
+        ratio = rec["bytes_accessed"] / old["bytes_accessed"]
+        label = "/".join(str(k) for k in key if k is not None)
+        if ratio > 1.0 + args.threshold:
+            grew += 1
+            print(f"::warning title=scan traffic regression::{label}: "
+                  f"bytes_accessed {old['bytes_accessed']:.0f} -> "
+                  f"{rec['bytes_accessed']:.0f} ({(ratio - 1) * 100:+.1f}%)")
+        else:
+            print(f"ok {label}: {old['bytes_accessed']:.0f} -> "
+                  f"{rec['bytes_accessed']:.0f} ({(ratio - 1) * 100:+.1f}%)")
+    print(f"traffic check: {checked} records compared, {grew} grew "
+          f">{args.threshold * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
