@@ -23,8 +23,9 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import ivf
-from repro.core.lists import ListStore
+from repro.core.lists import ListStore, base_norms
 from repro.core.pq import PQCodebook
+from repro.engine import rerank as rerank_mod
 from repro.kernels import ops, ref
 from repro.launch import roofline as rl
 from repro.launch.hlo_analysis import xla_cost_dict
@@ -132,6 +133,50 @@ def scan_stage_traffic(q: int = 32, p: int = 16, cap: int = 1024,
     return records
 
 
+def rerank_stage_traffic(q: int = 32, k: int = 10, r: int = 4,
+                         d: int = 128, n: int = 4096) -> list[dict]:
+    """HBM bytes-accessed of the exact re-rank STAGE, gathered vs stream.
+
+    The gathered path materializes a (Q, R, D) f32 copy of the candidate
+    base rows (norms+GEMM formulation — already free of the broadcast-
+    subtraction intermediate) before top-k; the streamed path
+    (``ops.rerank_stream_topk``) DMAs only the candidate rows out of the
+    in-place base and reduces to (Q, k) in VMEM. Compiled-only
+    (cost_analysis needs no execution), so this runs at the acceptance
+    shape (Q=32, k=10, r=4, D=128) even in the CI smoke job. The gathered
+    number grows with N (XLA charges the row gather against the whole
+    table); the stream number does not — the base is an in-place operand
+    the kernel only ever touches R rows of.
+    """
+    rng = np.random.default_rng(0)
+    rr = r * k
+    base = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    norms = base_norms(base)
+    qs = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
+    cand = jnp.asarray(rng.integers(0, n, (q, rr)).astype(np.int32))
+    stages = (
+        ("gathered", jax.jit(functools.partial(rerank_mod.exact_rerank, k=k)),
+         (base, qs, cand), {"norms": norms}),
+        ("stream", jax.jit(functools.partial(ops.rerank_stream_topk, k=k)),
+         (base, norms, qs, cand), {}),
+    )
+    records = []
+    for name, fn, args, kw in stages:
+        cost = xla_cost_dict(fn.lower(*args, **kw).compile())
+        rec = {"kernel": "rerank_stage", "impl": name, "Q": q, "k": k,
+               "r": r, "D": d, "N": n,
+               "bytes_accessed": cost.get("bytes accessed", 0.0),
+               "backend": jax.default_backend()}
+        records.append(rec)
+        common.emit(f"rerank_stage_bytes_{name}", 0.0,
+                    f"bytes_accessed={rec['bytes_accessed']:.0f}")
+    if records[1]["bytes_accessed"]:
+        ratio = records[0]["bytes_accessed"] / records[1]["bytes_accessed"]
+        common.emit("rerank_stage_traffic_ratio", 0.0,
+                    f"gathered/stream={ratio:.1f}x (acceptance: >= 4x)")
+    return records
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     q_, n_, m_ = 8, 65536, 16
@@ -143,7 +188,7 @@ def main() -> None:
         common.emit(f"kernel_{impl}_Q{q_}_N{n_}_M{m_}", t / q_,
                     "interpret-mode wall clock (CPU correctness path)")
 
-    records = grouped_sweep() + scan_stage_traffic()
+    records = grouped_sweep() + scan_stage_traffic() + rerank_stage_traffic()
     with open(KERNELS_JSON, "w") as f:
         json.dump({"schema": "repro.kernel_bench/v1", "records": records}, f,
                   indent=2)

@@ -19,7 +19,9 @@ fused ``search_jit`` dispatch latency at Q=1 — separating the kernel win
 (which impl scans fastest; ``stream`` is the gather-free in-kernel DMA
 path) from the dispatch win (tracing the whole pipeline into a single XLA
 program). The stream-vs-ref fused delta is the end-to-end cost/benefit of
-removing the gathered candidate pool at serving batch sizes.
+removing the gathered candidate pool at serving batch sizes. A matching
+``serve_fused_speedup_rerank_{impl}`` row per exact-re-rank impl
+(gathered / stream / auto) isolates stage 3's gather-free win the same way.
 """
 from __future__ import annotations
 
@@ -32,7 +34,7 @@ import numpy as np
 from benchmarks import common
 from repro.data import vectors
 from repro.engine import EngineConfig, SearchEngine
-from repro.kernels.ops import SCAN_IMPLS
+from repro.kernels.ops import RERANK_IMPLS, SCAN_IMPLS
 from repro.serving import ServingLoop
 
 
@@ -96,6 +98,20 @@ def main() -> None:
         if impl == engine.config.scan_impl:
             t_fused = t_f
     assert t_fused is not None  # SCAN_IMPLS always contains the default impl
+
+    # same decomposition for stage 3: staged vs fused per exact-re-rank impl
+    # (the gathered-vs-stream fused delta is the end-to-end cost/benefit of
+    # removing the candidate-row gather at serving batch sizes)
+    for impl in RERANK_IMPLS:
+        eng_i = SearchEngine(engine.index, base=engine.base,
+                             config=engine.config._replace(rerank_impl=impl))
+        t_s = common.time_call(
+            lambda e=eng_i: e.search(q1, 10, rerank_mult=4).ids, iters=5)
+        t_f = common.time_call(
+            lambda e=eng_i: e.search_jit(q1, 10, rerank_mult=4).ids, iters=5)
+        common.emit(f"serve_fused_speedup_rerank_{impl}", t_f,
+                    f"staged_us={t_s * 1e6:.1f};"
+                    f"speedup={t_s / max(t_f, 1e-12):.2f}x")
 
     loop = ServingLoop(engine, rerank_mult=4, max_wait_s=0.005)
     loop.start(warmup=True)

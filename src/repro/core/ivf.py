@@ -144,7 +144,8 @@ def scan_probes(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
     qq, p = probe_ids.shape
     cap = index.lists.cap
     m = qlut.table_q8.shape[-2]
-    impl, tile_n = ops.resolve_scan_impl(impl, qq * p, cap, m)
+    impl, tile_n = ops.resolve_scan_impl(impl, qq * p, cap, m,
+                                         nlist=index.lists.nlist)
     tables = qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:])
     if impl == "stream":
         # in-place calling convention: the ListStore never gets copied —

@@ -70,6 +70,21 @@ class ListStore(NamedTuple):
         return jnp.where(probe_ids >= 0, self.sizes[jnp.maximum(probe_ids, 0)], 0)
 
 
+@jax.jit
+def base_norms(base: jax.Array) -> jax.Array:
+    """Per-row squared norms ``‖x‖²`` of the base vectors: (N, D) -> (N,) f32.
+
+    Precomputed once at engine construction (and per shard by
+    ``partition_base``) so the exact re-rank stage can use the norms+GEMM
+    distance formulation ``(‖q‖² − 2·q·x) + ‖x‖²`` without touching the
+    rows twice — the streaming re-rank kernel gathers only these scalars
+    up front and DMAs the rows themselves in place. The mul + ``axis=-1``
+    sum here is the exact expression ``rerank_kernel.norms_gemm_dists``
+    uses for ``‖q‖²``, keeping every path's rounding identical.
+    """
+    return jnp.sum(base * base, axis=-1)
+
+
 def build_lists(assign: np.ndarray, packed_codes: np.ndarray, *, nlist: int,
                 cap: int | None = None, ids: np.ndarray | None = None) -> ListStore:
     """Bucket packed codes into padded lists (host-side, offline).
@@ -146,7 +161,7 @@ def partition_lists(store: ListStore, centroids: jax.Array, num_shards: int
 
 
 def partition_base(lists_s: ListStore, base: jax.Array
-                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Per-shard base-vector slices + the id->row remap for sharded re-rank.
 
     Each base vector lives in exactly one posting list, hence on exactly one
@@ -162,7 +177,10 @@ def partition_base(lists_s: ListStore, base: jax.Array
       base_s    (S, R, D) f32 — shard-local base rows, zero-padded;
       gids_s    (S, R)    i32 — global id of each local row (-1 = padding);
       local_ids (S, L, cap) i32 — ``lists_s.ids`` remapped to shard-local
-                row indices into ``base_s`` (-1 where ids was -1).
+                row indices into ``base_s`` (-1 where ids was -1);
+      norms_s   (S, R)    f32 — ``base_norms`` of each local row (0 at
+                padding), stored alongside the partitioned base so the
+                norms+GEMM re-rank never recomputes them per query.
 
     R = max over shards of the shard's vector count (static shapes — the
     round-robin list partition keeps shards balanced, so the padding slack
@@ -183,5 +201,12 @@ def partition_base(lists_s: ListStore, base: jax.Array
         base_s[j, :g.size] = base_np[g]
         gids_s[j, :g.size] = g
         local_flat[j][mask[j]] = np.arange(g.size, dtype=np.int32)
-    return (jnp.asarray(base_s), jnp.asarray(gids_s),
-            jnp.asarray(local_flat.reshape(ids.shape)))
+    base_s = jnp.asarray(base_s)
+    # slice the precomputed norms per shard instead of re-deriving from the
+    # sliced rows: gathering from one (N,) base_norms output keeps every
+    # shard's values bitwise identical to the single-host engine's
+    norms = np.asarray(base_norms(jnp.asarray(base_np)))
+    norms_s = np.where(gids_s >= 0, norms[np.maximum(gids_s, 0)],
+                       0.0).astype(np.float32)
+    return (base_s, jnp.asarray(gids_s),
+            jnp.asarray(local_flat.reshape(ids.shape)), jnp.asarray(norms_s))

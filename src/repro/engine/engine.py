@@ -45,8 +45,10 @@ import jax.numpy as jnp
 
 from repro.core import coarse as coarse_mod
 from repro.core import ivf as ivf_mod
+from repro.core.lists import base_norms
 from repro.engine import rerank as rerank_mod
-from repro.kernels.ops import SCAN_IMPLS  # single source of truth (kernels.ops)
+# single source of truth for both registries (kernels.ops)
+from repro.kernels.ops import RERANK_IMPLS, SCAN_IMPLS
 
 COARSE_KINDS = ("flat", "hnsw", "tree")
 
@@ -60,6 +62,9 @@ class EngineConfig(NamedTuple):
     #                         'stream' (gather-free in-kernel list DMA) |
     #                         'auto' (autotuned; see kernels.ops.SCAN_IMPLS)
     ef: int = 64            # HNSW beam width (hnsw coarse only)
+    rerank_impl: str = "gathered"  # exact re-rank impl: 'gathered' |
+    #                         'stream' (gather-free in-kernel row DMA) |
+    #                         'auto' (see kernels.ops.RERANK_IMPLS)
 
 
 _EF_DEFAULT = EngineConfig._field_defaults["ef"]
@@ -95,6 +100,10 @@ def validate_config(config: EngineConfig, *, coarse_kind: str,
     if config.scan_impl not in SCAN_IMPLS:
         raise ValueError(f"EngineConfig.scan_impl {config.scan_impl!r} unknown; "
                          f"want one of {SCAN_IMPLS}")
+    if config.rerank_impl not in RERANK_IMPLS:
+        raise ValueError(
+            f"EngineConfig.rerank_impl {config.rerank_impl!r} unknown; "
+            f"want one of {RERANK_IMPLS}")
     if config.ef < 1:
         raise ValueError(f"EngineConfig.ef must be >= 1, got {config.ef}")
     if config.ef != _EF_DEFAULT and coarse_kind != "hnsw":
@@ -149,7 +158,7 @@ def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
         qq, p = probes.shape
         impl, tile_n = ops.resolve_scan_impl(
             scan_impl, qq * p, index.lists.cap,
-            2 * index.lists.codes.shape[-1])
+            2 * index.lists.codes.shape[-1], nlist=index.lists.nlist)
         if impl == "stream":
             return ivf_mod.scan_probes_stream(index, q, probes, keep=keep,
                                               tile_n=tile_n)
@@ -169,8 +178,9 @@ def make_stats(index: ivf_mod.IVFIndex, probes: jax.Array,
 
 
 def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
-              q: jax.Array, *, k: int, nprobe: int, r: int, scan_impl: str,
-              ef: int) -> SearchResult:
+              norms: jax.Array | None, q: jax.Array, *, k: int, nprobe: int,
+              r: int, scan_impl: str, rerank_impl: str, ef: int
+              ) -> SearchResult:
     """The whole engine as one pure function (stages 1-4 + stats)."""
     probes = coarse_probes(coarse, q, nprobe=nprobe, ef=ef)
     # the selection budget stage 3+4 will take — under 'stream' this lets
@@ -179,7 +189,7 @@ def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
     flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
                                        keep=(r * k) if r else k)
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
-        flat_d, flat_ids, base, q, k, r)
+        flat_d, flat_ids, base, q, k, r, norms=norms, rerank_impl=rerank_impl)
     return SearchResult(dists=vals, ids=out_ids,
                         stats=make_stats(index, probes, reranked))
 
@@ -188,7 +198,8 @@ def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
 # leaf shapes/dtypes, so N engines serving the same bucket shapes share
 # compiles. This is the serving fast path.
 _fused_pipeline = jax.jit(
-    _pipeline, static_argnames=("k", "nprobe", "r", "scan_impl", "ef"))
+    _pipeline,
+    static_argnames=("k", "nprobe", "r", "scan_impl", "rerank_impl", "ef"))
 
 
 def fused_cache_size() -> int:
@@ -217,6 +228,9 @@ class SearchEngine:
                  ef_construction: int = 64):
         self.index = index
         self.base = base
+        # ‖x‖² per base row, computed once: the norms+GEMM re-rank (both
+        # impls) reads these instead of re-deriving norms per query
+        self.base_norms = None if base is None else base_norms(base)
         self.config = config or EngineConfig()
         if isinstance(coarse, str):
             if coarse == "flat":
@@ -287,8 +301,10 @@ class SearchEngine:
         merge (requires ``base``); 0 returns pure fast-scan results.
         """
         q, nprobe, r = self._resolve(queries, nprobe, rerank_mult)
-        return _pipeline(self.coarse, self.index, self.base, q, k=k,
-                         nprobe=nprobe, r=r, scan_impl=self.config.scan_impl,
+        return _pipeline(self.coarse, self.index, self.base, self.base_norms,
+                         q, k=k, nprobe=nprobe, r=r,
+                         scan_impl=self.config.scan_impl,
+                         rerank_impl=self.config.rerank_impl,
                          ef=self.config.ef)
 
     def search_jit(self, queries: jax.Array, k: int = 10, *,
@@ -308,9 +324,10 @@ class SearchEngine:
         if self.coarse_kind == "custom":
             # unknown coarse objects may not be jax pytrees => not traceable
             return self.search(queries, k, nprobe=nprobe, rerank_mult=r)
-        return _fused_pipeline(self.coarse, self.index, self.base, q, k=k,
-                               nprobe=nprobe, r=r,
+        return _fused_pipeline(self.coarse, self.index, self.base,
+                               self.base_norms, q, k=k, nprobe=nprobe, r=r,
                                scan_impl=self.config.scan_impl,
+                               rerank_impl=self.config.rerank_impl,
                                ef=self.config.ef)
 
 

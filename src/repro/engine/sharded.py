@@ -36,15 +36,16 @@ from repro.engine.engine import (EngineConfig, QueryStats, SearchEngine,
 AXIS = "shards"
 
 
-def _local_search(centroids, lists: ListStore, real, gids, codebook, base, q, *,
-                  k: int, nprobe: int, r: int, scan_impl: str, remap: bool):
+def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
+                  norms, q, *, k: int, nprobe: int, r: int, scan_impl: str,
+                  rerank_impl: str, remap: bool):
     """One shard's pipeline + the cross-shard merge. Runs under a named axis.
 
     With ``remap=True`` the shard's list ids are *local* rows into its own
     ``base`` slice (see ``partition_base``): the scan and re-rank both work
     on local ids and ``gids`` translates back to global just before the
     distributed merge. With ``remap=False`` (no base held) ids are global
-    throughout and ``gids`` is an unused dummy.
+    throughout and ``gids``/``norms`` are unused dummies.
     """
     index = ivf_mod.IVFIndex(centroids=centroids, codebook=codebook, lists=lists)
     nprobe_local = min(nprobe, centroids.shape[0])
@@ -57,8 +58,11 @@ def _local_search(centroids, lists: ListStore, real, gids, codebook, base, q, *,
     # gathered code copy either
     flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
                                        keep=(r * k) if r else k)
+    # re-rank (either impl) runs on the shard-local (R, D) base slice with
+    # its precomputed local norms; local candidate ids map back to global
+    # through gids only after the top-k, just before the merge
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
-        flat_d, flat_ids, base, q, k, r)
+        flat_d, flat_ids, base, q, k, r, norms=norms, rerank_impl=rerank_impl)
     if remap:
         out_ids = jnp.where(out_ids >= 0, gids[jnp.maximum(out_ids, 0)], -1)
     mvals, mids = topk_mod.distributed_topk(vals, out_ids, k, AXIS)
@@ -85,8 +89,11 @@ class ShardedEngine:
     When the wrapped engine holds base vectors, they are partitioned by
     shard list-membership (``partition_base``): each shard's re-rank reads
     only its own (R, D) slice, R ~= N/S, instead of a replicated (N, D)
-    copy. Shard-local ListStore ids become local row indices; ``gids_s``
-    maps them back to global ids after the per-shard pipeline.
+    copy — with the per-row ‖x‖² norms (``norms_s``) partitioned alongside
+    for the norms+GEMM formulation, so a 'stream' re-rank shard DMAs
+    candidate rows straight out of its local slice. Shard-local ListStore
+    ids become local row indices; ``gids_s`` maps them back to global ids
+    after the per-shard pipeline.
     """
 
     def __init__(self, engine: SearchEngine, num_shards: int):
@@ -98,13 +105,14 @@ class ShardedEngine:
         self.centroids_s, self.lists_s, self.real_s = partition_lists(
             engine.index.lists, engine.index.centroids, self.num_shards)
         if engine.base is not None:
-            self.base_s, self.gids_s, local_ids = partition_base(
+            self.base_s, self.gids_s, local_ids, self.norms_s = partition_base(
                 self.lists_s, engine.base)
             self.lists_s = self.lists_s._replace(ids=local_ids)
         else:
             self.base_s = None
-            # unused dummy so both vmap and shard_map see a uniform arity
+            # unused dummies so both vmap and shard_map see a uniform arity
             self.gids_s = jnp.full((self.num_shards, 1), -1, jnp.int32)
+            self.norms_s = None
 
     @property
     def base(self) -> jax.Array | None:
@@ -128,14 +136,16 @@ class ShardedEngine:
                              "base vectors (build with keep_base=True)")
         fn = functools.partial(_local_search, k=k, nprobe=nprobe, r=r,
                                scan_impl=self.config.scan_impl,
+                               rerank_impl=self.config.rerank_impl,
                                remap=self.base_s is not None)
         base_ax = 0 if self.base_s is not None else None
 
         if mesh is None:
             mvals, mids, stats = jax.vmap(
-                fn, in_axes=(0, 0, 0, 0, None, base_ax, None), axis_name=AXIS,
+                fn, in_axes=(0, 0, 0, 0, None, base_ax, base_ax, None),
+                axis_name=AXIS,
             )(self.centroids_s, self.lists_s, self.real_s, self.gids_s,
-              self.codebook, self.base_s, q)
+              self.codebook, self.base_s, self.norms_s, q)
             # merge output is replicated across the shard axis; take shard 0
             return SearchResult(mvals[0], mids[0],
                                 QueryStats(*(s[0] for s in stats)))
@@ -148,24 +158,26 @@ class ShardedEngine:
                 f"mesh axis {AXIS!r} has {mesh.shape[AXIS]} devices but the "
                 f"engine holds {self.num_shards} shards")
 
-        def per_device(cen, lists, real, gids, cb, base, qq):
+        def per_device(cen, lists, real, gids, cb, base, norms, qq):
             # each device owns exactly one shard => leading block dim is 1
             out_v, out_i, st = fn(cen[0], jax.tree.map(lambda x: x[0], lists),
                                   real[0], gids[0], cb,
-                                  None if base is None else base[0], qq)
+                                  None if base is None else base[0],
+                                  None if norms is None else norms[0], qq)
             return out_v[None], out_i[None], jax.tree.map(lambda x: x[None], st)
 
         base_spec = P() if self.base_s is None else P(AXIS)
         sharded = shard_map(
             per_device, mesh=mesh,
-            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), base_spec, P()),
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), base_spec,
+                      base_spec, P()),
             out_specs=(P(AXIS), P(AXIS), P(AXIS)),
-            # jax has no replication rule for pallas_call (the 'stream' scan
-            # kernel); the merge replicates results itself via all_gather,
-            # so skipping the static replication check is sound
+            # jax has no replication rule for pallas_call (the 'stream'
+            # scan/re-rank kernels); the merge replicates results itself via
+            # all_gather, so skipping the static replication check is sound
             check_rep=False,
         )
         mvals, mids, stats = sharded(self.centroids_s, self.lists_s,
                                      self.real_s, self.gids_s, self.codebook,
-                                     self.base_s, q)
+                                     self.base_s, self.norms_s, q)
         return SearchResult(mvals[0], mids[0], QueryStats(*(s[0] for s in stats)))

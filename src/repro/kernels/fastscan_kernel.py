@@ -43,7 +43,11 @@ Variant D — ``stream`` (gather-free probe streaming):
     reduction: instead of writing the full ``(G, cap)`` accumulation back to
     HBM it keeps a per-tile partial selection in VMEM and emits only
     ``(G, n_tiles, kc)`` (quantized dist, slot) candidate pairs — shrinking
-    the scan-stage writeback by ~cap/kc.
+    the scan-stage writeback by ~cap/kc. Both stream kernels drive their
+    copies through the shared two-slot double-buffered pipeline
+    (``kernels/pipeline.py``): tile t+1 streams into one scratch buffer
+    while tile t is scanned out of the other, hiding the DMA latency on
+    real hardware.
 
 All kernels are tiled with explicit BlockSpecs. Codes arrive nibble-packed
 ``(N, M//2) u8`` — one VMEM tile feeds every variant with lane-contiguous
@@ -57,6 +61,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pipeline import double_buffered_dma
 
 # Default tile sizes. Lane dim multiples of 128, sublane multiples of 8
 # (f32/i32 VREG tile is 8x128). N tile of 1024 keeps the code tile
@@ -330,8 +336,37 @@ def fastscan_blockmin(table_q8: jax.Array, packed_codes: jax.Array, *,
 ACC_SENTINEL = jnp.iinfo(jnp.int32).max
 
 
+def _stream_dma_plan(probe_ref, codes_hbm, scratch, sem, *,
+                     tile_n: int, n_tiles: int, total: int):
+    """The (make_dma, valid) pair shared by both stream scan kernels.
+
+    A global sequential step ``s`` (grid order is group-major) maps to group
+    ``s // n_tiles``, cap tile ``s % n_tiles``; its transfer is one
+    ``(tile_n, M//2)`` slice of the probed list, landed in scratch slot
+    ``s % 2`` with semaphore ``s % 2`` — the two-buffer pipeline's rotation.
+    ``valid`` clamps ``s`` (the pipeline probes one step past the end).
+    """
+    def start(s, slot):
+        lid = probe_ref[s // n_tiles]
+        pltpu.make_async_copy(
+            codes_hbm.at[lid, pl.ds((s % n_tiles) * tile_n, tile_n), :],
+            scratch.at[slot], sem.at[slot]).start()
+
+    def wait(s, slot):
+        lid = probe_ref[s // n_tiles]
+        pltpu.make_async_copy(
+            codes_hbm.at[lid, pl.ds((s % n_tiles) * tile_n, tile_n), :],
+            scratch.at[slot], sem.at[slot]).wait()
+
+    def valid(s):
+        return probe_ref[jnp.minimum(s, total - 1) // n_tiles] >= 0
+
+    return start, wait, valid
+
+
 def _stream_grouped_kernel(probe_ref, table_ref, codes_hbm, out_ref,
-                           scratch, sem, *, tile_n: int):
+                           scratch, sem, *, tile_n: int, n_tiles: int,
+                           g: int):
     """One (query, probe) group x one cap tile, codes DMA'd from HBM in place.
 
     probe_ref: (G,) i32 scalar-prefetched flat probe ids (-1 = no probe)
@@ -339,20 +374,28 @@ def _stream_grouped_kernel(probe_ref, table_ref, codes_hbm, out_ref,
     codes_hbm: (nlist, cap, M//2) u8, memory space ANY — the ListStore,
                untouched; only the probed tile ever crosses into VMEM
     out_ref:   (1, tile_n) i32 block
-    scratch:   (tile_n, M//2) u8 VMEM landing pad for the DMA
+    scratch:   (2, tile_n, M//2) u8 VMEM — double-buffered DMA landing pads
+    sem:       (2,) DMA semaphores, one per scratch slot
+
+    Grid steps run group-major and sequentially; ``double_buffered_dma``
+    keeps tile t+1's copy in flight (possibly for the *next* group) while
+    tile t is scanned, hiding the HBM latency the one-DMA-per-step version
+    exposed.
     """
     gi = pl.program_id(0)
     ni = pl.program_id(1)
+    step = gi * n_tiles + ni
     lid = probe_ref[gi]
+
+    start, wait, valid = _stream_dma_plan(
+        probe_ref, codes_hbm, scratch, sem,
+        tile_n=tile_n, n_tiles=n_tiles, total=g * n_tiles)
+    double_buffered_dma(step, g * n_tiles, start, wait, valid)
 
     @pl.when(lid >= 0)
     def _scan():
-        dma = pltpu.make_async_copy(
-            codes_hbm.at[lid, pl.ds(ni * tile_n, tile_n), :], scratch, sem)
-        dma.start()
-        dma.wait()
-        codes = _unpack_nibbles_i32(scratch[...])  # (tn, M)
-        t = table_ref[0].astype(jnp.int32)         # (M, 16)
+        codes = _unpack_nibbles_i32(scratch[step % 2])  # (tn, M)
+        t = table_ref[0].astype(jnp.int32)              # (M, 16)
         out_ref[...] = _select_tree_acc(t, codes)[None, :]
 
     @pl.when(lid < 0)
@@ -378,20 +421,22 @@ def fastscan_stream_grouped(table_q8: jax.Array, list_codes: jax.Array,
     nlist, cap, mh = list_codes.shape
     assert k == 16 and mh * 2 == m and probe_ids.shape == (g,)
     assert cap % tile_n == 0, (cap, tile_n)
+    n_tiles = cap // tile_n
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(g, cap // tile_n),
+        grid=(g, n_tiles),
         in_specs=[
             pl.BlockSpec((1, m, 16), lambda gi, ni, pr: (gi, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=pl.BlockSpec((1, tile_n), lambda gi, ni, pr: (gi, ni)),
         scratch_shapes=[
-            pltpu.VMEM((tile_n, mh), jnp.uint8),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, tile_n, mh), jnp.uint8),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
-    kernel = functools.partial(_stream_grouped_kernel, tile_n=tile_n)
+    kernel = functools.partial(_stream_grouped_kernel, tile_n=tile_n,
+                               n_tiles=n_tiles, g=g)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -433,25 +478,29 @@ def _tile_topk(acc: jax.Array, slot_base: jax.Array, kc: int
 
 def _stream_topk_kernel(probe_ref, sizes_ref, table_ref, codes_hbm,
                         vals_ref, slots_ref, scratch, sem, *,
-                        tile_n: int, kc: int):
+                        tile_n: int, kc: int, n_tiles: int, g: int):
     """Stream kernel + fused per-tile candidate selection.
 
     Outputs per (group, cap-tile): the kc smallest quantized dists and their
     global slot ids within the list (-1 = absent). Slots past the list's
     true occupancy (``sizes_ref``) are masked to ACC_SENTINEL *before* the
-    selection, so padding can never displace a real candidate.
+    selection, so padding can never displace a real candidate. Same
+    double-buffered DMA pipeline as ``_stream_grouped_kernel``: tile t+1's
+    copy overlaps tile t's scan+selection.
     """
     gi = pl.program_id(0)
     ni = pl.program_id(1)
+    step = gi * n_tiles + ni
     lid = probe_ref[gi]
+
+    start, wait, valid = _stream_dma_plan(
+        probe_ref, codes_hbm, scratch, sem,
+        tile_n=tile_n, n_tiles=n_tiles, total=g * n_tiles)
+    double_buffered_dma(step, g * n_tiles, start, wait, valid)
 
     @pl.when(lid >= 0)
     def _scan():
-        dma = pltpu.make_async_copy(
-            codes_hbm.at[lid, pl.ds(ni * tile_n, tile_n), :], scratch, sem)
-        dma.start()
-        dma.wait()
-        codes = _unpack_nibbles_i32(scratch[...])  # (tn, M)
+        codes = _unpack_nibbles_i32(scratch[step % 2])  # (tn, M)
         t = table_ref[0].astype(jnp.int32)
         acc = _select_tree_acc(t, codes)[None, :]  # (1, tn)
         slot = (jax.lax.broadcasted_iota(jnp.int32, (1, tile_n), 1)
@@ -507,11 +556,12 @@ def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
             pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((tile_n, mh), jnp.uint8),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, tile_n, mh), jnp.uint8),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
-    kernel = functools.partial(_stream_topk_kernel, tile_n=tile_n, kc=kc)
+    kernel = functools.partial(_stream_topk_kernel, tile_n=tile_n, kc=kc,
+                               n_tiles=n_tiles, g=g)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -14,15 +14,22 @@ Impl registries — ONE source of truth, everything else derives from it:
   ``SCAN_IMPLS``     what callers may request: GROUPED_IMPLS + 'auto'.
 
 ``impl='auto'`` resolves to a concrete (impl, tile_n) via a one-time timed
-micro-sweep per ``(backend, interpret, G, cap, M)`` signature
-(``resolve_grouped_impl``),
-cached process-wide — the analogue of the paper picking the widest SIMD unit
-per target CPU, done empirically per shape instead of hard-coded per arch.
+micro-sweep per ``('scan', backend, interpret, G, cap, M, nlist)`` signature
+(``resolve_grouped_impl``; ``nlist`` is in the key because the 'stream'
+candidate is timed against a real nlist-sized ListStore — its HBM strides,
+not an arange-probed G-list stand-in), cached process-wide — the analogue of
+the paper picking the widest SIMD unit per target CPU, done empirically per
+shape instead of hard-coded per arch. The exact re-rank stage has the same
+dispatch problem and shares the machinery: ``RERANK_IMPLS`` ('gathered' |
+'stream' | 'auto'), ``rerank_stream_topk`` (the gather-free Pallas re-rank),
+and ``resolve_rerank_impl`` (verdicts keyed ``('rerank', backend,
+interpret, Q, R, D, k, N)`` in the same cache).
 ``autotune_cache()`` / ``autotune_cache_size()`` expose the cache for
 inspection, mirroring ``engine.fused_cache_size``;
 ``save_autotune_cache()`` / ``load_autotune_cache()`` persist the resolved
 table to JSON so a serving fleet stops re-timing identical signatures on
-every boot (``ServingLoop(warmup_cache=...)``).
+every boot (``ServingLoop(warmup_cache=...)``) — schema v2; v1 files load
+with their scan verdicts re-keyed to the G-list store they actually timed.
 """
 from __future__ import annotations
 
@@ -38,8 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import topk as topk_mod
 from repro.kernels import fastscan_kernel as fk
 from repro.kernels import ref as ref_mod
+from repro.kernels import rerank_kernel as rk
 
 # Concrete grouped-scan kernel formulations. The flat scan supports the
 # gathered three; the engine additionally accepts 'auto' (autotuned dispatch
@@ -47,6 +56,11 @@ from repro.kernels import ref as ref_mod
 GROUPED_IMPLS = ("ref", "select", "mxu", "stream")
 IMPLS = ("ref", "select", "mxu")
 SCAN_IMPLS = GROUPED_IMPLS + ("auto",)
+# Exact re-rank (stage 3) formulations: 'gathered' (jnp norms+GEMM over a
+# gathered (Q, R, D) row copy), 'stream' (gather-free in-kernel row DMA +
+# fused top-k, kernels/rerank_kernel.py), 'auto' (timed dispatch, below).
+RERANK_CONCRETE = ("gathered", "stream")
+RERANK_IMPLS = RERANK_CONCRETE + ("auto",)
 
 
 def _default_interpret() -> bool:
@@ -206,21 +220,43 @@ _fastscan_grouped_ref_jit = jax.jit(ref_mod.fastscan_grouped_ref)
 
 
 def resolve_scan_impl(impl: str, g: int, cap: int, m: int, *,
+                      nlist: int | None = None,
                       interpret: bool | None = None) -> tuple[str, int]:
     """Resolve a requested scan impl to a concrete ``(impl, tile_n)``.
 
     Concrete impls pass through with tile 0 (shape-fit default); ``'auto'``
     consults the autotune table (``resolve_grouped_impl``) — which may pick
     ``'stream'``, letting callers that hold the codes in place
-    (``core.ivf.scan_probes``) route to the gather-free path. Shared by the
-    single-host and sharded pipelines so dispatch cannot drift.
+    (``core.ivf.scan_probes``) route to the gather-free path; such callers
+    pass their store's ``nlist`` so the stream candidate is timed against
+    the strides it will really see. Shared by the single-host and sharded
+    pipelines so dispatch cannot drift.
     """
     if impl not in SCAN_IMPLS:
         raise ValueError(f"unknown grouped impl {impl!r}; "
                          f"want one of {SCAN_IMPLS}")
     if impl != "auto":
         return impl, 0
-    tuned = resolve_grouped_impl(g, cap, m, interpret=interpret)
+    tuned = resolve_grouped_impl(g, cap, m, nlist=nlist, interpret=interpret)
+    return tuned.impl, tuned.tile_n
+
+
+def resolve_rerank_dispatch(impl: str, q: int, r: int, d: int, k: int,
+                            n: int, *,
+                            interpret: bool | None = None) -> tuple[str, int]:
+    """Resolve a requested re-rank impl to a concrete ``(impl, tile_r)``.
+
+    The re-rank twin of ``resolve_scan_impl``: concrete impls pass through
+    with tile 0 (shape-fit default), ``'auto'`` consults the autotune table
+    (``resolve_rerank_impl``). Shared by ``rerank.finalize_candidates`` on
+    the single-host and sharded pipelines.
+    """
+    if impl not in RERANK_IMPLS:
+        raise ValueError(f"unknown rerank impl {impl!r}; "
+                         f"want one of {RERANK_IMPLS}")
+    if impl != "auto":
+        return impl, 0
+    tuned = resolve_rerank_impl(q, r, d, k, n, interpret=interpret)
     return tuned.impl, tuned.tile_n
 
 
@@ -276,11 +312,48 @@ def fastscan_stream_topk(table_q8: jax.Array, list_codes: jax.Array,
         sizes.astype(jnp.int32), kc=kc, tile_n=tn, interpret=interp)
 
 
-class TunedScan(NamedTuple):
-    """Autotune verdict for one (backend, interpret, G, cap, M) signature."""
+def _rerank_tile(r: int, tile_r: int = 0) -> int:
+    """Candidate-chunk size for the stream re-rank: honor an explicit
+    ``tile_r``, else the smallest power-of-two >= min(r, TILE_R) (floor 8) —
+    candidate ids are padded with -1, so any tile is realizable."""
+    if tile_r:
+        return tile_r
+    return max(8, min(rk.TILE_R, 1 << max(r - 1, 1).bit_length()))
 
-    impl: str          # winning concrete impl (in GROUPED_IMPLS)
-    tile_n: int        # winning cap tile (0 = impl has no tiling knob)
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_r", "interpret"))
+def rerank_stream_topk(base: jax.Array, norms: jax.Array, q: jax.Array,
+                       cand_ids: jax.Array, *, k: int, tile_r: int = 0,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Gather-free exact re-rank over the in-place base (stage 3 hot path).
+
+    base (N, D) f32 stays in HBM — the kernel DMAs only each query's
+    candidate rows; norms (N,) f32 = ``core.lists.base_norms(base)``;
+    q (Q, D) f32; cand_ids (Q, R) i32, -1 = padding. Returns
+    (vals (Q, k) f32 ascending, ids (Q, k) i32, -1 = absent), bit-identical
+    to ``engine.rerank.exact_rerank`` (same norms+GEMM expression, same
+    ``masked_topk`` tie-breaks — see kernels/rerank_kernel.py).
+    """
+    qq, r = cand_ids.shape
+    interp = _default_interpret() if interpret is None else interpret
+    tr = _rerank_tile(r, tile_r)
+    cand_p = _pad_to(cand_ids.astype(jnp.int32), 1, tr, value=-1)
+    # only the survivors' norms are gathered up front: (Q, Rp) f32, a D×
+    # smaller gather than the (Q, R, D) row copy this path eliminates
+    xn = norms[jnp.maximum(cand_p, 0)]
+    vals, pos = rk.rerank_stream_topk(base, q, cand_p, xn, k=k, tile_r=tr,
+                                      interpret=interp)
+    # pos follows masked_topk's position contract, so the shared sentinel-
+    # preserving mapper applies as-is
+    return vals, topk_mod.gather_ids(cand_p, pos)
+
+
+class TunedScan(NamedTuple):
+    """Autotune verdict for one scan/re-rank shape signature."""
+
+    impl: str          # winning concrete impl (GROUPED_IMPLS / RERANK_CONCRETE)
+    tile_n: int        # winning tile (0 = impl has no tiling knob)
     timings_us: tuple  # ((f"{impl}@{tile}", median_us), ...) — full sweep
 
 
@@ -322,23 +395,18 @@ def _median_time_us(fn, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def resolve_grouped_impl(g: int, cap: int, m: int, *,
-                         interpret: bool | None = None) -> TunedScan:
-    """Resolve ``impl='auto'`` for the grouped scan at one shape signature.
+def _resolve_cached(sig: tuple, sweep_fn, *args) -> TunedScan:
+    """Shared resolve-or-sweep path for the scan and re-rank autotuners.
 
-    Times every concrete impl (x its tile candidates) on synthetic data of
-    the exact workload shape and caches the winner per
-    ``(backend, interpret, G, cap, M)`` — one sweep per signature per
-    process (interpret mode is part of the key: a verdict timed on the
-    Pallas interpreter must never be reused for compiled execution, or vice
-    versa). The fixed-seed synthetic data makes the sweep reproducible; the
-    cache makes resolution deterministic for the life of the process
-    (asserted in tests/test_kernels.py). A candidate that fails to build at
-    this shape (e.g. an MXU tile blowing VMEM) is dropped, not fatal —
-    'ref' always survives.
+    One sweep per signature per process. The sweep must EXECUTE even when
+    resolution happens at trace time (scan_probes, finalize_candidates and
+    the fused pipeline are jit'd, so that is the normal case): under an
+    ambient trace every jax call made here would be staged into the
+    caller's jaxpr instead of run, and the "timings" would measure tracing
+    overhead. JAX trace state is thread-local, so a worker thread is a
+    clean escape hatch — everything it runs dispatches eagerly on concrete
+    arrays.
     """
-    interp = _default_interpret() if interpret is None else interpret
-    sig = (jax.default_backend(), interp, int(g), int(cap), int(m))
     hit = _AUTOTUNE_CACHE.get(sig)
     if hit is not None:
         return hit
@@ -346,27 +414,52 @@ def resolve_grouped_impl(g: int, cap: int, m: int, *,
         hit = _AUTOTUNE_CACHE.get(sig)  # racing thread may have resolved it
         if hit is not None:
             return hit
-        # The sweep must EXECUTE even when resolution happens at trace time
-        # (scan_probes and the fused pipeline are jit'd, so that is the
-        # normal case): under an ambient trace every jax call made here
-        # would be staged into the caller's jaxpr instead of run, and the
-        # "timings" would measure tracing overhead. JAX trace state is
-        # thread-local, so a worker thread is a clean escape hatch —
-        # everything it runs dispatches eagerly on concrete arrays.
         with concurrent.futures.ThreadPoolExecutor(max_workers=1) as ex:
-            tuned = ex.submit(_run_grouped_sweep, int(g), int(cap), int(m),
-                              interp).result()
+            tuned = ex.submit(sweep_fn, *args).result()
         _AUTOTUNE_CACHE[sig] = tuned
     return tuned
 
 
-def _run_grouped_sweep(g: int, cap: int, m: int, interp: bool) -> TunedScan:
+def resolve_grouped_impl(g: int, cap: int, m: int, *, nlist: int | None = None,
+                         interpret: bool | None = None) -> TunedScan:
+    """Resolve ``impl='auto'`` for the grouped scan at one shape signature.
+
+    Times every concrete impl (x its tile candidates) on synthetic data of
+    the exact workload shape and caches the winner per
+    ``('scan', backend, interpret, G, cap, M, nlist)`` — one sweep per
+    signature per process (interpret mode is part of the key: a verdict
+    timed on the Pallas interpreter must never be reused for compiled
+    execution, or vice versa). ``nlist`` is the size of the in-place
+    ListStore the 'stream' candidate would scan: the sweep times it against
+    a store of that many lists with random probes, so the verdict reflects
+    real list-store strides rather than the arange-probed G-list stand-in
+    (``nlist=None`` keeps the gathered calling convention's G-list store —
+    what ``fastscan_grouped`` itself executes). The fixed-seed synthetic
+    data makes the sweep reproducible; the cache makes resolution
+    deterministic for the life of the process (asserted in
+    tests/test_kernels.py). A candidate that fails to build at this shape
+    (e.g. an MXU tile blowing VMEM) is dropped, not fatal — 'ref' always
+    survives.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    nl = int(g if nlist is None else nlist)
+    sig = ("scan", jax.default_backend(), interp, int(g), int(cap), int(m), nl)
+    return _resolve_cached(sig, _run_grouped_sweep, int(g), int(cap), int(m),
+                           nl, interp)
+
+
+def _run_grouped_sweep(g: int, cap: int, m: int, nlist: int,
+                       interp: bool) -> TunedScan:
     rng = np.random.default_rng(0)
     # plain numpy on purpose: jnp.asarray under an ambient trace would make
     # these tracers; as numpy they only become device arrays inside the
     # worker thread's eager calls
     table = rng.integers(0, 256, (g, m, 16), dtype=np.uint8)
     codes = rng.integers(0, 256, (g, cap, m // 2), dtype=np.uint8)
+    # the stream impl's real operand: an nlist-sized in-place store with
+    # random probes — the strides scan_probes actually drives it with
+    store = rng.integers(0, 256, (nlist, cap, m // 2), dtype=np.uint8)
+    probes = rng.integers(0, nlist, (g,), dtype=np.int32)
     sweep = []
     for impl in GROUPED_IMPLS:
         if impl == "ref":
@@ -380,10 +473,14 @@ def _run_grouped_sweep(g: int, cap: int, m: int, interp: bool) -> TunedScan:
         else:
             tiles = _grouped_tile_candidates(cap)
         for tn in tiles:
+            if impl == "stream":
+                fn = functools.partial(fastscan_stream_grouped, table, store,
+                                       probes, tile_n=tn, interpret=interp)
+            else:
+                fn = functools.partial(fastscan_grouped, table, codes,
+                                       impl=impl, tile_n=tn, interpret=interp)
             try:
-                us = _median_time_us(functools.partial(
-                    fastscan_grouped, table, codes, impl=impl, tile_n=tn,
-                    interpret=interp))
+                us = _median_time_us(fn)
             except _TraceEscapeError:
                 raise  # a trace-escape regression, not a bad candidate
             except Exception:  # candidate unbuildable at this shape: skip it
@@ -400,10 +497,88 @@ def _run_grouped_sweep(g: int, cap: int, m: int, interp: bool) -> TunedScan:
     return tuned
 
 
+# cap on the synthetic base built for the re-rank sweep. The real N stays
+# in the verdict KEY (two engines with identical (Q, R, D, k) but different
+# base sizes must never share a verdict), but building a multi-million-row
+# synthetic copy would cost more than the sweep measures, so beyond the cap
+# the timing runs on a 64k-row stand-in. What actually varies with N for
+# fixed R is row-gather cache locality, and at 64k x 128 f32 (~32 MB) the
+# stand-in already misses on-chip caches like a large table does — still,
+# verdicts for N far beyond the cap deserve re-measurement on real HBM
+# (ROADMAP).
+_RERANK_SWEEP_N_CAP = 65536
+
+
+def resolve_rerank_impl(q: int, r: int, d: int, k: int, n: int, *,
+                        interpret: bool | None = None) -> TunedScan:
+    """Resolve ``rerank_impl='auto'`` at one (Q, R, D, k, N) re-rank
+    signature (N = base-row count).
+
+    Times the gathered norms+GEMM fallback against the streaming kernel
+    (x its chunk-tile candidates) on synthetic data of the workload shape
+    (base rows capped at ``_RERANK_SWEEP_N_CAP``) and caches the verdict
+    per ``('rerank', backend, interpret, Q, R, D, k, N)`` in the same
+    process-wide table (and the same persisted JSON) as the scan verdicts.
+    Both candidates are bit-identical, so the verdict is purely a
+    performance choice — 'gathered' always survives as the fallback.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    sig = ("rerank", jax.default_backend(), interp, int(q), int(r), int(d),
+           int(k), int(n))
+    return _resolve_cached(sig, _run_rerank_sweep, int(q), int(r), int(d),
+                           int(k), int(n), interp)
+
+
+def _rerank_tile_candidates(r: int) -> tuple[int, ...]:
+    """Chunk sizes worth timing: the shape-fit default plus smaller
+    power-of-two chunks (more DMA overlap, smaller scratch)."""
+    fit = _rerank_tile(r)
+    return tuple(sorted({fit} | {t for t in (16, 32) if t < fit}))
+
+
+def _run_rerank_sweep(q: int, r: int, d: int, k: int, n: int,
+                      interp: bool) -> TunedScan:
+    from repro.engine import rerank as rerank_mod  # lazy: engine -> ops
+
+    rng = np.random.default_rng(0)
+    n_sweep = max(r, min(n, _RERANK_SWEEP_N_CAP))
+    base = rng.standard_normal((n_sweep, d), dtype=np.float32)
+    norms = np.sum(base * base, axis=-1)
+    queries = rng.standard_normal((q, d), dtype=np.float32)
+    cand = rng.integers(0, n_sweep, (q, r), dtype=np.int32)
+    sweep = []
+    for impl in RERANK_CONCRETE:
+        tiles = (0,) if impl == "gathered" else _rerank_tile_candidates(r)
+        for tr in tiles:
+            if impl == "gathered":
+                fn = functools.partial(rerank_mod.exact_rerank, base, queries,
+                                       cand, k, norms=norms)
+            else:
+                fn = functools.partial(rerank_stream_topk, base, norms,
+                                       queries, cand, k=k, tile_r=tr,
+                                       interpret=interp)
+            try:
+                us = _median_time_us(fn)
+            except _TraceEscapeError:
+                raise
+            except Exception:  # unbuildable candidate (scratch too big): skip
+                continue
+            sweep.append((impl, tr, us))
+    if not sweep:
+        raise RuntimeError(
+            f"re-rank autotune sweep produced no working candidate at "
+            f"(Q={q}, R={r}, D={d}, k={k}) — 'gathered' should never fail")
+    best = min(sweep, key=lambda rec: rec[2])
+    return TunedScan(
+        impl=best[0], tile_n=best[1],
+        timings_us=tuple((f"{i}@{tn}", us) for i, tn, us in sweep))
+
+
 def autotune_cache() -> dict[tuple, TunedScan]:
     """Snapshot of the process-wide autotune cache, keyed by
-    (backend, interpret, G, cap, M). For inspection/metrics — mutations
-    don't stick."""
+    ('scan', backend, interpret, G, cap, M, nlist) and
+    ('rerank', backend, interpret, Q, R, D, k, N). For inspection/metrics —
+    mutations don't stick."""
     return dict(_AUTOTUNE_CACHE)
 
 
@@ -417,27 +592,39 @@ def clear_autotune_cache() -> None:
     _AUTOTUNE_CACHE.clear()
 
 
-_AUTOTUNE_SCHEMA = "repro.autotune/v1"
+_AUTOTUNE_SCHEMA = "repro.autotune/v2"
+_AUTOTUNE_SCHEMA_V1 = "repro.autotune/v1"
 
 
 def save_autotune_cache(path: str) -> int:
     """Serialize the resolved TunedScan table to JSON at ``path``.
 
-    Returns the number of entries written. The key quintuple
-    (backend, interpret, G, cap, M) is stored per entry, so one file can
-    hold verdicts for several backends; ``load_autotune_cache`` re-keys
-    them verbatim and lookups still only ever hit the running backend's
-    signatures. A serving fleet saves after its first warmup and ships the
-    file to every replica (``ServingLoop(warmup_cache=...)``).
+    Returns the number of entries written. Schema v2: each entry carries a
+    ``kind`` ('scan' | 'rerank') plus its kind's full key dims (scan:
+    backend/interpret/g/cap/m/nlist; rerank: backend/interpret/q/r/d/k/n), so
+    one file can hold both stages' verdicts for several backends;
+    ``load_autotune_cache`` re-keys them verbatim and lookups still only
+    ever hit the running backend's signatures. A serving fleet saves after
+    its first warmup and ships the file to every replica
+    (``ServingLoop(warmup_cache=...)``).
     """
     with _AUTOTUNE_LOCK:  # a concurrent sweep may be inserting its verdict
         snapshot = dict(_AUTOTUNE_CACHE)
-    entries = [
-        {"backend": b, "interpret": bool(i), "g": g, "cap": c, "m": m,
-         "impl": t.impl, "tile_n": t.tile_n,
-         "timings_us": [[name, us] for name, us in t.timings_us]}
-        for (b, i, g, c, m), t in snapshot.items()
-    ]
+    entries = []
+    for key, t in snapshot.items():
+        timings = [[name, us] for name, us in t.timings_us]
+        if key[0] == "scan":
+            _, b, i, g, c, m, nl = key
+            entries.append({"kind": "scan", "backend": b, "interpret": bool(i),
+                            "g": g, "cap": c, "m": m, "nlist": nl,
+                            "impl": t.impl, "tile_n": t.tile_n,
+                            "timings_us": timings})
+        else:
+            _, b, i, q, r, d, k, n = key
+            entries.append({"kind": "rerank", "backend": b,
+                            "interpret": bool(i), "q": q, "r": r, "d": d,
+                            "k": k, "n": n, "impl": t.impl,
+                            "tile_n": t.tile_n, "timings_us": timings})
     with open(path, "w") as f:
         json.dump({"schema": _AUTOTUNE_SCHEMA, "entries": entries}, f,
                   indent=2)
@@ -449,10 +636,13 @@ def load_autotune_cache(path: str) -> int:
 
     Returns the number of entries adopted. Missing file, wrong schema, or
     malformed JSON load nothing (0) — a stale or absent warmup cache must
-    never stop a boot, it just means the sweeps run again. Entries naming
-    an impl that no longer exists in ``GROUPED_IMPLS`` are skipped (stale
-    file from an older build); entries already resolved in this process
-    keep their in-process verdict.
+    never stop a boot, it just means the sweeps run again. v1 files (no
+    ``kind``, no ``nlist``) migrate gracefully: their scan verdicts are
+    re-keyed to ``nlist=g`` — the arange-probed G-list store that sweep
+    actually timed — so they only ever satisfy lookups for the shapes they
+    measured. Entries naming an impl that no longer exists are skipped
+    (stale file from an older build); entries already resolved in this
+    process keep their in-process verdict.
     """
     if not os.path.exists(path):
         return 0
@@ -461,21 +651,34 @@ def load_autotune_cache(path: str) -> int:
             data = json.load(f)
     except (OSError, json.JSONDecodeError):
         return 0
-    if not isinstance(data, dict) or data.get("schema") != _AUTOTUNE_SCHEMA:
+    if not isinstance(data, dict) or data.get("schema") not in (
+            _AUTOTUNE_SCHEMA, _AUTOTUNE_SCHEMA_V1):
         return 0
     loaded = 0
     with _AUTOTUNE_LOCK:
         for e in data.get("entries", ()):
             try:
-                key = (str(e["backend"]), bool(e["interpret"]), int(e["g"]),
-                       int(e["cap"]), int(e["m"]))
+                kind = str(e.get("kind", "scan"))
+                if kind == "scan":
+                    g = int(e["g"])
+                    key = ("scan", str(e["backend"]), bool(e["interpret"]),
+                           g, int(e["cap"]), int(e["m"]),
+                           int(e.get("nlist", g)))  # v1: the G-list store
+                    known = GROUPED_IMPLS
+                elif kind == "rerank":
+                    key = ("rerank", str(e["backend"]), bool(e["interpret"]),
+                           int(e["q"]), int(e["r"]), int(e["d"]),
+                           int(e["k"]), int(e["n"]))
+                    known = RERANK_CONCRETE
+                else:
+                    continue
                 tuned = TunedScan(
                     impl=str(e["impl"]), tile_n=int(e["tile_n"]),
                     timings_us=tuple((str(n), float(us))
                                      for n, us in e["timings_us"]))
             except (KeyError, TypeError, ValueError):
                 continue
-            if tuned.impl not in GROUPED_IMPLS or key in _AUTOTUNE_CACHE:
+            if tuned.impl not in known or key in _AUTOTUNE_CACHE:
                 continue
             _AUTOTUNE_CACHE[key] = tuned
             loaded += 1

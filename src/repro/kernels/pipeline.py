@@ -1,0 +1,66 @@
+"""Shared double-buffered DMA pipeline for the streaming Pallas kernels.
+
+Every gather-free kernel in this repo has the same inner shape: a sequence of
+grid (or loop) steps, each of which DMAs one tile of in-place HBM data into
+VMEM scratch and then computes on it. Issuing the copy and immediately
+waiting on it (one DMA per step) leaves the DMA engine idle during compute
+and the compute units idle during the copy. The classic fix is a two-slot
+pipeline: while step ``t`` computes out of scratch slot ``t % 2``, step
+``t+1``'s copy is already in flight into slot ``(t+1) % 2`` — two scratch
+buffers, two DMA semaphores, copy latency hidden behind compute.
+
+``double_buffered_dma`` is that pipeline as a step-local helper: kernels call
+it once per sequential step with callbacks that start/wait the step's
+transfer(s), and it schedules
+
+    step 0:  start(0) ; start(1) ; wait(0) ; <compute on slot 0>
+    step t:  start(t+1)          ; wait(t) ; <compute on slot t % 2>
+
+Correctness of the slot rotation relies only on steps executing in order
+(TPU grid dims are sequential unless declared parallel; ``fori_loop`` bodies
+trivially so) and on the caller computing on slot ``t % 2`` after the call:
+slot ``(t+1) % 2`` was last read by step ``t-1``, whose compute finished
+before step ``t`` began, so overwriting it is race-free.
+
+Interpret mode executes copies synchronously, so the pipeline degenerates to
+the one-DMA-per-step schedule with identical results — bit-identity of the
+refactor is asserted in ``tests/test_stream_rerank.py``.
+"""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl
+
+
+def double_buffered_dma(step, total: int, start, wait, valid) -> None:
+    """Run one step of a two-slot DMA pipeline over ``total`` sequential steps.
+
+    step:  traced i32 — this step's position in the global sequential order
+           (for a 2-D grid: ``gi * n_inner + ni``).
+    total: static int — number of steps in the sequence.
+    start: ``start(s, slot)`` issues the copy/copies for step ``s`` into
+           scratch slot ``slot`` (0 or 1). Called under ``pl.when``, at most
+           once per step across the whole pipeline.
+    wait:  ``wait(s, slot)`` blocks until step ``s``'s copy/copies into
+           ``slot`` have landed. Must mirror ``start`` transfer-for-transfer
+           (each DMA wait consumes exactly one start's semaphore signals).
+    valid: ``valid(s)`` — traced bool, False for steps whose transfer is
+           skipped entirely (e.g. a ``-1`` probe). Evaluated for ``s`` up to
+           ``total`` (non-short-circuiting ``&``), so implementations must
+           clamp any indexing on ``s``.
+
+    After this returns, step ``step``'s data is resident in slot
+    ``step % 2`` (when valid) and step ``step + 1``'s transfer is in flight.
+    """
+    nxt = step + 1
+
+    @pl.when((step == 0) & valid(step))
+    def _prime():  # first step of the sequence: nothing is in flight yet
+        start(step, 0)
+
+    @pl.when((nxt < total) & valid(nxt))
+    def _prefetch():  # overlap the next tile's copy with this tile's compute
+        start(nxt, nxt % 2)
+
+    @pl.when(valid(step))
+    def _land():
+        wait(step, step % 2)

@@ -58,7 +58,8 @@ class LoopMetrics(NamedTuple):
     bucket_counts: dict    # bucket size -> dispatch count
     autotuned: int         # autotune sweeps THIS loop's dispatches triggered
     #                        (incl. warmup; only grows when scan_impl='auto'
-    #                        meets a new shape signature)
+    #                        or rerank_impl='auto' meets a new shape
+    #                        signature)
 
 
 class ServingLoop:
@@ -158,11 +159,14 @@ class ServingLoop:
 
         Warmup compiles count toward ``metrics().compiles`` (they are real
         cache entries); steady-state traffic after warmup should add zero.
-        When the engine runs ``scan_impl='auto'``, tracing each bucket here
-        also runs the kernel autotune sweep for that bucket's (G, cap, M)
-        signature (``kernels.ops.resolve_grouped_impl``), so steady-state
-        traffic never pays the timed micro-sweep either —
-        ``metrics().autotuned`` should be flat after warmup.
+        When the engine runs ``scan_impl='auto'`` (or ``rerank_impl='auto'``),
+        tracing each bucket here also runs the kernel autotune sweep for that
+        bucket's scan (G, cap, M, nlist) — and re-rank (Q, R, D, k, N) —
+        signature (``kernels.ops.resolve_grouped_impl`` /
+        ``resolve_rerank_impl``), so steady-state traffic never pays the
+        timed micro-sweep either — ``metrics().autotuned`` should be flat
+        after warmup. Both stages' verdicts persist through the same
+        ``warmup_cache`` file.
         """
         for b in self.batcher.buckets:
             dummy = jnp.zeros((b, self._dim), jnp.float32)

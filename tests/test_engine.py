@@ -102,12 +102,18 @@ def test_rerank_bitmatches_brute_force_on_candidate_set():
                      -1)
     got = exact_distances(ds.base, q, cand)
 
-    # candidate-restricted brute force, written independently: same math,
-    # same shapes -> must agree bit-for-bit (no quantization anywhere).
-    # jit'd so both sides get XLA's fused reduction order (eager op-by-op
-    # dispatch sums in a different order and drifts by 1 ulp).
-    want = jax.jit(lambda b, qq, c: jnp.sum(
-        (b[jnp.maximum(c, 0)] - qq[:, None, :]) ** 2, axis=-1))(ds.base, q, cand)
+    # candidate-restricted brute force, written independently in the same
+    # norms+GEMM formulation exact_distances now uses ((‖q‖² − 2q·x) + ‖x‖²,
+    # mul+sum contractions): same math, same shapes -> must agree
+    # bit-for-bit (the subtraction form drifts by ~1 ulp and is guarded
+    # separately on integer data in tests/test_stream_rerank.py). jit'd so
+    # both sides get XLA's fused reduction order.
+    def bf(b, qq, c):
+        x = b[jnp.maximum(c, 0)]
+        return jnp.maximum((jnp.sum(qq * qq, -1)[:, None]
+                            - 2.0 * jnp.sum(qq[:, None, :] * x, -1))
+                           + jnp.sum(b * b, -1)[jnp.maximum(c, 0)], 0.0)
+    want = jax.jit(bf)(ds.base, q, cand)
     valid = np.asarray(cand >= 0)
     np.testing.assert_array_equal(np.asarray(got)[valid], np.asarray(want)[valid])
     assert np.all(np.isinf(np.asarray(got)[~valid]))
@@ -224,7 +230,7 @@ def test_partition_base_covers_every_row_once_without_replication():
     s = 4
     cen_s, lists_s, real_s = partition_lists(eng.index.lists,
                                              eng.index.centroids, s)
-    base_s, gids_s, local_ids = partition_base(lists_s, ds.base)
+    base_s, gids_s, local_ids, norms_s = partition_base(lists_s, ds.base)
     n, d = ds.base.shape
     # each global id appears exactly once across all shards' gids
     g = np.asarray(gids_s).reshape(-1)
@@ -243,6 +249,15 @@ def test_partition_base_covers_every_row_once_without_replication():
         np.testing.assert_array_equal(bs[j][li[j][valid[j]]], b[gi[j][valid[j]]])
         np.testing.assert_array_equal(np.asarray(gids_s)[j][li[j][valid[j]]],
                                       gi[j][valid[j]])
+    # norms ride along: norms_s[shard, local] == base_norms(base)[global]
+    # bitwise (sliced from ONE full-base computation, not re-derived), 0 at
+    # padding
+    from repro.core.lists import base_norms
+    nrm = np.asarray(base_norms(ds.base))
+    ns = np.asarray(norms_s)
+    gv = g >= 0
+    np.testing.assert_array_equal(ns.reshape(-1)[gv], nrm[g[gv]])
+    assert (ns.reshape(-1)[~gv] == 0).all()
 
 
 def test_sharded_rerank_on_local_base_matches_replicated_semantics():

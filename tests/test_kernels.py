@@ -185,7 +185,10 @@ def test_auto_resolves_deterministically_and_caches():
         got = np.asarray(ops.fastscan_grouped(table, codes, impl="auto"))
         np.testing.assert_array_equal(got, want)
         assert ops.autotune_cache_size() == size1
-        key = (jax.default_backend(), ops._default_interpret(), g, cap, 2 * mh)
+        # scan keys carry the store size the stream candidate was timed
+        # against; the gathered signature defaults to nlist=G (its own store)
+        key = ("scan", jax.default_backend(), ops._default_interpret(),
+               g, cap, 2 * mh, g)
         assert ops.autotune_cache()[key] is tuned1
     finally:
         ops.clear_autotune_cache()

@@ -32,7 +32,8 @@ def _load_records(path: str) -> dict[tuple, dict]:
             continue
         key = (rec.get("kernel"), rec.get("impl"), rec.get("backend"),
                rec.get("G"), rec.get("Q"), rec.get("P"), rec.get("cap"),
-               rec.get("M"))
+               rec.get("M"), rec.get("k"), rec.get("r"), rec.get("D"),
+               rec.get("N"))
         out[key] = rec
     return out
 
