@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import ivf
-from repro.core.lists import ListStore, base_norms
+from repro.core.lists import ListStore, base_norms, pack_filter_mask
 from repro.core.pq import PQCodebook
 from repro.engine import rerank as rerank_mod
 from repro.kernels import ops, ref
@@ -110,15 +110,25 @@ def scan_stage_traffic(q: int = 32, p: int = 16, cap: int = 1024,
     )
     qs = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
     probes = jnp.asarray(rng.integers(0, nlist, (q, p)).astype(np.int32))
+    # all-ones (100% selectivity) filter bitmap: measures the pure bitmap
+    # overhead of the filtered stream scan — docs/filtering.md promises it
+    # within 10% of the unfiltered stream record
+    fbits = pack_filter_mask(index.lists.ids >= 0)
     stages = (
         ("gathered", jax.jit(
-            lambda i, qq, pr: ivf.scan_probes(i, qq, pr, impl="ref"))),
+            lambda i, qq, pr: ivf.scan_probes(i, qq, pr, impl="ref")),
+         (index, qs, probes)),
         ("stream", jax.jit(functools.partial(ivf.scan_probes_stream,
-                                             keep=40))),
+                                             keep=40)),
+         (index, qs, probes)),
+        ("stream_filtered", jax.jit(
+            lambda i, qq, pr, fb: ivf.scan_probes_stream(
+                i, qq, pr, keep=40, filter_bits=fb)),
+         (index, qs, probes, fbits)),
     )
     records = []
-    for name, fn in stages:
-        cost = xla_cost_dict(fn.lower(index, qs, probes).compile())
+    for name, fn, args in stages:
+        cost = xla_cost_dict(fn.lower(*args).compile())
         rec = {"kernel": "scan_stage", "impl": name, "Q": q, "P": p,
                "cap": cap, "M": m, "nlist": nlist,
                "bytes_accessed": cost.get("bytes accessed", 0.0),
@@ -130,6 +140,11 @@ def scan_stage_traffic(q: int = 32, p: int = 16, cap: int = 1024,
         ratio = records[0]["bytes_accessed"] / records[1]["bytes_accessed"]
         common.emit("scan_stage_traffic_ratio", 0.0,
                     f"gathered/stream={ratio:.1f}x (acceptance: >= 4x)")
+        overhead = (records[2]["bytes_accessed"]
+                    / records[1]["bytes_accessed"] - 1.0)
+        common.emit("scan_stage_filter_overhead", 0.0,
+                    f"filtered/unfiltered-1={overhead:+.1%} "
+                    "(acceptance: within 10%)")
     return records
 
 

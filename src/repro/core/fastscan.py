@@ -19,6 +19,12 @@ Conventions (shared across ``repro.core``, see docs/architecture.md):
           int accumulations int32
   -1 id   not produced here (full-database scan has no padding); the IVF
           layer introduces -1 sentinel ids and masks on ``id >= 0``
+  filter  not applied here either — per-row predicate bitmaps (packed u8
+          words, bit 1 = row passes; core.lists / docs/filtering.md) are a
+          posting-list concept: the stream kernels sentinel excluded rows'
+          i32 ADC scores (ACC_SENTINEL) before candidate selection, exactly
+          like occupancy padding, so the LUT quantization here never sees
+          or affects filtering
 """
 from __future__ import annotations
 

@@ -22,6 +22,12 @@ Conventions (shared across ``repro.core``, see docs/architecture.md):
   -1 id   sentinel everywhere — probe_ids entry -1 = no probe (yields a
           fully-padded list), candidate/result id -1 = padding/no candidate
           (distance +inf); consumers mask on ``id >= 0``
+  filter  optional packed per-row bitmap (nlist, W) u8 (layout:
+          ``core.lists.pack_filter_mask``, docs/filtering.md); bit 0 = the
+          row is excluded from the scan exactly as if it were padding (id
+          -1, distance +inf). ``scan_probes_stream`` applies it inside the
+          kernel's pre-selection mask; gathered paths post-mask the full
+          pool — both bit-identical
 """
 from __future__ import annotations
 
@@ -167,25 +173,31 @@ def scan_probes(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
 
 @functools.partial(jax.jit, static_argnames=("keep", "tile_n"))
 def scan_probes_stream(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
-                       keep: int, tile_n: int = 0
+                       keep: int, tile_n: int = 0,
+                       filter_bits: jax.Array | None = None
                        ) -> tuple[jax.Array, jax.Array]:
-    """Gather-free fine scan with fused candidate reduction.
+    """Gather-free fine scan with fused candidate reduction (+ filtering).
 
     The ``impl='stream'`` serving hot path: ADC runs over ``index.lists``
     *in place* and the kernel reduces each cap tile to its ``kc =
     min(keep, tile)`` best candidates in VMEM, so neither the gathered
     (Q, P, cap, M//2) code copy nor the full (Q, P, cap) distance tensor
-    ever reaches HBM. Returns a *reduced* candidate pool
-    (dists (Q, C') f32, ids (Q, C') i32, -1 = absent) with
+    ever reaches HBM. ``filter_bits`` — optional (nlist, W) u8 packed
+    per-row bitmap (docs/filtering.md) — excludes rows whose bit is 0
+    inside the kernel's pre-selection mask, so filtering costs no recall
+    at fixed ``keep``: excluded rows free their candidate slots instead of
+    occupying them the way a post-filter would. Returns a *reduced*
+    candidate pool (dists (Q, C') f32, ids (Q, C') i32, -1 = absent) with
     C' = P * n_tiles * kc.
 
     Exactness: any final selection of <= ``keep`` candidates per query over
     (dists, ids) — e.g. ``rerank.finalize_candidates`` with
     ``r*k <= keep`` — is bit-identical to the same selection over the full
-    ``scan_probes`` pool: every true survivor is within its own tile's
-    top-kc (i32 ADC scores are exact), the pool preserves
-    (probe, tile, slot) order, and in-tile ties resolve lowest-slot-first,
-    matching ``masked_topk``'s lowest-flat-index tie-break.
+    ``scan_probes`` pool (post-masked by the same filter): every true
+    survivor is within its own tile's top-kc (i32 ADC scores are exact),
+    the pool preserves (probe, tile, slot) order, and in-tile ties resolve
+    lowest-slot-first, matching ``masked_topk``'s lowest-flat-index
+    tie-break.
     """
     from repro.kernels import ops
 
@@ -194,7 +206,8 @@ def scan_probes_stream(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
     vals, slots = ops.fastscan_stream_topk(
         qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:]),
         index.lists.codes, probe_ids.reshape(-1), index.lists.sizes,
-        keep=keep, tile_n=tile_n)                      # (G, n_tiles, kc) x2
+        keep=keep, tile_n=tile_n,
+        filter_bits=filter_bits)                       # (G, n_tiles, kc) x2
     n_tiles, kc = vals.shape[1], vals.shape[2]
     vals = vals.reshape(qq, p, n_tiles * kc)
     slots = slots.reshape(qq, p, n_tiles * kc)

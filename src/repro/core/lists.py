@@ -8,20 +8,37 @@ Layout (TPU rule: every shape static, no raggedness):
   codes: (nlist, cap, M//2) uint8   nibble-packed PQ codes, zero-padded
   ids:   (nlist, cap)       int32   global vector ids, -1 = padding
   sizes: (nlist,)           int32   true occupancy per list (<= cap)
+  attrs: (nlist, cap)       int32   optional per-row metadata attribute,
+                                    -1 = padding (None when unused)
 
 Bucketing is host-side numpy (index build is offline); ``gather`` is pure
 jnp and lowers under jit/pjit.
 
+Filter bitmaps (docs/filtering.md): a predicate over the rows is carried as
+a *packed* bitmap ``(nlist, W) u8`` with ``W = ceil(cap / 8)``, bit ``j`` of
+word ``w`` = slot ``w*8 + j`` (LSB-first), 1 = the row passes. Packing keeps
+the filter at ~1.5% of the code bytes at M=16, so streaming it next to the
+codes costs almost nothing (``pack_filter_mask`` / ``unpack_filter_mask`` /
+``filter_from_attrs`` / ``filter_pass_sizes`` below). The bitmap is sliced
+and permuted exactly like the codes by ``partition_lists`` /
+``partition_filter``, so it stays epoch-consistent with the codes on every
+shard.
+
 Conventions (shared across ``repro.core``, see docs/architecture.md):
   shapes  all static — every list padded to ``cap``; gathers preserve the
-          leading probe-set shape
-  dtypes  packed codes uint8; ids/sizes int32
+          leading probe-set shape; filter bitmaps padded to W words
+  dtypes  packed codes uint8; ids/sizes/attrs int32; filter bitmaps uint8
+          (LSB-first within each word)
   -1 id   sentinel — a padded list slot or an invalid (negative) probe id
           gathers to id -1; code bytes at padded slots are zero and must be
-          masked by the id, never interpreted
+          masked by the id, never interpreted; attrs at padded slots are -1
+  filter  bit 0 = row excluded (scans treat the slot exactly like padding:
+          id -1, distance +inf / ACC_SENTINEL before selection); bits at
+          padded slots must be 0 (``filter_from_attrs`` guarantees it)
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -33,6 +50,10 @@ class ListStore(NamedTuple):
     codes: jax.Array  # (nlist, cap, M//2) uint8
     ids: jax.Array    # (nlist, cap) int32, -1 = padding
     sizes: jax.Array  # (nlist,) int32
+    # optional per-row metadata column (filtering contract, docs/filtering.md):
+    # one i32 attribute per slot, -1 at padding. None = no attributes — the
+    # field vanishes from the pytree, so vmap/shard_map arities are unchanged.
+    attrs: jax.Array | None = None
 
     @property
     def nlist(self) -> int:
@@ -85,23 +106,95 @@ def base_norms(base: jax.Array) -> jax.Array:
     return jnp.sum(base * base, axis=-1)
 
 
+# ---------------------------------------------------------------------------
+# packed filter bitmaps (the filtering contract — docs/filtering.md)
+# ---------------------------------------------------------------------------
+
+def filter_words(cap: int) -> int:
+    """Words per list of a packed filter bitmap: W = ceil(cap / 8)."""
+    return -(-int(cap) // 8)
+
+
+@jax.jit
+def pack_filter_mask(mask: jax.Array) -> jax.Array:
+    """Pack a per-slot boolean mask into the filter bitmap layout.
+
+    mask: (..., cap) bool (1 = row passes). Returns (..., W) u8 with
+    W = ceil(cap/8); bit j of word w = slot w*8 + j (LSB-first). Bits past
+    ``cap`` in the last word are 0.
+    """
+    cap = mask.shape[-1]
+    pad = (-cap) % 8
+    m = mask.astype(jnp.int32)
+    if pad:
+        widths = [(0, 0)] * (m.ndim - 1) + [(0, pad)]
+        m = jnp.pad(m, widths)
+    m = m.reshape(*mask.shape[:-1], -1, 8)
+    weights = (1 << jnp.arange(8, dtype=jnp.int32))
+    return jnp.sum(m * weights, axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def unpack_filter_mask(bits: jax.Array, cap: int) -> jax.Array:
+    """Inverse of ``pack_filter_mask``: (..., W) u8 -> (..., cap) bool."""
+    b = bits.astype(jnp.int32)
+    u = ((b[..., None] >> jnp.arange(8, dtype=jnp.int32)) & 1)
+    return u.reshape(*bits.shape[:-1], -1)[..., :cap].astype(jnp.bool_)
+
+
+def filter_from_attrs(store: ListStore, predicate) -> jax.Array:
+    """Evaluate a per-row predicate over ``store.attrs`` into a packed bitmap.
+
+    predicate: elementwise fn (nlist, cap) i32 attrs -> bool (pure jnp, so
+    the whole thing jits). Returns (nlist, W) u8. Padded slots (id -1) are
+    forced to 0 regardless of what the predicate says about the -1 attr
+    sentinel — a filter bit may only ever be set on a real row.
+    """
+    if store.attrs is None:
+        raise ValueError("ListStore holds no attrs column; build with "
+                         "build_lists(..., attrs=...)")
+    return pack_filter_mask(predicate(store.attrs) & (store.ids >= 0))
+
+
+@jax.jit
+def filter_pass_sizes(store: ListStore, filter_bits: jax.Array) -> jax.Array:
+    """Rows per list that pass the filter: (nlist, W) u8 -> (nlist,) i32.
+
+    Occupancy-aware: bits at slots past ``sizes`` never count even if a
+    stale bitmap left them set. ``sizes - filter_pass_sizes`` is the
+    per-list row count a filtered scan excludes (``QueryStats.rows_filtered``
+    sums this over the probed lists).
+    """
+    cap = store.cap
+    m = unpack_filter_mask(filter_bits, cap)
+    slot = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    return jnp.sum((m & (slot < store.sizes[:, None])).astype(jnp.int32),
+                   axis=-1)
+
+
 def build_lists(assign: np.ndarray, packed_codes: np.ndarray, *, nlist: int,
-                cap: int | None = None, ids: np.ndarray | None = None) -> ListStore:
+                cap: int | None = None, ids: np.ndarray | None = None,
+                attrs: np.ndarray | None = None) -> ListStore:
     """Bucket packed codes into padded lists (host-side, offline).
 
     assign: (n,) list assignment per vector; packed_codes: (n, M//2) uint8;
     ids: optional global id per vector (defaults to arange — shards pass
-    their own offsets). Overflow beyond ``cap`` is dropped, reflected in
-    ``sizes`` (same semantics the IVF build always had).
+    their own offsets); attrs: optional (n,) i32 per-vector metadata
+    attribute, bucketed alongside the codes (-1 at padded slots) so filter
+    bitmaps derived from it stay epoch-consistent with the codes. Overflow
+    beyond ``cap`` is dropped, reflected in ``sizes`` (same semantics the
+    IVF build always had).
     """
     assign = np.asarray(assign, np.int64)
     packed = np.asarray(packed_codes, np.uint8)
     n, mh = packed.shape
     gids = np.arange(n, dtype=np.int32) if ids is None else np.asarray(ids, np.int32)
+    avals = None if attrs is None else np.asarray(attrs, np.int32)
     counts = np.bincount(assign, minlength=nlist)
     cap_ = int(cap or max(1, counts.max()))
     list_codes = np.zeros((nlist, cap_, mh), np.uint8)
     list_ids = np.full((nlist, cap_), -1, np.int32)
+    list_attrs = None if avals is None else np.full((nlist, cap_), -1, np.int32)
     cursor = np.zeros((nlist,), np.int64)
     order = np.argsort(assign, kind="stable")
     for i in order:
@@ -110,12 +203,25 @@ def build_lists(assign: np.ndarray, packed_codes: np.ndarray, *, nlist: int,
         if c < cap_:
             list_codes[li, c] = packed[i]
             list_ids[li, c] = gids[i]
+            if list_attrs is not None:
+                list_attrs[li, c] = avals[i]
             cursor[li] += 1
     return ListStore(
         codes=jnp.asarray(list_codes),
         ids=jnp.asarray(list_ids),
         sizes=jnp.asarray(np.minimum(counts, cap_).astype(np.int32)),
+        attrs=None if list_attrs is None else jnp.asarray(list_attrs),
     )
+
+
+def round_robin_perm(nlist: int, num_shards: int) -> np.ndarray:
+    """The list permutation ``partition_lists`` applies: shard j owns lists
+    j, j+S, j+2S, ... of the (padded to S*L) id space. Exposed so per-request
+    sidecars — filter bitmaps (``partition_filter``), namespace membership
+    rows — can be sharded consistently with a store partitioned earlier."""
+    s = int(num_shards)
+    l = -(-int(nlist) // s)
+    return np.arange(s * l).reshape(l, s).T.reshape(-1)
 
 
 def partition_lists(store: ListStore, centroids: jax.Array, num_shards: int
@@ -137,6 +243,7 @@ def partition_lists(store: ListStore, centroids: jax.Array, num_shards: int
     codes = np.asarray(store.codes)
     ids = np.asarray(store.ids)
     sizes = np.asarray(store.sizes)
+    attrs = None if store.attrs is None else np.asarray(store.attrs)
     if pad:
         far = np.full((pad, cen.shape[1]), 1e30, np.float32)
         cen = np.concatenate([cen, far], axis=0)
@@ -145,9 +252,13 @@ def partition_lists(store: ListStore, centroids: jax.Array, num_shards: int
         ids = np.concatenate([ids, np.full((pad,) + ids.shape[1:], -1, ids.dtype)],
                              axis=0)
         sizes = np.concatenate([sizes, np.zeros((pad,), sizes.dtype)], axis=0)
+        if attrs is not None:
+            attrs = np.concatenate(
+                [attrs, np.full((pad,) + attrs.shape[1:], -1, attrs.dtype)],
+                axis=0)
     # round-robin: shard j owns lists j, j+S, j+2S, ... — balances sizes when
     # k-means produces a long tail of small clusters
-    perm = np.arange(s * l).reshape(l, s).T.reshape(-1)
+    perm = round_robin_perm(nlist, s)
     real = (perm < nlist).reshape(s, l)
     return (
         jnp.asarray(cen[perm].reshape(s, l, -1)),
@@ -155,9 +266,33 @@ def partition_lists(store: ListStore, centroids: jax.Array, num_shards: int
             codes=jnp.asarray(codes[perm].reshape((s, l) + codes.shape[1:])),
             ids=jnp.asarray(ids[perm].reshape(s, l, -1)),
             sizes=jnp.asarray(sizes[perm].reshape(s, l)),
+            attrs=None if attrs is None else jnp.asarray(
+                attrs[perm].reshape(s, l, -1)),
         ),
         jnp.asarray(real),
     )
+
+
+def partition_filter(filter_bits: jax.Array, num_shards: int) -> jax.Array:
+    """Shard a packed filter bitmap like ``partition_lists`` shards the codes.
+
+    filter_bits: (nlist, W) u8 over the *global* list ids. Returns
+    (S, L, W) u8 aligned with the partitioned store — shard j's row i is the
+    bitmap of the list ``partition_lists`` placed at (j, i); padding lists
+    get all-zero words (nothing passes — they hold no rows anyway). Pure jnp
+    (the permutation is a compile-time constant), so it composes under jit;
+    per-request filters go through here on every sharded search.
+    """
+    nlist, w = filter_bits.shape
+    s = int(num_shards)
+    l = -(-nlist // s)
+    pad = s * l - nlist
+    bits = filter_bits
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((pad, w), filter_bits.dtype)], axis=0)
+    perm = jnp.asarray(round_robin_perm(nlist, s))
+    return bits[perm].reshape(s, l, w)
 
 
 def partition_base(lists_s: ListStore, base: jax.Array

@@ -11,6 +11,13 @@ Conventions (shared across ``repro.core``, see docs/architecture.md):
   -1 id   sentinel — ``masked_topk`` emits position -1 (distance +inf) past
           the valid candidates and ``gather_ids`` propagates it, so -1 ids
           survive every merge layer unchanged
+  filter  ``masked_topk``'s validity mask is also how filtering reaches
+          selection: a filtered/namespaced candidate is masked invalid
+          (distance +inf) *before* the top-k, never deleted — shapes stay
+          static (docs/filtering.md). With an all-valid mask ``masked_topk``
+          computes exactly ``smallest_k`` (the +inf substitution is the
+          identity), which is why namespace-unrestricted queries are
+          bit-identical to namespace-free ones
 """
 from __future__ import annotations
 

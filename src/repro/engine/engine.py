@@ -33,7 +33,14 @@ recompiles. ``fused_cache_size()`` exposes the cache occupancy so tests and
 serving metrics can assert "at most one compile per shape bucket".
 
 A ``QueryStats`` record rides along for observability: how many lists were
-probed, codes scanned, candidates re-ranked — per query.
+probed, codes scanned, candidates re-ranked, rows filtered out — per query.
+
+Filtered & namespaced search (docs/filtering.md): ``search``/``search_jit``
+accept an optional packed per-row predicate bitmap (``filter_bits``) that the
+stream kernels apply inside their per-tile VMEM reductions, and optional
+per-query ``namespaces`` that restrict coarse probe *selection* to the
+tenant's own lists. Both are traced arguments — predicate/tenant churn never
+recompiles the fused pipeline.
 """
 from __future__ import annotations
 
@@ -45,7 +52,9 @@ import jax.numpy as jnp
 
 from repro.core import coarse as coarse_mod
 from repro.core import ivf as ivf_mod
-from repro.core.lists import base_norms
+from repro.core import topk as topk_mod
+from repro.core.kmeans import pairwise_sqdist
+from repro.core.lists import base_norms, filter_pass_sizes, unpack_filter_mask
 from repro.engine import rerank as rerank_mod
 # single source of truth for both registries (kernels.ops)
 from repro.kernels.ops import RERANK_IMPLS, SCAN_IMPLS
@@ -76,6 +85,10 @@ class QueryStats(NamedTuple):
     lists_probed: jax.Array   # (Q,) i32  valid probes issued
     codes_scanned: jax.Array  # (Q,) i32  true occupancy of scanned lists
     reranked: jax.Array       # (Q,) i32  candidates refined exactly
+    rows_filtered: jax.Array  # (Q,) i32  probed rows the filter excluded
+    #                           (0 when no filter was supplied; namespace-
+    #                           excluded LISTS never appear in any counter —
+    #                           their probes are -1, so nothing was scanned)
 
 
 class SearchResult(NamedTuple):
@@ -124,22 +137,46 @@ def validate_config(config: EngineConfig, *, coarse_kind: str,
 # the very same functions into one XLA program.
 # ---------------------------------------------------------------------------
 
-def coarse_probes(coarse, q: jax.Array, *, nprobe: int, ef: int) -> jax.Array:
+def coarse_probes(coarse, q: jax.Array, *, nprobe: int, ef: int,
+                  ns_member: jax.Array | None = None,
+                  namespaces: jax.Array | None = None) -> jax.Array:
     """Stage 1 — coarse: pick the nprobe most promising lists.
 
     coarse: any of the ``core.coarse`` quantizer pytrees (or a custom object
     with ``.search(q, nprobe)``). q: (Q, D) f32. Returns (Q, nprobe) i32
     list ids, -1 = no probe.
+
+    Namespacing (docs/filtering.md): ``ns_member`` is the engine-held
+    (n_ns, nlist) bool membership table and ``namespaces`` the per-query
+    (Q,) i32 namespace ids (-1 = unrestricted). For flat coarse the
+    restriction is fused into probe *selection* (``masked_topk`` over the
+    allowed lists), so a tenant scan only ever touches its own lists; graph/
+    tree coarse post-masks the routed probes to -1 (they may under-fill
+    nprobe, never over-reach). With every query unrestricted the flat path
+    is exactly ``smallest_k`` — bit-identical to the namespace-free engine.
     """
+    restrict = ns_member is not None and namespaces is not None
+    if restrict:
+        # (Q, nlist) bool: True where query may probe the list
+        allow = ((namespaces < 0)[:, None]
+                 | ns_member[jnp.maximum(namespaces, 0)])
+    if isinstance(coarse, coarse_mod.FlatCoarse) and restrict:
+        coarse_d = pairwise_sqdist(q, coarse.centroids)
+        _, probes = topk_mod.masked_topk(coarse_d, allow, nprobe)
+        return probes
     if isinstance(coarse, coarse_mod.HNSWCoarse):
         _, probes = coarse.search(q, nprobe, ef=max(ef, nprobe))
-        return probes
-    _, probes = coarse.search(q, nprobe)
+    else:
+        _, probes = coarse.search(q, nprobe)
+    if restrict:
+        ok = jnp.take_along_axis(allow, jnp.maximum(probes, 0), axis=1)
+        probes = jnp.where(ok & (probes >= 0), probes, -1)
     return probes
 
 
 def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
-                    *, scan_impl: str, keep: int | None = None
+                    *, scan_impl: str, keep: int | None = None,
+                    filter_bits: jax.Array | None = None
                     ) -> tuple[jax.Array, jax.Array]:
     """Stage 2 — quantized scan, flattened to one candidate pool per query.
 
@@ -152,6 +189,15 @@ def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
     nprobe*n_tiles*min(keep, tile) — bit-identical through any final
     selection of <= keep candidates. ``keep=None`` always yields the full
     pool (hand-composition back-compat).
+
+    ``filter_bits`` is the (nlist, W) packed per-row predicate bitmap
+    (``core.lists.pack_filter_mask``; docs/filtering.md). The stream path
+    applies it *inside* the per-tile VMEM reduction (excluded rows hit the
+    same sentinel as padding, before candidate selection — so the keep
+    budget is spent on passing rows only). The gathered path here is the
+    reference post-filter oracle: scan everything, then mask excluded rows
+    to (inf, -1). The two are bit-identical through any final selection of
+    <= keep candidates (tested at 0/1/50/100% selectivity).
     """
     if keep is not None:
         from repro.kernels import ops
@@ -161,37 +207,72 @@ def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
             2 * index.lists.codes.shape[-1], nlist=index.lists.nlist)
         if impl == "stream":
             return ivf_mod.scan_probes_stream(index, q, probes, keep=keep,
-                                              tile_n=tile_n)
+                                              tile_n=tile_n,
+                                              filter_bits=filter_bits)
     dists, ids = ivf_mod.scan_probes(index, q, probes, impl=scan_impl)
+    if filter_bits is not None:
+        # post-filter oracle: (Q, P, cap) bool of rows that pass
+        ok = unpack_filter_mask(filter_bits, index.lists.cap)[
+            jnp.maximum(probes, 0)]
+        ok = ok & (ids >= 0)
+        dists = jnp.where(ok, dists, jnp.inf)
+        ids = jnp.where(ok, ids, -1)
     qq = dists.shape[0]
     return dists.reshape(qq, -1), ids.reshape(qq, -1)
 
 
+def count_rows_filtered(index: ivf_mod.IVFIndex, probes: jax.Array,
+                        filter_bits: jax.Array | None) -> jax.Array:
+    """(Q,) i32: occupied rows in the probed lists that the filter excluded.
+
+    Zero without a filter. Namespace-excluded lists contribute nothing:
+    their probes are already -1, so they were never scanned at all.
+    """
+    qq = probes.shape[0]
+    if filter_bits is None:
+        return jnp.zeros((qq,), jnp.int32)
+    dropped = index.lists.sizes - filter_pass_sizes(index.lists, filter_bits)
+    return jnp.sum(jnp.where(probes >= 0, dropped[jnp.maximum(probes, 0)], 0),
+                   axis=1)
+
+
 def make_stats(index: ivf_mod.IVFIndex, probes: jax.Array,
-               reranked: jax.Array) -> QueryStats:
+               reranked: jax.Array,
+               filter_bits: jax.Array | None = None) -> QueryStats:
     """Work counters from the probe set + the re-rank stage's counter."""
     return QueryStats(
         lists_probed=jnp.sum((probes >= 0).astype(jnp.int32), axis=1),
         codes_scanned=jnp.sum(index.lists.probed_sizes(probes), axis=1),
         reranked=reranked,
+        rows_filtered=count_rows_filtered(index, probes, filter_bits),
     )
 
 
 def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
-              norms: jax.Array | None, q: jax.Array, *, k: int, nprobe: int,
+              norms: jax.Array | None, ns_member: jax.Array | None,
+              q: jax.Array, filter_bits: jax.Array | None,
+              namespaces: jax.Array | None, *, k: int, nprobe: int,
               r: int, scan_impl: str, rerank_impl: str, ef: int
               ) -> SearchResult:
-    """The whole engine as one pure function (stages 1-4 + stats)."""
-    probes = coarse_probes(coarse, q, nprobe=nprobe, ef=ef)
+    """The whole engine as one pure function (stages 1-4 + stats).
+
+    ``filter_bits``/``namespaces`` are *traced* arguments (None simply drops
+    out of the trace): changing the predicate or tenant mix between requests
+    never recompiles — only presence/absence does, giving at most four
+    compile-cache entries per shape bucket instead of one per predicate.
+    """
+    probes = coarse_probes(coarse, q, nprobe=nprobe, ef=ef,
+                           ns_member=ns_member, namespaces=namespaces)
     # the selection budget stage 3+4 will take — under 'stream' this lets
     # the scan kernel reduce candidates in VMEM instead of writing the full
     # (Q, nprobe*cap) pool to HBM
     flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
-                                       keep=(r * k) if r else k)
+                                       keep=(r * k) if r else k,
+                                       filter_bits=filter_bits)
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
         flat_d, flat_ids, base, q, k, r, norms=norms, rerank_impl=rerank_impl)
     return SearchResult(dists=vals, ids=out_ids,
-                        stats=make_stats(index, probes, reranked))
+                        stats=make_stats(index, probes, reranked, filter_bits))
 
 
 # ONE process-wide jit: cache is keyed on static knobs + pytree structure +
@@ -225,12 +306,22 @@ class SearchEngine:
     def __init__(self, index: ivf_mod.IVFIndex, *, base: jax.Array | None = None,
                  coarse: str | object = "flat",
                  config: EngineConfig | None = None, hnsw_m: int = 16,
-                 ef_construction: int = 64):
+                 ef_construction: int = 64,
+                 namespaces: jax.Array | None = None):
         self.index = index
         self.base = base
         # ‖x‖² per base row, computed once: the norms+GEMM re-rank (both
         # impls) reads these instead of re-deriving norms per query
         self.base_norms = None if base is None else base_norms(base)
+        # (n_ns, nlist) bool membership: row t = the lists holding tenant
+        # t's vectors. None = engine is namespace-free (docs/filtering.md).
+        if namespaces is not None:
+            namespaces = jnp.asarray(namespaces, dtype=bool)
+            if namespaces.ndim != 2 or namespaces.shape[1] != index.lists.nlist:
+                raise ValueError(
+                    f"namespaces must be (n_ns, nlist={index.lists.nlist}) "
+                    f"bool membership, got shape {namespaces.shape}")
+        self.ns_member = namespaces
         self.config = config or EngineConfig()
         if isinstance(coarse, str):
             if coarse == "flat":
@@ -282,34 +373,68 @@ class SearchEngine:
 
     # -- the unified entry points ------------------------------------------
 
-    def _resolve(self, queries, nprobe, rerank_mult):
+    def _resolve(self, queries, nprobe, rerank_mult, filter_bits, namespaces):
         q = queries[None] if queries.ndim == 1 else queries
         nprobe = self.config.nprobe if nprobe is None else nprobe
         r = self.config.rerank_mult if rerank_mult is None else rerank_mult
         if r and self.base is None:
             raise ValueError("exact re-rank requested but engine holds no "
                              "base vectors (build with keep_base=True)")
-        return q, nprobe, r
+        if filter_bits is not None:
+            if (filter_bits.ndim != 2
+                    or filter_bits.shape[0] != self.index.lists.nlist
+                    or filter_bits.shape[1] * 8 < self.index.lists.cap):
+                raise ValueError(
+                    f"filter_bits must be (nlist={self.index.lists.nlist}, "
+                    f"W>=ceil(cap/8)={-(-self.index.lists.cap // 8)}) packed "
+                    f"u8 (core.lists.pack_filter_mask), got shape "
+                    f"{filter_bits.shape}")
+            filter_bits = filter_bits.astype(jnp.uint8)
+        if namespaces is not None:
+            if self.ns_member is None:
+                raise ValueError(
+                    "per-query namespaces given but the engine was built "
+                    "without a namespace table (pass namespaces=(n_ns, nlist) "
+                    "bool membership to SearchEngine)")
+            namespaces = jnp.asarray(namespaces, jnp.int32)
+            if namespaces.ndim == 0:
+                namespaces = namespaces[None]
+            if namespaces.shape != (q.shape[0],):
+                raise ValueError(
+                    f"namespaces must be ({q.shape[0]},) i32 (one per query, "
+                    f"-1 = unrestricted), got shape {namespaces.shape}")
+        return q, nprobe, r, filter_bits, namespaces
 
     def search(self, queries: jax.Array, k: int = 10, *,
-               nprobe: int | None = None, rerank_mult: int | None = None
-               ) -> SearchResult:
+               nprobe: int | None = None, rerank_mult: int | None = None,
+               filter_bits: jax.Array | None = None,
+               namespaces: jax.Array | None = None) -> SearchResult:
         """Batched ANN search, staged. queries: (Q, D) or (D,).
 
         ``rerank_mult`` overrides the config: r > 0 refines the top r*k
         quantized candidates with exact float distances before the final
         merge (requires ``base``); 0 returns pure fast-scan results.
+
+        ``filter_bits`` is an optional (nlist, W) packed per-row predicate
+        bitmap (``core.lists.pack_filter_mask`` / ``filter_from_attrs``);
+        ``namespaces`` an optional (Q,) i32 of per-query namespace ids into
+        the engine's membership table, -1 = unrestricted. Both restrict
+        which rows can appear in results — see docs/filtering.md for the
+        exact contract.
         """
-        q, nprobe, r = self._resolve(queries, nprobe, rerank_mult)
+        q, nprobe, r, fb, ns = self._resolve(queries, nprobe, rerank_mult,
+                                             filter_bits, namespaces)
         return _pipeline(self.coarse, self.index, self.base, self.base_norms,
-                         q, k=k, nprobe=nprobe, r=r,
+                         self.ns_member if ns is not None else None,
+                         q, fb, ns, k=k, nprobe=nprobe, r=r,
                          scan_impl=self.config.scan_impl,
                          rerank_impl=self.config.rerank_impl,
                          ef=self.config.ef)
 
     def search_jit(self, queries: jax.Array, k: int = 10, *,
-                   nprobe: int | None = None, rerank_mult: int | None = None
-                   ) -> SearchResult:
+                   nprobe: int | None = None, rerank_mult: int | None = None,
+                   filter_bits: jax.Array | None = None,
+                   namespaces: jax.Array | None = None) -> SearchResult:
         """Batched ANN search, fused: the whole pipeline in one ``jax.jit``.
 
         Same semantics and bit-identical results to ``search``, but a single
@@ -319,13 +444,22 @@ class SearchEngine:
         recompiles. Requires the coarse quantizer to be a jax pytree (all of
         ``core.coarse``'s are; a custom non-pytree object falls back to
         ``search``).
+
+        ``filter_bits``/``namespaces`` (see ``search``) are traced, not
+        static: the predicate VALUES never key the compile cache — only
+        their presence does (a None is absent from the pytree), so a stream
+        of distinct filters compiles at most once per presence combination.
         """
-        q, nprobe, r = self._resolve(queries, nprobe, rerank_mult)
+        q, nprobe, r, fb, ns = self._resolve(queries, nprobe, rerank_mult,
+                                             filter_bits, namespaces)
         if self.coarse_kind == "custom":
             # unknown coarse objects may not be jax pytrees => not traceable
-            return self.search(queries, k, nprobe=nprobe, rerank_mult=r)
+            return self.search(queries, k, nprobe=nprobe, rerank_mult=r,
+                               filter_bits=fb, namespaces=ns)
         return _fused_pipeline(self.coarse, self.index, self.base,
-                               self.base_norms, q, k=k, nprobe=nprobe, r=r,
+                               self.base_norms,
+                               self.ns_member if ns is not None else None,
+                               q, fb, ns, k=k, nprobe=nprobe, r=r,
                                scan_impl=self.config.scan_impl,
                                rerank_impl=self.config.rerank_impl,
                                ef=self.config.ef)

@@ -28,7 +28,9 @@ import jax.numpy as jnp
 from repro.core import ivf as ivf_mod
 from repro.core import topk as topk_mod
 from repro.core.kmeans import pairwise_sqdist
-from repro.core.lists import ListStore, partition_base, partition_lists
+from repro.core.lists import (ListStore, filter_pass_sizes, partition_base,
+                              partition_filter, partition_lists,
+                              round_robin_perm)
 from repro.engine import rerank as rerank_mod
 from repro.engine.engine import (EngineConfig, QueryStats, SearchEngine,
                                  SearchResult, scan_candidates)
@@ -37,8 +39,8 @@ AXIS = "shards"
 
 
 def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
-                  norms, q, *, k: int, nprobe: int, r: int, scan_impl: str,
-                  rerank_impl: str, remap: bool):
+                  norms, member, q, fbits, ns, *, k: int, nprobe: int, r: int,
+                  scan_impl: str, rerank_impl: str, remap: bool):
     """One shard's pipeline + the cross-shard merge. Runs under a named axis.
 
     With ``remap=True`` the shard's list ids are *local* rows into its own
@@ -46,18 +48,31 @@ def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
     on local ids and ``gids`` translates back to global just before the
     distributed merge. With ``remap=False`` (no base held) ids are global
     throughout and ``gids``/``norms`` are unused dummies.
+
+    ``member`` is the shard's (n_ns, L) slice of the namespace table,
+    ``fbits`` its (L, W) slice of the per-request filter bitmap, ``ns`` the
+    replicated (Q,) namespace ids — any may be None (docs/filtering.md).
+    A restricted query selects probes with ``masked_topk`` over its own
+    lists only; padding lists are member-False everywhere, and with every
+    query unrestricted the mask is all-True so the selection is exactly
+    ``smallest_k`` — bit-identical to the namespace-free driver.
     """
     index = ivf_mod.IVFIndex(centroids=centroids, codebook=codebook, lists=lists)
     nprobe_local = min(nprobe, centroids.shape[0])
     coarse_d = pairwise_sqdist(q, centroids)
-    _, probes = topk_mod.smallest_k(coarse_d, nprobe_local)
+    if member is not None and ns is not None:
+        allow = (ns < 0)[:, None] | member[jnp.maximum(ns, 0)]
+        _, probes = topk_mod.masked_topk(coarse_d, allow, nprobe_local)
+    else:
+        _, probes = topk_mod.smallest_k(coarse_d, nprobe_local)
     # same stage function as the single-host engine, including its stream
     # routing: each shard's local ListStore already has the
     # (nlist_local, cap, M//2) layout the stream kernel scans in place, so a
     # 'stream' (or 'auto'-resolved-to-stream) shard never materializes its
     # gathered code copy either
     flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
-                                       keep=(r * k) if r else k)
+                                       keep=(r * k) if r else k,
+                                       filter_bits=fbits)
     # re-rank (either impl) runs on the shard-local (R, D) base slice with
     # its precomputed local norms; local candidate ids map back to global
     # through gids only after the top-k, just before the merge
@@ -66,14 +81,22 @@ def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
     if remap:
         out_ids = jnp.where(out_ids >= 0, gids[jnp.maximum(out_ids, 0)], -1)
     mvals, mids = topk_mod.distributed_topk(vals, out_ids, k, AXIS)
+    valid = probes >= 0
+    safe = jnp.maximum(probes, 0)
+    if fbits is None:
+        rows_filtered = jnp.zeros((q.shape[0],), jnp.int32)
+    else:
+        dropped = lists.sizes - filter_pass_sizes(lists, fbits)
+        rows_filtered = jnp.sum(jnp.where(valid, dropped[safe], 0), axis=1)
     stats = QueryStats(
         # count only probes of real lists — a shard with fewer real lists
         # than nprobe inevitably "probes" padding, which is zero work
         lists_probed=jax.lax.psum(
-            jnp.sum(real[probes].astype(jnp.int32), axis=1), AXIS),
+            jnp.sum((real[safe] & valid).astype(jnp.int32), axis=1), AXIS),
         codes_scanned=jax.lax.psum(
             jnp.sum(lists.probed_sizes(probes), axis=1), AXIS),
         reranked=jax.lax.psum(reranked, AXIS),
+        rows_filtered=jax.lax.psum(rows_filtered, AXIS),
     )
     return mvals, mids, stats
 
@@ -113,6 +136,24 @@ class ShardedEngine:
             # unused dummies so both vmap and shard_map see a uniform arity
             self.gids_s = jnp.full((self.num_shards, 1), -1, jnp.int32)
             self.norms_s = None
+        # namespace membership sharded with the same round-robin permutation
+        # as the lists: shard j's (n_ns, L) slice covers exactly its lists;
+        # padding lists are member-False for every namespace
+        if engine.ns_member is None:
+            self.member_s = None
+        else:
+            member = jnp.asarray(engine.ns_member, bool)
+            nlist = member.shape[1]
+            s = self.num_shards
+            l = -(-nlist // s)
+            pad = s * l - nlist
+            if pad:
+                member = jnp.concatenate(
+                    [member, jnp.zeros((member.shape[0], pad), bool)], axis=1)
+            perm = jnp.asarray(round_robin_perm(nlist, s))
+            self.member_s = (member[:, perm]
+                             .reshape(member.shape[0], s, l)
+                             .transpose(1, 0, 2))  # (S, n_ns, L)
 
     @property
     def base(self) -> jax.Array | None:
@@ -121,12 +162,22 @@ class ShardedEngine:
 
     def search(self, queries: jax.Array, k: int = 10, *,
                nprobe: int | None = None, rerank_mult: int | None = None,
+               filter_bits: jax.Array | None = None,
+               namespaces: jax.Array | None = None,
                mesh: jax.sharding.Mesh | None = None) -> SearchResult:
         """Batched search with the distributed shard merge.
 
         Semantics note vs the unsharded engine: each shard probes ``nprobe``
         of *its own* lists, so up to S*nprobe lists are scanned in total —
         recall at a given nprobe is >= the single-shard engine's.
+
+        ``filter_bits`` is the (nlist, W) bitmap over *global* list ids —
+        it is resharded here per request (``partition_filter``, pure jnp) so
+        callers never track the round-robin layout. ``namespaces`` (Q,) i32
+        is replicated: each shard masks its own coarse selection with its
+        slice of the membership table, so a tenant's query only ever probes
+        (and only ever DMAs) the tenant's lists on every shard. See
+        docs/filtering.md.
         """
         q = queries[None] if queries.ndim == 1 else queries
         nprobe = self.config.nprobe if nprobe is None else nprobe
@@ -134,6 +185,18 @@ class ShardedEngine:
         if r and self.base_s is None:
             raise ValueError("exact re-rank requested but engine holds no "
                              "base vectors (build with keep_base=True)")
+        if namespaces is not None:
+            if self.member_s is None:
+                raise ValueError(
+                    "per-query namespaces given but the wrapped engine was "
+                    "built without a namespace table")
+            namespaces = jnp.asarray(namespaces, jnp.int32)
+        if filter_bits is not None:
+            fbits_s = partition_filter(jnp.asarray(filter_bits, jnp.uint8),
+                                       self.num_shards)
+        else:
+            fbits_s = None
+        member_s = self.member_s if namespaces is not None else None
         fn = functools.partial(_local_search, k=k, nprobe=nprobe, r=r,
                                scan_impl=self.config.scan_impl,
                                rerank_impl=self.config.rerank_impl,
@@ -141,11 +204,14 @@ class ShardedEngine:
         base_ax = 0 if self.base_s is not None else None
 
         if mesh is None:
+            # None args are empty pytrees: their in_axes entries are inert
             mvals, mids, stats = jax.vmap(
-                fn, in_axes=(0, 0, 0, 0, None, base_ax, base_ax, None),
+                fn, in_axes=(0, 0, 0, 0, None, base_ax, base_ax, 0, None, 0,
+                             None),
                 axis_name=AXIS,
             )(self.centroids_s, self.lists_s, self.real_s, self.gids_s,
-              self.codebook, self.base_s, self.norms_s, q)
+              self.codebook, self.base_s, self.norms_s, member_s, q, fbits_s,
+              namespaces)
             # merge output is replicated across the shard axis; take shard 0
             return SearchResult(mvals[0], mids[0],
                                 QueryStats(*(s[0] for s in stats)))
@@ -158,19 +224,22 @@ class ShardedEngine:
                 f"mesh axis {AXIS!r} has {mesh.shape[AXIS]} devices but the "
                 f"engine holds {self.num_shards} shards")
 
-        def per_device(cen, lists, real, gids, cb, base, norms, qq):
+        def per_device(cen, lists, real, gids, cb, base, norms, mem, qq, fb,
+                       nss):
             # each device owns exactly one shard => leading block dim is 1
             out_v, out_i, st = fn(cen[0], jax.tree.map(lambda x: x[0], lists),
                                   real[0], gids[0], cb,
                                   None if base is None else base[0],
-                                  None if norms is None else norms[0], qq)
+                                  None if norms is None else norms[0],
+                                  None if mem is None else mem[0], qq,
+                                  None if fb is None else fb[0], nss)
             return out_v[None], out_i[None], jax.tree.map(lambda x: x[None], st)
 
         base_spec = P() if self.base_s is None else P(AXIS)
         sharded = shard_map(
             per_device, mesh=mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), base_spec,
-                      base_spec, P()),
+                      base_spec, P(AXIS), P(), P(AXIS), P()),
             out_specs=(P(AXIS), P(AXIS), P(AXIS)),
             # jax has no replication rule for pallas_call (the 'stream'
             # scan/re-rank kernels); the merge replicates results itself via
@@ -179,5 +248,6 @@ class ShardedEngine:
         )
         mvals, mids, stats = sharded(self.centroids_s, self.lists_s,
                                      self.real_s, self.gids_s, self.codebook,
-                                     self.base_s, self.norms_s, q)
+                                     self.base_s, self.norms_s, member_s, q,
+                                     fbits_s, namespaces)
         return SearchResult(mvals[0], mids[0], QueryStats(*(s[0] for s in stats)))

@@ -476,18 +476,30 @@ def _tile_topk(acc: jax.Array, slot_base: jax.Array, kc: int
     return vals, slots
 
 
-def _stream_topk_kernel(probe_ref, sizes_ref, table_ref, codes_hbm,
-                        vals_ref, slots_ref, scratch, sem, *,
-                        tile_n: int, kc: int, n_tiles: int, g: int):
-    """Stream kernel + fused per-tile candidate selection.
+def _stream_topk_kernel(probe_ref, sizes_ref, table_ref, *rest,
+                        tile_n: int, kc: int, n_tiles: int, g: int,
+                        has_filter: bool):
+    """Stream kernel + fused per-tile candidate selection (+ optional
+    per-row predicate mask).
 
     Outputs per (group, cap-tile): the kc smallest quantized dists and their
     global slot ids within the list (-1 = absent). Slots past the list's
     true occupancy (``sizes_ref``) are masked to ACC_SENTINEL *before* the
-    selection, so padding can never displace a real candidate. Same
+    selection, so padding can never displace a real candidate. With
+    ``has_filter`` the group's packed filter-bitmap row (``fbits_ref``,
+    (1, W) u8, LSB-first — see core/lists.py) rides into VMEM next to the
+    LUT; the tile's bits are unpacked in registers and rows whose bit is 0
+    are masked to ACC_SENTINEL through the *same* pre-selection path as the
+    occupancy mask — a filtered row is indistinguishable from padding, so
+    the fused selection stays bit-identical to a post-filtered oracle. Same
     double-buffered DMA pipeline as ``_stream_grouped_kernel``: tile t+1's
     copy overlaps tile t's scan+selection.
     """
+    if has_filter:
+        fbits_ref, codes_hbm, vals_ref, slots_ref, scratch, sem = rest
+    else:
+        codes_hbm, vals_ref, slots_ref, scratch, sem = rest
+        fbits_ref = None
     gi = pl.program_id(0)
     ni = pl.program_id(1)
     step = gi * n_tiles + ni
@@ -506,6 +518,18 @@ def _stream_topk_kernel(probe_ref, sizes_ref, table_ref, codes_hbm,
         slot = (jax.lax.broadcasted_iota(jnp.int32, (1, tile_n), 1)
                 + ni * tile_n)
         acc = jnp.where(slot < sizes_ref[lid], acc, ACC_SENTINEL)
+        if fbits_ref is not None:
+            # unpack this group's bitmap row (1, W) -> (1, W*8) bits with
+            # the same stack+reshape idiom as the nibble unpack (LSB-first
+            # bit j of word w = slot w*8 + j), then slice this tile's span.
+            # W*8 >= cap >= (ni+1)*tile_n, so the slice never runs off the
+            # end; excluded rows join the occupancy padding at ACC_SENTINEL.
+            fb = fbits_ref[...].astype(jnp.int32)  # (1, W)
+            bits = jnp.stack([(fb >> j) & 1 for j in range(8)],
+                             axis=-1).reshape(1, -1)
+            tile_bits = jax.lax.dynamic_slice(
+                bits, (0, ni * tile_n), (1, tile_n))
+            acc = jnp.where(tile_bits > 0, acc, ACC_SENTINEL)
         vals, slots = _tile_topk(acc, ni * tile_n, kc)
         vals_ref[...] = vals[:, None, :]
         slots_ref[...] = slots[:, None, :]
@@ -519,23 +543,31 @@ def _stream_topk_kernel(probe_ref, sizes_ref, table_ref, codes_hbm,
 def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
                                  probe_ids: jax.Array, sizes: jax.Array, *,
                                  kc: int, tile_n: int = TILE_N,
+                                 filter_bits: jax.Array | None = None,
                                  interpret: bool = True
                                  ) -> tuple[jax.Array, jax.Array]:
-    """Gather-free grouped ADC with fused candidate reduction.
+    """Gather-free grouped ADC with fused candidate reduction + filtering.
 
     table_q8 (G, M, 16) u8; list_codes (nlist, cap, M//2) u8 in place;
-    probe_ids (G,) i32 (-1 = no probe); sizes (nlist,) i32 true occupancy.
+    probe_ids (G,) i32 (-1 = no probe); sizes (nlist,) i32 true occupancy;
+    filter_bits optional (G, W) u8 — each group's *pre-gathered* packed
+    filter-bitmap row (W = ceil(cap/8), LSB-first; callers gather
+    ``bitmap[max(probe_ids, 0)]`` — ~W bytes/group next to cap*M//2 code
+    bytes, so the extra VMEM traffic is ~1.5% at M=16).
     Returns (vals (G, n_tiles, kc) i32, slots (G, n_tiles, kc) i32): per
     (group, cap-tile) the kc smallest quantized distances and their slot
     position inside the probed list, -1 slot = absent (padding past the
-    list's occupancy, or an invalid probe — whose DMA is skipped outright).
+    list's occupancy, a filtered-out row, or an invalid probe — whose DMA
+    is skipped outright).
 
     The full (G, cap) accumulation never reaches HBM: selection happens in
     VMEM on the tile the DMA just landed, so scan-stage writeback shrinks
     by ~cap/kc. Keeping the per-tile top-kc is exact for any final
     selection of <= kc candidates (every survivor is within its own tile's
     top-kc), with ties resolved identically to ``masked_topk`` over the
-    full array (lowest slot wins).
+    full array (lowest slot wins) — and the predicate mask joins the
+    occupancy mask *before* selection, so the filtered result is
+    bit-identical to filtering the full accumulation after the fact.
     """
     g, m, k = table_q8.shape
     nlist, cap, mh = list_codes.shape
@@ -544,13 +576,22 @@ def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
     assert cap % tile_n == 0, (cap, tile_n)
     assert 1 <= kc <= tile_n, (kc, tile_n)
     n_tiles = cap // tile_n
+    in_specs = [
+        pl.BlockSpec((1, m, 16), lambda gi, ni, pr, sz: (gi, 0, 0)),
+    ]
+    operands = [probe_ids, sizes, table_q8]
+    if filter_bits is not None:
+        w = filter_bits.shape[-1]
+        assert filter_bits.shape == (g, w) and w * 8 >= cap, (
+            filter_bits.shape, g, cap)
+        in_specs.append(pl.BlockSpec((1, w), lambda gi, ni, pr, sz: (gi, 0)))
+        operands.append(filter_bits)
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    operands.append(list_codes)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(g, n_tiles),
-        in_specs=[
-            pl.BlockSpec((1, m, 16), lambda gi, ni, pr, sz: (gi, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
             pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
@@ -561,7 +602,8 @@ def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
         ],
     )
     kernel = functools.partial(_stream_topk_kernel, tile_n=tile_n, kc=kc,
-                               n_tiles=n_tiles, g=g)
+                               n_tiles=n_tiles, g=g,
+                               has_filter=filter_bits is not None)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -570,4 +612,4 @@ def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
             jax.ShapeDtypeStruct((g, n_tiles, kc), jnp.int32),
         ],
         interpret=interpret,
-    )(probe_ids, sizes, table_q8, list_codes)
+    )(*operands)

@@ -63,6 +63,9 @@ class Request:
     tenant: str
     future: Future
     t_submit: float     # time.monotonic() at enqueue
+    namespace: int = -1  # engine namespace id, -1 = unrestricted; namespaces
+    #                      are traced per-row, so mixed-namespace batches
+    #                      share one dispatch (docs/filtering.md)
 
 
 class Batcher:
@@ -88,7 +91,8 @@ class Batcher:
 
     # -- producer side ------------------------------------------------------
 
-    def submit(self, query, k: int = 10, tenant: str = "default") -> Future:
+    def submit(self, query, k: int = 10, tenant: str = "default",
+               namespace: int = -1) -> Future:
         """Enqueue one query; the future resolves to a ``loop.ServeResult``."""
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
@@ -96,7 +100,7 @@ class Batcher:
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
         req = Request(query=q, k=int(k), tenant=str(tenant), future=Future(),
-                      t_submit=time.monotonic())
+                      t_submit=time.monotonic(), namespace=int(namespace))
         with self._cond:
             if self._closed:
                 raise RuntimeError("batcher is closed")

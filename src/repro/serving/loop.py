@@ -17,6 +17,12 @@ Callers interact through futures (``submit``) or asyncio (``asearch``):
 ``warmup`` pushes one dummy batch through every shape bucket so steady-state
 traffic never sees a compile; ``metrics()`` exposes batch occupancy and the
 fused-jit compile count to verify exactly that.
+
+Filtered & namespaced serving (docs/filtering.md): the loop can hold a
+process-wide attribute filter bitmap (``filter_bits`` / ``set_filter``) and
+each request can carry a ``namespace`` id. Both ride the dispatch as traced
+values — mixed-namespace batches share buckets and compiles, and the per-row
+``rows_filtered`` counter flows into ``ServeResult`` and ``TenantStats``.
 """
 from __future__ import annotations
 
@@ -44,6 +50,7 @@ class ServeResult(NamedTuple):
     lists_probed: int     # this query's QueryStats row
     codes_scanned: int
     reranked: int
+    rows_filtered: int    # probed rows the loop's filter excluded (0 if none)
     latency_s: float      # submit -> results on host
 
 
@@ -76,8 +83,15 @@ class ServingLoop:
                  max_wait_s: float = 0.002,
                  nprobe: int | None = None, rerank_mult: int | None = None,
                  stats: StatsRegistry | None = None,
-                 warmup_cache: str | None = None):
+                 warmup_cache: str | None = None,
+                 filter_bits=None):
         self.engine = engine
+        # loop-level attribute filter: a (nlist, W) packed bitmap applied to
+        # every dispatched batch (docs/filtering.md). Swap it atomically with
+        # ``set_filter`` on attribute epoch changes — the values are traced,
+        # so a swap never recompiles.
+        self.filter_bits = (None if filter_bits is None
+                            else jnp.asarray(filter_bits, jnp.uint8))
         # path of a persisted autotune table (kernels.ops.save_autotune_cache
         # format): loaded before warmup so a fleet replica skips the timed
         # kernel sweeps its siblings already ran, re-saved after warmup so
@@ -175,8 +189,14 @@ class ServingLoop:
 
     # -- request entry points ------------------------------------------------
 
-    def submit(self, query, k: int = 10, tenant: str = "default") -> Future:
-        """Enqueue one (D,) query -> Future[ServeResult]."""
+    def submit(self, query, k: int = 10, tenant: str = "default",
+               namespace: int = -1) -> Future:
+        """Enqueue one (D,) query -> Future[ServeResult].
+
+        ``namespace`` >= 0 restricts the query to that engine namespace's
+        lists (-1 = unrestricted). Namespaces are per-row traced values, so
+        mixed-namespace requests still share shape buckets and compiles.
+        """
         if self._thread is None:
             raise RuntimeError("loop is not running (call start())")
         q = np.asarray(query, np.float32)
@@ -186,12 +206,33 @@ class ServingLoop:
             raise ValueError(
                 f"query shape {q.shape} does not match engine dim "
                 f"({self._dim},)")
-        return self.batcher.submit(q, k=k, tenant=tenant)
+        if namespace >= 0:
+            if self.engine.ns_member is None:
+                raise ValueError(
+                    f"namespace={namespace} requested but the engine was "
+                    "built without a namespace table")
+            if namespace >= self.engine.ns_member.shape[0]:
+                raise ValueError(
+                    f"namespace={namespace} out of range (engine holds "
+                    f"{self.engine.ns_member.shape[0]} namespaces)")
+        return self.batcher.submit(q, k=k, tenant=tenant, namespace=namespace)
 
-    async def asearch(self, query, k: int = 10, tenant: str = "default"
-                      ) -> ServeResult:
+    async def asearch(self, query, k: int = 10, tenant: str = "default",
+                      namespace: int = -1) -> ServeResult:
         """Asyncio-native entry: await one query's ServeResult."""
-        return await asyncio.wrap_future(self.submit(query, k=k, tenant=tenant))
+        return await asyncio.wrap_future(
+            self.submit(query, k=k, tenant=tenant, namespace=namespace))
+
+    def set_filter(self, filter_bits) -> None:
+        """Swap the loop-level filter bitmap (None = unfiltered).
+
+        Safe to call while serving: the reference swap is atomic and each
+        dispatch reads it once. Flipping between None and a bitmap changes
+        the traced-arg structure and costs one compile per bucket; swapping
+        one bitmap for another never recompiles.
+        """
+        self.filter_bits = (None if filter_bits is None
+                            else jnp.asarray(filter_bits, jnp.uint8))
 
     # -- observability -------------------------------------------------------
 
@@ -222,14 +263,25 @@ class ServingLoop:
                     if not r.future.done():
                         r.future.set_exception(e)
 
-    def _call_engine(self, q, k: int):
+    def _call_engine(self, q, k: int, namespaces=None):
         """search_jit + per-loop compile/autotune attribution (cache deltas
         around the call; warmup runs before the dispatch thread and
-        dispatches are single-threaded, so the deltas are this loop's own)."""
+        dispatches are single-threaded, so the deltas are this loop's own).
+
+        Trace-shape consistency: when the engine holds a namespace table the
+        loop ALWAYS passes a namespaces array (all -1 for warmup and
+        unrestricted batches) — so warmup and steady-state traffic share one
+        compiled signature per bucket instead of splitting on presence.
+        Same for the loop-level filter bitmap.
+        """
+        if self.engine.ns_member is not None and namespaces is None:
+            namespaces = np.full((q.shape[0],), -1, np.int32)
         c0 = fused_cache_size()
         a0 = autotune_cache_size()
         res = self.engine.search_jit(q, k, nprobe=self.nprobe,
-                                     rerank_mult=self.rerank_mult)
+                                     rerank_mult=self.rerank_mult,
+                                     filter_bits=self.filter_bits,
+                                     namespaces=namespaces)
         with self._lock:
             self._compiles += fused_cache_size() - c0
             self._autotuned += autotune_cache_size() - a0
@@ -238,13 +290,20 @@ class ServingLoop:
     def _dispatch(self, reqs: list[Request]) -> None:
         padded, bucket = self.batcher.form(reqs)
         n = len(reqs)
-        res = self._call_engine(jnp.asarray(padded), reqs[0].k)
+        ns = None
+        if self.engine.ns_member is not None:
+            # padding rows are unrestricted (-1): their results are dropped,
+            # so the cheapest trace-consistent value wins
+            ns = np.full((bucket,), -1, np.int32)
+            ns[:n] = [r.namespace for r in reqs]
+        res = self._call_engine(jnp.asarray(padded), reqs[0].k, namespaces=ns)
         # one device->host sync for the whole batch
         dists = np.asarray(res.dists)
         ids = np.asarray(res.ids)
         lp = np.asarray(res.stats.lists_probed)
         cs = np.asarray(res.stats.codes_scanned)
         rr = np.asarray(res.stats.reranked)
+        rf = np.asarray(res.stats.rows_filtered)
         t_done = time.monotonic()
         lats = [t_done - r.t_submit for r in reqs]
 
@@ -252,11 +311,11 @@ class ServingLoop:
             r.future.set_result(ServeResult(
                 dists=dists[i], ids=ids[i], lists_probed=int(lp[i]),
                 codes_scanned=int(cs[i]), reranked=int(rr[i]),
-                latency_s=lats[i]))
+                rows_filtered=int(rf[i]), latency_s=lats[i]))
         # padding rows [n:] are dropped on the floor here — accounting and
         # callers only ever see rows [:n]
         self.stats.record_batch([r.tenant for r in reqs], lp[:n], cs[:n],
-                                rr[:n], lats)
+                                rr[:n], lats, rf[:n])
         with self._lock:
             self._batches += 1
             self._rows_served += n

@@ -29,6 +29,9 @@ class TenantStats:
     lists_probed: int = 0       # sum of QueryStats.lists_probed
     codes_scanned: int = 0      # sum of QueryStats.codes_scanned
     reranked: int = 0           # sum of QueryStats.reranked
+    rows_filtered: int = 0      # sum of QueryStats.rows_filtered (rows the
+    #                             attribute filter excluded mid-scan; 0 when
+    #                             the loop serves unfiltered)
     latency_sum_s: float = 0.0  # submit -> result, summed
     latency_max_s: float = 0.0
 
@@ -55,11 +58,13 @@ class StatsRegistry:
 
     def record_batch(self, tenants: Iterable[str], lists_probed: np.ndarray,
                      codes_scanned: np.ndarray, reranked: np.ndarray,
-                     latencies_s: Iterable[float]) -> None:
+                     latencies_s: Iterable[float],
+                     rows_filtered: np.ndarray | None = None) -> None:
         """Fold one batch's per-row counters into the per-tenant aggregates.
 
         tenants / latencies_s: one entry per *real* row of the batch, aligned
-        with the stat arrays (each (Q_real,)).
+        with the stat arrays (each (Q_real,)). ``rows_filtered`` is optional
+        (trailing, defaulted) so pre-filtering callers keep working.
         """
         with self._lock:
             seen: set[str] = set()
@@ -71,6 +76,8 @@ class StatsRegistry:
                 st.lists_probed += int(lists_probed[i])
                 st.codes_scanned += int(codes_scanned[i])
                 st.reranked += int(reranked[i])
+                if rows_filtered is not None:
+                    st.rows_filtered += int(rows_filtered[i])
                 st.latency_sum_s += float(lat)
                 st.latency_max_s = max(st.latency_max_s, float(lat))
                 if tenant not in seen:

@@ -1,4 +1,4 @@
-"""Markdown link check for the docs tree (stdlib-only; CI docs job).
+"""Markdown link + code-reference check for the docs tree (stdlib-only).
 
 Scans README.md, docs/*.md, and the other top-level *.md files for inline
 markdown links/images `[text](target)` and verifies every **relative**
@@ -6,7 +6,17 @@ target resolves to an existing file or directory (anchors are stripped;
 http(s)/mailto targets are skipped — no network in CI). Also checks that
 intra-repo targets don't escape the repo root.
 
-    python tools/check_docs_links.py          # exit 1 + report on dead links
+Additionally, for files under docs/ only, every inline backtick code span
+that *looks like a repo file path* — contains at least one "/" and ends in
+a known source extension, e.g. `src/repro/core/lists.py` or
+`kernels/ops.py` — must resolve against the repo root, src/, or
+src/repro/ (brace groups like `serving/{batcher,loop}.py` are expanded;
+a trailing `::symbol` test-reference suffix is stripped). This keeps prose
+like "the scan driver (core/ivf.py)" from silently rotting when modules
+move. Bare names without a slash are never checked — too many false
+positives.
+
+    python tools/check_docs_links.py          # exit 1 + report on dead refs
 """
 from __future__ import annotations
 
@@ -18,7 +28,16 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 # inline links/images; [1] skips fenced code via the scrub below
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 FENCE_RE = re.compile(r"```.*?```", re.S)
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+# a code span is treated as a path reference iff it has >= 1 "/" and one of
+# these extensions; anything else (dotted API paths, shell fragments) is prose
+CODE_REF_EXTS = (".py", ".md", ".json", ".yml", ".yaml", ".toml", ".txt",
+                 ".csv", ".sh")
+# roots a doc code reference may be relative to, tried in order
+CODE_REF_ROOTS = (ROOT, ROOT / "src", ROOT / "src" / "repro")
+BRACE_RE = re.compile(r"\{([^{}]*)\}")
 
 
 def md_files() -> list[pathlib.Path]:
@@ -26,8 +45,42 @@ def md_files() -> list[pathlib.Path]:
     return [f for f in files if f.is_file()]
 
 
+def expand_braces(token: str) -> list[str]:
+    """`serving/{batcher,loop}.py` -> [serving/batcher.py, serving/loop.py]."""
+    m = BRACE_RE.search(token)
+    if not m:
+        return [token]
+    head, tail = token[:m.start()], token[m.end():]
+    out = []
+    for alt in m.group(1).split(","):
+        out.extend(expand_braces(head + alt.strip() + tail))
+    return out
+
+
+def code_ref_paths(span: str) -> list[str]:
+    """Path tokens a backtick code span refers to ([] = not a path ref)."""
+    token = span.strip().split("::", 1)[0]  # drop `path.py::test_name`
+    if "/" not in token or not token.endswith(CODE_REF_EXTS):
+        return []
+    # reject spans that are clearly commands/prose, not a lone path
+    if any(c in token for c in " <>|*?$"):
+        return []
+    return expand_braces(token)
+
+
+def resolve_code_ref(path: str) -> bool:
+    for root in CODE_REF_ROOTS:
+        cand = (root / path).resolve()
+        if cand != ROOT and ROOT not in cand.parents:
+            return False  # escapes the repo — never OK
+        if cand.exists():
+            return True
+    return False
+
+
 def check_file(md: pathlib.Path) -> list[str]:
     text = FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    rel = md.relative_to(ROOT)
     errors = []
     for m in LINK_RE.finditer(text):
         target = m.group(1)
@@ -37,11 +90,16 @@ def check_file(md: pathlib.Path) -> list[str]:
         if not path:  # pure-anchor link
             continue
         resolved = (md.parent / path).resolve()
-        rel = md.relative_to(ROOT)
         if resolved != ROOT and ROOT not in resolved.parents:
             errors.append(f"{rel}: link escapes repo root: {target}")
         elif not resolved.exists():
             errors.append(f"{rel}: dead link: {target}")
+    # code references: docs/ only (top-level files quote external paths)
+    if (ROOT / "docs") in md.parents:
+        for m in CODE_SPAN_RE.finditer(text):
+            for path in code_ref_paths(m.group(1)):
+                if not resolve_code_ref(path):
+                    errors.append(f"{rel}: dead code reference: `{m.group(1)}`")
     return errors
 
 
@@ -51,7 +109,7 @@ def main() -> int:
     for e in errors:
         print(f"ERROR {e}", file=sys.stderr)
     print(f"checked {len(files)} markdown files: "
-          f"{'FAILED' if errors else 'ok'} ({len(errors)} dead links)")
+          f"{'FAILED' if errors else 'ok'} ({len(errors)} dead refs)")
     return 1 if errors else 0
 
 
