@@ -1,0 +1,143 @@
+"""Mutation-path benchmark: upsert throughput + tombstone search overhead.
+
+The live mutable index (docs/mutability.md) promises two things worth
+tracking as numbers: writes are cheap (PQ-encode + scatter into spare
+slots, no rebuild), and reads degrade gracefully under tombstone load (the
+live-row bitmap rides the same masked pre-selection as the user filter, so
+a tombstoned row costs a masked lane, never a rebuild or a post-filter
+pass). This job records:
+
+  - ``upsert_rows_per_s``: steady-state rows/second through
+    ``SearchEngine.upsert`` at a fixed batch size, spare capacity
+    pre-grown so the number isolates the append path (no compaction, no
+    cap growth mid-measurement);
+  - ``search_us`` at 0% / 10% / 50% tombstone load, same engine, same
+    queries — the deltas are the read-side cost of deferring compaction.
+
+Records append into BENCH_kernels.json next to the kernel sweeps (they
+carry no ``bytes_accessed``, so the traffic regression check skips them);
+the CSV lines ride the normal ``common.emit`` stream.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.lists import live_counts
+from repro.engine import EngineConfig, SearchEngine
+
+KERNELS_JSON = os.environ.get("REPRO_BENCH_KERNELS", "BENCH_kernels.json")
+
+N_BASE = 4_000 if common.SMOKE else 20_000
+N_TRAIN = 2_000 if common.SMOKE else 8_000
+NLIST = 32 if common.SMOKE else 64
+UPSERT_BATCH = 256
+UPSERT_BATCHES = 4 if common.SMOKE else 8
+
+
+def _build_engine(d: int = 32, m: int = 8) -> tuple[SearchEngine, np.ndarray]:
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(N_BASE, d)).astype(np.float32)
+    train = rng.normal(size=(N_TRAIN, d)).astype(np.float32)
+    eng = SearchEngine.build(
+        jax.random.PRNGKey(0), jnp.asarray(train), jnp.asarray(base),
+        m=m, nlist=NLIST, coarse_iters=4, pq_iters=4,
+        config=EngineConfig(nprobe=8, rerank_mult=4))
+    q = rng.normal(size=(32, d)).astype(np.float32)
+    return eng, q
+
+
+def upsert_throughput(eng: SearchEngine) -> tuple[float, dict]:
+    """Rows/second through the append path at UPSERT_BATCH granularity."""
+    d = int(eng.index.centroids.shape[1])
+    rng = np.random.default_rng(1)
+    # pre-grow spare capacity once so the timed loop never compacts or
+    # reallocates — that's the steady-state serving write path
+    total = UPSERT_BATCH * (UPSERT_BATCHES + 1)
+    warm_ids = np.arange(N_BASE, N_BASE + UPSERT_BATCH)
+    eng.upsert(warm_ids, rng.normal(size=(UPSERT_BATCH, d)).astype(np.float32))
+    t0 = time.perf_counter()
+    for b in range(UPSERT_BATCHES):
+        ids = np.arange(N_BASE + (b + 1) * UPSERT_BATCH,
+                        N_BASE + (b + 2) * UPSERT_BATCH)
+        eng.upsert(ids, rng.normal(size=(UPSERT_BATCH, d)).astype(np.float32))
+    dt = time.perf_counter() - t0
+    rows_per_s = UPSERT_BATCH * UPSERT_BATCHES / dt
+    rec = {"kernel": "mutation", "metric": "upsert_rows_per_s",
+           "batch": UPSERT_BATCH, "batches": UPSERT_BATCHES,
+           "rows_per_s": rows_per_s, "backend": jax.default_backend()}
+    common.emit("mutation_upsert_batch", dt / UPSERT_BATCHES,
+                f"{rows_per_s:.0f} rows/s through upsert "
+                f"(batch={UPSERT_BATCH}, total={total} rows)")
+    return rows_per_s, rec
+
+
+def tombstone_latency(eng: SearchEngine, q: np.ndarray) -> list[dict]:
+    """search_jit latency at 0%/10%/50% tombstone load on one engine."""
+    qj = jnp.asarray(q)
+    n_live0 = int(np.asarray(live_counts(eng.index.lists)).sum())
+    gids = np.asarray(eng.index.lists.ids)
+    gids = np.sort(gids[gids >= 0])
+    records = []
+    t_base = None
+    deleted = 0
+    for load in (0.0, 0.10, 0.50):
+        want_dead = int(round(n_live0 * load))
+        if want_dead > deleted:
+            # spread deletions uniformly over the id space so every probed
+            # list carries its share of tombstones
+            sel = gids[np.linspace(0, gids.size - 1, want_dead,
+                                   dtype=np.int64)]
+            already = deleted
+            eng.delete(sel)
+            deleted = n_live0 - int(np.asarray(
+                live_counts(eng.index.lists)).sum())
+            assert deleted >= already
+        t = common.time_call(lambda: eng.search_jit(qj, 10))
+        if t_base is None:
+            t_base = t
+        delta = (t / t_base - 1.0) * 100.0
+        records.append({
+            "kernel": "mutation", "metric": "search_us",
+            "tombstone_load": load, "Q": int(q.shape[0]),
+            "us_per_call": t * 1e6, "delta_vs_clean_pct": delta,
+            "backend": jax.default_backend()})
+        common.emit(f"mutation_search_tomb{int(load * 100)}", t,
+                    f"search_jit at {int(load * 100)}% tombstones "
+                    f"({delta:+.1f}% vs clean)")
+    return records
+
+
+def _merge_records(new: list[dict]) -> None:
+    """Append into BENCH_kernels.json without clobbering the kernel sweeps
+    (kernel_bench.main overwrites the file; this job runs after it)."""
+    try:
+        with open(KERNELS_JSON) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        data = {"schema": "repro.kernel_bench/v1", "records": []}
+    kept = [r for r in data.get("records", [])
+            if r.get("kernel") != "mutation"]
+    data["records"] = kept + new
+    with open(KERNELS_JSON, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+
+
+def main() -> None:
+    eng, q = _build_engine()
+    _, up_rec = upsert_throughput(eng)
+    lat_recs = tombstone_latency(eng, q)
+    _merge_records([up_rec] + lat_recs)
+    print(f"# mutation_bench: appended {1 + len(lat_recs)} records to "
+          f"{KERNELS_JSON}")
+
+
+if __name__ == "__main__":
+    main()

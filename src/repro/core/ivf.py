@@ -110,6 +110,52 @@ def build_ivf(key: jax.Array, train_x: jax.Array, base_x: jax.Array, *,
     )
 
 
+# fixed encode batch shape for the mutation path (docs/mutability.md): a
+# row's assignment + code bytes must be bitwise independent of who shares
+# its upsert batch, so every encode runs at this exact padded shape
+_ENCODE_CHUNK = 256
+
+
+@jax.jit
+def _encode_chunk(centroids: jax.Array, cb: PQCodebook, chunk: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    d = pairwise_sqdist(chunk, centroids)
+    assign = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    codes = pq_mod.encode(cb, chunk - centroids[assign])
+    return assign, fs.pack_codes(codes)
+
+
+def encode_rows(centroids: jax.Array, cb: PQCodebook, vecs: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic list assignment + residual PQ encode of raw rows.
+
+    vecs: (B, D) f32. Returns (assign (B,) i32, packed (B, M//2) u8) — the
+    nearest coarse centroid per row and the nibble-packed 4-bit PQ codes of
+    the residual, exactly what ``build_ivf`` computes for the initial build.
+
+    Every call runs the same jitted program at a FIXED zero-padded batch
+    shape (``_ENCODE_CHUNK``), so a given row encodes to bitwise-identical
+    bytes no matter how it is batched. That is the property the mutation
+    oracle rests on (docs/mutability.md): an upserted row's codes equal the
+    codes a from-scratch rebuild assigns it, so a mutated engine and a
+    rebuilt one score it identically.
+    """
+    vecs = np.asarray(vecs, np.float32)
+    b, d = vecs.shape
+    assign = np.empty((b,), np.int32)
+    packed = np.empty((b, cb.m // 2), np.uint8)
+    for s in range(0, b, _ENCODE_CHUNK):
+        chunk = vecs[s:s + _ENCODE_CHUNK]
+        c = chunk.shape[0]
+        if c < _ENCODE_CHUNK:
+            chunk = np.concatenate(
+                [chunk, np.zeros((_ENCODE_CHUNK - c, d), np.float32)])
+        a, p = _encode_chunk(centroids, cb, jnp.asarray(chunk))
+        assign[s:s + c] = np.asarray(a)[:c]
+        packed[s:s + c] = np.asarray(p)[:c]
+    return assign, packed
+
+
 def _probe_tables(index: IVFIndex, q: jax.Array, probe_ids: jax.Array
                   ) -> fs.QuantizedLUT:
     """Residual ADC LUTs for each (query, probe): (Q, P, M, 16) u8."""

@@ -214,6 +214,191 @@ def build_lists(assign: np.ndarray, packed_codes: np.ndarray, *, nlist: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# live mutation primitives (docs/mutability.md)
+#
+# A ListStore mutates under three invariants:
+#   watermark   ``sizes[l]`` counts slots EVER written this epoch (appends go
+#               at the watermark; it only moves on append or compaction)
+#   tombstone   a deleted row keeps its slot: ``ids[l, s] = -1`` (and attrs
+#               -1) while its stale code bytes stay in place — exactly the
+#               padding convention every scan path already masks
+#   live bits   ``live_filter_bits`` = the packed bitmap of rows with
+#               ``id >= 0``; engines AND it into the per-request filter so
+#               the stream kernels' candidate budget is spent on live rows
+#               only (a tombstone inside the watermark would otherwise pass
+#               the occupancy mask with its stale distance)
+#
+# All three are derivable from (ids, sizes) alone, so mutation helpers return
+# plain new ListStores — no parallel bookkeeping structure to desync.
+# ---------------------------------------------------------------------------
+
+def locate_rows(store: ListStore) -> dict[int, tuple[int, int]]:
+    """Host-side id -> (list, slot) map of every live row.
+
+    The mutable engine's locator: built once (one device->host sync), then
+    maintained incrementally by upsert/delete/compact.
+    """
+    ids = np.asarray(store.ids)
+    ls, ss = np.nonzero(ids >= 0)
+    return {int(ids[l, s]): (int(l), int(s)) for l, s in zip(ls, ss)}
+
+
+def live_counts(store: ListStore) -> jax.Array:
+    """(nlist,) i32 rows per list that are live (id >= 0, inside watermark)."""
+    return jnp.sum((store.ids >= 0).astype(jnp.int32), axis=1)
+
+
+def tombstone_counts(store: ListStore) -> jax.Array:
+    """(nlist,) i32 tombstoned slots per list: watermark minus live rows."""
+    return store.sizes - live_counts(store)
+
+
+def live_filter_bits(store: ListStore) -> jax.Array:
+    """Packed (nlist, W) u8 bitmap of live rows (``pack_filter_mask`` layout).
+
+    Bit 1 exactly where ``ids >= 0`` — padding beyond the watermark and
+    tombstones inside it are both 0, so ANDing this into any per-request
+    filter makes the stream kernels treat tombstones like padding *before*
+    candidate selection (the exactness condition for the mutation oracle:
+    a deleted row must never occupy a per-tile candidate slot).
+    """
+    return pack_filter_mask(store.ids >= 0)
+
+
+def grow_cap(store: ListStore, new_cap: int) -> ListStore:
+    """Pad every list with spare slots: cap -> ``new_cap`` (ids -1, codes 0,
+    attrs -1). Watermarks are untouched; gathers/scans behave identically
+    (the new slots are past every watermark). Shape change — compiled
+    pipelines re-key, and scan autotune verdicts for the old cap are stale
+    (``kernels.ops.clear_autotune_cache(cap=...)``)."""
+    cap = store.cap
+    if new_cap < cap:
+        raise ValueError(f"grow_cap: new_cap {new_cap} < current cap {cap}")
+    if new_cap == cap:
+        return store
+    pad = new_cap - cap
+    nlist = store.nlist
+    return ListStore(
+        codes=jnp.concatenate(
+            [store.codes,
+             jnp.zeros((nlist, pad, store.codes.shape[-1]), store.codes.dtype)],
+            axis=1),
+        ids=jnp.concatenate(
+            [store.ids, jnp.full((nlist, pad), -1, store.ids.dtype)], axis=1),
+        sizes=store.sizes,
+        attrs=None if store.attrs is None else jnp.concatenate(
+            [store.attrs, jnp.full((nlist, pad), -1, store.attrs.dtype)],
+            axis=1),
+    )
+
+
+def tombstone_rows(store: ListStore, list_ids: np.ndarray,
+                   slots: np.ndarray) -> ListStore:
+    """Delete rows in place: ids/attrs at each (list, slot) become -1.
+
+    Codes stay (masked by the id like padding); watermarks stay (the slot is
+    not reusable until compaction). A pure functional update — callers swap
+    the returned store atomically.
+    """
+    l = jnp.asarray(list_ids, jnp.int32)
+    s = jnp.asarray(slots, jnp.int32)
+    return store._replace(
+        ids=store.ids.at[l, s].set(-1),
+        attrs=None if store.attrs is None else store.attrs.at[l, s].set(-1),
+    )
+
+
+def append_rows(store: ListStore, list_ids: np.ndarray, packed: np.ndarray,
+                gids: np.ndarray, attrs: np.ndarray | None = None
+                ) -> tuple[ListStore, np.ndarray]:
+    """Append rows into spare slots at each target list's watermark.
+
+    list_ids (B,) target list per row; packed (B, M//2) u8 PQ codes;
+    gids (B,) i32 global ids; attrs optional (B,) i32 (required -1-free when
+    the store carries an attrs column — pass -1 explicitly to mean "no
+    attribute" at your own risk: -1 is the padding sentinel).
+
+    Returns (new store, slots (B,) the rows landed in). Raises when any
+    target list lacks spare capacity (callers compact/grow first — this
+    helper never drops rows the way ``build_lists`` overflow does).
+    Slot assignment is deterministic: batch order within each list.
+    """
+    list_ids = np.asarray(list_ids, np.int64)
+    packed = np.asarray(packed, np.uint8)
+    gids = np.asarray(gids, np.int32)
+    b = list_ids.shape[0]
+    sizes = np.asarray(store.sizes, np.int64)
+    # slot = watermark + rank of the row among batch rows targeting its list
+    order = np.argsort(list_ids, kind="stable")
+    rank = np.empty(b, np.int64)
+    sorted_lists = list_ids[order]
+    rank[order] = np.arange(b) - np.searchsorted(sorted_lists, sorted_lists,
+                                                 side="left")
+    slots = sizes[list_ids] + rank
+    if b and slots.max() >= store.cap:
+        full = int(list_ids[slots.argmax()])
+        raise ValueError(
+            f"append_rows: list {full} is out of spare capacity "
+            f"(cap={store.cap}); compact or grow_cap first")
+    l = jnp.asarray(list_ids, jnp.int32)
+    s = jnp.asarray(slots, jnp.int32)
+    counts = np.bincount(list_ids, minlength=store.nlist).astype(np.int32)
+    new_attrs = store.attrs
+    if new_attrs is not None:
+        avals = (np.full(b, -1, np.int32) if attrs is None
+                 else np.asarray(attrs, np.int32))
+        new_attrs = new_attrs.at[l, s].set(jnp.asarray(avals))
+    elif attrs is not None:
+        raise ValueError("append_rows: attrs given but the store holds no "
+                         "attrs column (build with attrs=...)")
+    return store._replace(
+        codes=store.codes.at[l, s].set(jnp.asarray(packed)),
+        ids=store.ids.at[l, s].set(jnp.asarray(gids)),
+        sizes=store.sizes + jnp.asarray(counts),
+        attrs=new_attrs,
+    ), slots.astype(np.int32)
+
+
+def compact_lists(store: ListStore, cap: int | None = None) -> ListStore:
+    """Rebuild every list without tombstones: the fresh-epoch store.
+
+    Survivors keep their relative slot order (stable shift-down), watermarks
+    become live counts, and ``cap`` may change (grow for headroom, shrink to
+    fit — must cover the largest live list). Host-side numpy like
+    ``build_lists`` — compaction is the offline half of mutation; the swap
+    into a serving engine is what must be atomic, not the rebuild.
+    """
+    ids = np.asarray(store.ids)
+    codes = np.asarray(store.codes)
+    attrs = None if store.attrs is None else np.asarray(store.attrs)
+    nlist, old_cap = ids.shape
+    live = ids >= 0
+    counts = live.sum(axis=1)
+    new_cap = int(cap if cap is not None else old_cap)
+    if new_cap < int(counts.max(initial=0)):
+        raise ValueError(
+            f"compact_lists: cap {new_cap} below the largest live list "
+            f"({int(counts.max(initial=0))} rows)")
+    new_codes = np.zeros((nlist, new_cap, codes.shape[-1]), codes.dtype)
+    new_ids = np.full((nlist, new_cap), -1, ids.dtype)
+    new_attrs = None if attrs is None else np.full((nlist, new_cap), -1,
+                                                   attrs.dtype)
+    for li in range(nlist):
+        m = live[li]
+        c = int(counts[li])
+        new_codes[li, :c] = codes[li, m]
+        new_ids[li, :c] = ids[li, m]
+        if new_attrs is not None:
+            new_attrs[li, :c] = attrs[li, m]
+    return ListStore(
+        codes=jnp.asarray(new_codes),
+        ids=jnp.asarray(new_ids),
+        sizes=jnp.asarray(counts.astype(np.int32)),
+        attrs=None if new_attrs is None else jnp.asarray(new_attrs),
+    )
+
+
 def round_robin_perm(nlist: int, num_shards: int) -> np.ndarray:
     """The list permutation ``partition_lists`` applies: shard j owns lists
     j, j+S, j+2S, ... of the (padded to S*L) id space. Exposed so per-request

@@ -45,18 +45,23 @@ recompiles the fused pipeline.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import coarse as coarse_mod
 from repro.core import ivf as ivf_mod
+from repro.core import lists as lists_mod
 from repro.core import topk as topk_mod
 from repro.core.kmeans import pairwise_sqdist
-from repro.core.lists import base_norms, filter_pass_sizes, unpack_filter_mask
+from repro.core.lists import (base_norms, filter_pass_sizes, filter_words,
+                              unpack_filter_mask)
 from repro.engine import rerank as rerank_mod
 # single source of truth for both registries (kernels.ops)
+from repro.kernels import ops as ops_mod
 from repro.kernels.ops import RERANK_IMPLS, SCAN_IMPLS
 
 COARSE_KINDS = ("flat", "hnsw", "tree")
@@ -85,10 +90,14 @@ class QueryStats(NamedTuple):
     lists_probed: jax.Array   # (Q,) i32  valid probes issued
     codes_scanned: jax.Array  # (Q,) i32  true occupancy of scanned lists
     reranked: jax.Array       # (Q,) i32  candidates refined exactly
-    rows_filtered: jax.Array  # (Q,) i32  probed rows the filter excluded
-    #                           (0 when no filter was supplied; namespace-
-    #                           excluded LISTS never appear in any counter —
-    #                           their probes are -1, so nothing was scanned)
+    rows_filtered: jax.Array  # (Q,) i32  probed LIVE rows the user filter
+    #                           excluded (0 when no filter was supplied;
+    #                           namespace-excluded LISTS never appear in any
+    #                           counter — their probes are -1, so nothing was
+    #                           scanned)
+    rows_tombstoned: jax.Array  # (Q,) i32  probed slots inside the watermark
+    #                           holding deleted rows (docs/mutability.md);
+    #                           always 0 on an unmutated engine
 
 
 class SearchResult(NamedTuple):
@@ -221,58 +230,110 @@ def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
     return dists.reshape(qq, -1), ids.reshape(qq, -1)
 
 
-def count_rows_filtered(index: ivf_mod.IVFIndex, probes: jax.Array,
-                        filter_bits: jax.Array | None) -> jax.Array:
-    """(Q,) i32: occupied rows in the probed lists that the filter excluded.
+def combine_filter_bits(filter_bits: jax.Array | None,
+                        live_bits: jax.Array | None) -> jax.Array | None:
+    """AND the user predicate bitmap with the engine's live-row bitmap.
 
-    Zero without a filter. Namespace-excluded lists contribute nothing:
+    The effective filter the scan stage applies: a row is scannable iff it
+    passes the user predicate AND is not tombstoned (docs/mutability.md).
+    Either side may be None (no predicate / no tombstones) and simply drops
+    out; both None returns None, keeping the unfiltered-unmutated trace
+    byte-identical to the pre-mutation engine.
+    """
+    if live_bits is None:
+        return filter_bits
+    if filter_bits is None:
+        return live_bits
+    return filter_bits & live_bits
+
+
+def _probe_sum(probes: jax.Array, per_list: jax.Array) -> jax.Array:
+    """Sum a (nlist,) per-list counter over each query's valid probes."""
+    return jnp.sum(jnp.where(probes >= 0, per_list[jnp.maximum(probes, 0)], 0),
+                   axis=1)
+
+
+def count_rows_filtered(index: ivf_mod.IVFIndex, probes: jax.Array,
+                        filter_bits: jax.Array | None,
+                        live_bits: jax.Array | None = None) -> jax.Array:
+    """(Q,) i32: probed LIVE rows the user filter excluded.
+
+    Zero without a filter. Tombstoned slots are counted by
+    ``count_rows_tombstoned``, never here — the two partition the probed
+    non-passing occupancy. Namespace-excluded lists contribute nothing:
     their probes are already -1, so they were never scanned at all.
     """
     qq = probes.shape[0]
     if filter_bits is None:
         return jnp.zeros((qq,), jnp.int32)
-    dropped = index.lists.sizes - filter_pass_sizes(index.lists, filter_bits)
-    return jnp.sum(jnp.where(probes >= 0, dropped[jnp.maximum(probes, 0)], 0),
-                   axis=1)
+    live = (index.lists.sizes if live_bits is None
+            else filter_pass_sizes(index.lists, live_bits))
+    eff = combine_filter_bits(filter_bits, live_bits)
+    return _probe_sum(probes, live - filter_pass_sizes(index.lists, eff))
+
+
+def count_rows_tombstoned(index: ivf_mod.IVFIndex, probes: jax.Array,
+                          live_bits: jax.Array | None) -> jax.Array:
+    """(Q,) i32: probed watermark slots holding tombstones. Zero when the
+    engine carries none (``live_bits`` is None)."""
+    qq = probes.shape[0]
+    if live_bits is None:
+        return jnp.zeros((qq,), jnp.int32)
+    tomb = index.lists.sizes - filter_pass_sizes(index.lists, live_bits)
+    return _probe_sum(probes, tomb)
 
 
 def make_stats(index: ivf_mod.IVFIndex, probes: jax.Array,
                reranked: jax.Array,
-               filter_bits: jax.Array | None = None) -> QueryStats:
+               filter_bits: jax.Array | None = None,
+               live_bits: jax.Array | None = None) -> QueryStats:
     """Work counters from the probe set + the re-rank stage's counter."""
     return QueryStats(
         lists_probed=jnp.sum((probes >= 0).astype(jnp.int32), axis=1),
         codes_scanned=jnp.sum(index.lists.probed_sizes(probes), axis=1),
         reranked=reranked,
-        rows_filtered=count_rows_filtered(index, probes, filter_bits),
+        rows_filtered=count_rows_filtered(index, probes, filter_bits,
+                                          live_bits),
+        rows_tombstoned=count_rows_tombstoned(index, probes, live_bits),
     )
 
 
 def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
               norms: jax.Array | None, ns_member: jax.Array | None,
               q: jax.Array, filter_bits: jax.Array | None,
-              namespaces: jax.Array | None, *, k: int, nprobe: int,
+              namespaces: jax.Array | None,
+              live_bits: jax.Array | None = None, *, k: int, nprobe: int,
               r: int, scan_impl: str, rerank_impl: str, ef: int
               ) -> SearchResult:
     """The whole engine as one pure function (stages 1-4 + stats).
 
-    ``filter_bits``/``namespaces`` are *traced* arguments (None simply drops
-    out of the trace): changing the predicate or tenant mix between requests
-    never recompiles — only presence/absence does, giving at most four
-    compile-cache entries per shape bucket instead of one per predicate.
+    ``filter_bits``/``namespaces``/``live_bits`` are *traced* arguments
+    (None simply drops out of the trace): changing the predicate, tenant
+    mix, or tombstone set between requests never recompiles — only
+    presence/absence does, giving a handful of compile-cache entries per
+    shape bucket instead of one per predicate.
+
+    ``live_bits`` is the engine-held live-row bitmap
+    (``core.lists.live_filter_bits``), present only while the store carries
+    tombstones. It is ANDed into the scan's effective filter so the stream
+    kernel's per-tile candidate budget skips deleted rows *before*
+    selection — the condition for mutated results to stay bit-identical to
+    a rebuilt engine's (docs/mutability.md). Gathered impls mask tombstones
+    by id anyway; for them the AND only changes the stats, not the math.
     """
     probes = coarse_probes(coarse, q, nprobe=nprobe, ef=ef,
                            ns_member=ns_member, namespaces=namespaces)
     # the selection budget stage 3+4 will take — under 'stream' this lets
     # the scan kernel reduce candidates in VMEM instead of writing the full
     # (Q, nprobe*cap) pool to HBM
-    flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
-                                       keep=(r * k) if r else k,
-                                       filter_bits=filter_bits)
+    flat_d, flat_ids = scan_candidates(
+        index, q, probes, scan_impl=scan_impl, keep=(r * k) if r else k,
+        filter_bits=combine_filter_bits(filter_bits, live_bits))
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
         flat_d, flat_ids, base, q, k, r, norms=norms, rerank_impl=rerank_impl)
     return SearchResult(dists=vals, ids=out_ids,
-                        stats=make_stats(index, probes, reranked, filter_bits))
+                        stats=make_stats(index, probes, reranked, filter_bits,
+                                         live_bits))
 
 
 # ONE process-wide jit: cache is keyed on static knobs + pytree structure +
@@ -292,6 +353,27 @@ def fused_cache_size() -> int:
     return _fused_pipeline._cache_size()
 
 
+class EngineState(NamedTuple):
+    """One immutable snapshot of everything a search reads.
+
+    The mutable engine's atomicity primitive (docs/mutability.md): mutation
+    never edits what a reader sees — ``upsert``/``delete``/``compact`` build
+    a complete replacement snapshot and install it with a single attribute
+    store on ``SearchEngine._state`` (atomic under the GIL). A search grabs
+    the snapshot exactly once, so an in-flight batch keeps computing on a
+    consistent retiring epoch while every later search sees the new one —
+    there is no window where a query can mix lists from one epoch with base
+    rows or live bits from another.
+    """
+
+    index: ivf_mod.IVFIndex
+    base: jax.Array | None
+    base_norms: jax.Array | None
+    live_bits: jax.Array | None  # packed live-row bitmap; None = no tombstones
+    epoch: int                   # bumped on every swap (monotonic, starts 0)
+    n_tombstones: int            # tombstoned slots currently held across lists
+
+
 class SearchEngine:
     """IVF + fast-scan + exact re-rank behind one ``search(queries, k)``.
 
@@ -301,6 +383,16 @@ class SearchEngine:
 
     Config/coarse combinations are validated at construction
     (``validate_config``): a nonsense knob raises here, not on first search.
+
+    The engine is *live-mutable* (docs/mutability.md): ``upsert`` PQ-encodes
+    new rows and appends them into spare list slots, ``delete`` tombstones
+    rows in place (a mask write — the kernels already treat id -1 as
+    padding), and ``compact`` rebuilds the lists tombstone-free into a
+    fresh epoch. Everything a search reads lives in one ``EngineState``
+    snapshot swapped atomically per mutation, so readers never see a torn
+    epoch; ``engine.epoch`` counts the swaps. ``index``/``base``/
+    ``base_norms``/``live_bits`` are read-only views of the current
+    snapshot.
     """
 
     def __init__(self, index: ivf_mod.IVFIndex, *, base: jax.Array | None = None,
@@ -308,11 +400,20 @@ class SearchEngine:
                  config: EngineConfig | None = None, hnsw_m: int = 16,
                  ef_construction: int = 64,
                  namespaces: jax.Array | None = None):
-        self.index = index
-        self.base = base
         # ‖x‖² per base row, computed once: the norms+GEMM re-rank (both
-        # impls) reads these instead of re-deriving norms per query
-        self.base_norms = None if base is None else base_norms(base)
+        # impls) reads these instead of re-deriving norms per query.
+        # A store built with tombstones already present (unusual, but
+        # partition/compact round-trips allow it) derives its live bitmap
+        # here so the first search is already exact.
+        n_tomb = int(jnp.sum(lists_mod.tombstone_counts(index.lists)))
+        self._state = EngineState(
+            index=index, base=base,
+            base_norms=None if base is None else base_norms(base),
+            live_bits=(lists_mod.live_filter_bits(index.lists)
+                       if n_tomb else None),
+            epoch=0, n_tombstones=n_tomb)
+        self._mutate_lock = threading.RLock()
+        self._locator: dict[int, tuple[int, int]] | None = None  # lazy
         # (n_ns, nlist) bool membership: row t = the lists holding tenant
         # t's vectors. None = engine is namespace-free (docs/filtering.md).
         if namespaces is not None:
@@ -341,7 +442,215 @@ class SearchEngine:
             kind = _coarse_kind_of(coarse)
         self.coarse_kind = kind
         validate_config(self.config, coarse_kind=kind,
-                        has_base=self.base is not None)
+                        has_base=base is not None)
+
+    # -- state snapshot views (docs/mutability.md) --------------------------
+    # All reads go through the current EngineState so a mutation can never
+    # tear what a caller composes by hand; mutators replace the whole tuple.
+
+    @property
+    def index(self) -> ivf_mod.IVFIndex:
+        return self._state.index
+
+    @property
+    def base(self) -> jax.Array | None:
+        return self._state.base
+
+    @property
+    def base_norms(self) -> jax.Array | None:
+        return self._state.base_norms
+
+    @property
+    def live_bits(self) -> jax.Array | None:
+        """Packed live-row bitmap; None while the store holds no tombstones."""
+        return self._state.live_bits
+
+    @property
+    def epoch(self) -> int:
+        """Monotonic state-swap counter: bumps on every upsert/delete/compact.
+
+        After a mutation call returns with ``epoch == e``, every search
+        *started* afterwards reflects at least epoch ``e`` (searches in
+        flight during the swap finish on the epoch they snapshotted)."""
+        return self._state.epoch
+
+    @property
+    def n_tombstones(self) -> int:
+        """Tombstoned slots currently held (0 right after ``compact``)."""
+        return self._state.n_tombstones
+
+    def locate(self, gid: int) -> tuple[int, int] | None:
+        """(list, slot) of a live row by global id, None if absent/deleted."""
+        with self._mutate_lock:
+            return self._locate(self._state).get(int(gid))
+
+    def _locate(self, st: EngineState) -> dict[int, tuple[int, int]]:
+        # callers hold _mutate_lock; the locator tracks st.index.lists
+        if self._locator is None:
+            self._locator = lists_mod.locate_rows(st.index.lists)
+        return self._locator
+
+    # -- live mutation (docs/mutability.md) ---------------------------------
+
+    def upsert(self, ids, vecs, *, attrs=None) -> np.ndarray:
+        """Insert or replace rows: PQ-encode, route, append into spare slots.
+
+        ids: (B,) int global ids (>= 0, unique within the batch); vecs:
+        (B, D) f32; attrs: optional (B,) i32 filter attributes (requires the
+        store to carry an attrs column). Returns the (B,) i32 list each row
+        was routed to (its nearest coarse centroid).
+
+        A re-upserted existing id is tombstoned first, then appended like a
+        new row — one atomic swap covers both, so no reader ever sees the
+        id twice or not at all. Encoding is bitwise batch-independent
+        (``core.ivf.encode_rows``), which is what keeps a mutated engine's
+        codes identical to a from-scratch rebuild's. When a target list
+        lacks spare capacity the store is compacted in place (reclaiming
+        tombstones) and, if still short, grown to a larger cap — both under
+        the same swap; autotune verdicts keyed to the retired cap are
+        dropped. ``base``/``base_norms`` grow and update incrementally
+        (zero-padded to 256-row multiples); the engine's namespace table is
+        deliberately NOT touched — membership is a list-level property the
+        caller owns.
+        """
+        ids = np.asarray(ids, np.int64)
+        vecs = np.asarray(vecs, np.float32)
+        if ids.ndim != 1 or vecs.ndim != 2 or ids.shape[0] != vecs.shape[0]:
+            raise ValueError(
+                f"upsert wants ids (B,) + vecs (B, D), got {ids.shape} and "
+                f"{vecs.shape}")
+        if ids.size == 0:
+            return np.empty((0,), np.int32)
+        if (ids < 0).any():
+            raise ValueError("upsert ids must be >= 0 (-1 is the padding "
+                             "sentinel)")
+        if np.unique(ids).size != ids.size:
+            raise ValueError("duplicate ids within one upsert batch — the "
+                             "per-batch slot order would be ambiguous; "
+                             "dedupe to the latest value first")
+        avals = None if attrs is None else np.asarray(attrs, np.int32)
+        with self._mutate_lock:
+            st = self._state
+            if vecs.shape[1] != st.index.centroids.shape[1]:
+                raise ValueError(
+                    f"upsert vecs have D={vecs.shape[1]}, engine expects "
+                    f"D={st.index.centroids.shape[1]}")
+            assign, packed = ivf_mod.encode_rows(
+                st.index.centroids, st.index.codebook, vecs)
+            loc = dict(self._locate(st))
+            store = st.index.lists
+            n_tomb = st.n_tombstones
+            hit = [int(g) for g in ids if int(g) in loc]
+            if hit:
+                store = lists_mod.tombstone_rows(
+                    store, np.array([loc[g][0] for g in hit], np.int32),
+                    np.array([loc[g][1] for g in hit], np.int32))
+                for g in hit:
+                    del loc[g]
+                n_tomb += len(hit)
+            incoming = np.bincount(assign, minlength=store.nlist)
+            if (np.asarray(store.sizes) + incoming > store.cap).any():
+                # compact-then-grow: reclaiming tombstones may already free
+                # enough spare slots; only grow cap when live rows + the
+                # batch genuinely exceed it (padded to a multiple of 8 so
+                # the filter-bitmap width stays exact)
+                live = np.asarray(lists_mod.live_counts(store))
+                need = int((live + incoming).max())
+                old_cap = store.cap
+                new_cap = max(old_cap, -(-need // 8) * 8)
+                store = lists_mod.compact_lists(store, cap=new_cap)
+                n_tomb = 0
+                loc = lists_mod.locate_rows(store)
+                if new_cap != old_cap:
+                    ops_mod.clear_autotune_cache(nlist=store.nlist,
+                                                 cap=old_cap)
+            store, slots = lists_mod.append_rows(
+                store, assign, packed, ids.astype(np.int32), avals)
+            for g, l, s in zip(ids.tolist(), assign.tolist(), slots.tolist()):
+                loc[int(g)] = (int(l), int(s))
+            base, norms = st.base, st.base_norms
+            if base is not None:
+                need_rows = int(ids.max()) + 1
+                n0 = base.shape[0]
+                if need_rows > n0:
+                    grown = -(-need_rows // 256) * 256
+                    base = jnp.concatenate(
+                        [base, jnp.zeros((grown - n0, base.shape[1]),
+                                         base.dtype)])
+                    norms = jnp.concatenate(
+                        [norms, jnp.zeros((grown - n0,), norms.dtype)])
+                    ops_mod.clear_autotune_cache(kind="rerank", n=n0)
+                rows = jnp.asarray(vecs)
+                gidx = jnp.asarray(ids.astype(np.int32))
+                base = base.at[gidx].set(rows)
+                # same row-wise mul+sum expression as core.lists.base_norms
+                # => bitwise equal to a from-scratch norms pass
+                norms = norms.at[gidx].set(jnp.sum(rows * rows, axis=-1))
+            self._locator = loc
+            self._state = EngineState(
+                index=st.index._replace(lists=store), base=base,
+                base_norms=norms,
+                live_bits=(lists_mod.live_filter_bits(store)
+                           if n_tomb else None),
+                epoch=st.epoch + 1, n_tombstones=n_tomb)
+        return assign
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by global id; unknown/already-deleted ids are
+        ignored. Returns the number of rows actually deleted.
+
+        A delete is a mask write (ids/attrs at the slot become -1 — the
+        padding convention every scan path masks); code bytes and the base
+        row stay in place until ``compact``, unreachable because no list
+        references them. After this returns, no later-started search can
+        return the deleted ids.
+        """
+        ids = np.unique(np.asarray(ids, np.int64))
+        with self._mutate_lock:
+            st = self._state
+            loc = dict(self._locate(st))
+            found = [int(g) for g in ids if int(g) in loc]
+            if not found:
+                return 0
+            store = lists_mod.tombstone_rows(
+                st.index.lists,
+                np.array([loc[g][0] for g in found], np.int32),
+                np.array([loc[g][1] for g in found], np.int32))
+            for g in found:
+                del loc[g]
+            self._locator = loc
+            self._state = EngineState(
+                index=st.index._replace(lists=store), base=st.base,
+                base_norms=st.base_norms,
+                live_bits=lists_mod.live_filter_bits(store),
+                epoch=st.epoch + 1,
+                n_tombstones=st.n_tombstones + len(found))
+            return len(found)
+
+    def compact(self, cap: int | None = None) -> int:
+        """Rebuild every list tombstone-free into a fresh epoch.
+
+        Survivors keep their relative slot order; ``cap`` may grow (spare
+        headroom for upserts) or shrink to fit. The rebuild happens off to
+        the side and swaps in atomically — in-flight searches finish on the
+        retiring epoch (this is what ``ServingLoop.compact`` runs under its
+        dispatch lock). Autotune verdicts keyed to a retired cap are
+        dropped so a stale (impl, tile) can't be served or re-persisted.
+        Returns the number of tombstoned slots reclaimed.
+        """
+        with self._mutate_lock:
+            st = self._state
+            old_cap = st.index.lists.cap
+            store = lists_mod.compact_lists(st.index.lists, cap=cap)
+            if store.cap != old_cap:
+                ops_mod.clear_autotune_cache(nlist=store.nlist, cap=old_cap)
+            reclaimed = st.n_tombstones
+            self._locator = lists_mod.locate_rows(store)
+            self._state = EngineState(
+                index=st.index._replace(lists=store), base=st.base,
+                base_norms=st.base_norms, live_bits=None,
+                epoch=st.epoch + 1, n_tombstones=0)
+            return reclaimed
 
     # -- construction -------------------------------------------------------
 
@@ -373,23 +682,28 @@ class SearchEngine:
 
     # -- the unified entry points ------------------------------------------
 
-    def _resolve(self, queries, nprobe, rerank_mult, filter_bits, namespaces):
+    def _resolve(self, queries, nprobe, rerank_mult, filter_bits, namespaces,
+                 st: EngineState):
         q = queries[None] if queries.ndim == 1 else queries
         nprobe = self.config.nprobe if nprobe is None else nprobe
         r = self.config.rerank_mult if rerank_mult is None else rerank_mult
-        if r and self.base is None:
+        if r and st.base is None:
             raise ValueError("exact re-rank requested but engine holds no "
                              "base vectors (build with keep_base=True)")
         if filter_bits is not None:
+            nlist, cap = st.index.lists.nlist, st.index.lists.cap
             if (filter_bits.ndim != 2
-                    or filter_bits.shape[0] != self.index.lists.nlist
-                    or filter_bits.shape[1] * 8 < self.index.lists.cap):
+                    or filter_bits.shape[0] != nlist
+                    or filter_bits.shape[1] * 8 < cap):
                 raise ValueError(
-                    f"filter_bits must be (nlist={self.index.lists.nlist}, "
-                    f"W>=ceil(cap/8)={-(-self.index.lists.cap // 8)}) packed "
+                    f"filter_bits must be (nlist={nlist}, "
+                    f"W>=ceil(cap/8)={filter_words(cap)}) packed "
                     f"u8 (core.lists.pack_filter_mask), got shape "
-                    f"{filter_bits.shape}")
-            filter_bits = filter_bits.astype(jnp.uint8)
+                    f"{filter_bits.shape} — note a compaction/grow may have "
+                    "changed cap; re-derive filters from the live store")
+            # normalize to the exact W of this epoch's cap so the bitmap
+            # broadcasts against live_bits (extra words carry no slots)
+            filter_bits = filter_bits[:, :filter_words(cap)].astype(jnp.uint8)
         if namespaces is not None:
             if self.ns_member is None:
                 raise ValueError(
@@ -422,11 +736,12 @@ class SearchEngine:
         which rows can appear in results — see docs/filtering.md for the
         exact contract.
         """
+        st = self._state  # ONE snapshot read: the whole search is one epoch
         q, nprobe, r, fb, ns = self._resolve(queries, nprobe, rerank_mult,
-                                             filter_bits, namespaces)
-        return _pipeline(self.coarse, self.index, self.base, self.base_norms,
+                                             filter_bits, namespaces, st)
+        return _pipeline(self.coarse, st.index, st.base, st.base_norms,
                          self.ns_member if ns is not None else None,
-                         q, fb, ns, k=k, nprobe=nprobe, r=r,
+                         q, fb, ns, st.live_bits, k=k, nprobe=nprobe, r=r,
                          scan_impl=self.config.scan_impl,
                          rerank_impl=self.config.rerank_impl,
                          ef=self.config.ef)
@@ -450,17 +765,18 @@ class SearchEngine:
         their presence does (a None is absent from the pytree), so a stream
         of distinct filters compiles at most once per presence combination.
         """
+        st = self._state  # ONE snapshot read: the whole search is one epoch
         q, nprobe, r, fb, ns = self._resolve(queries, nprobe, rerank_mult,
-                                             filter_bits, namespaces)
+                                             filter_bits, namespaces, st)
         if self.coarse_kind == "custom":
             # unknown coarse objects may not be jax pytrees => not traceable
             return self.search(queries, k, nprobe=nprobe, rerank_mult=r,
                                filter_bits=fb, namespaces=ns)
-        return _fused_pipeline(self.coarse, self.index, self.base,
-                               self.base_norms,
+        return _fused_pipeline(self.coarse, st.index, st.base,
+                               st.base_norms,
                                self.ns_member if ns is not None else None,
-                               q, fb, ns, k=k, nprobe=nprobe, r=r,
-                               scan_impl=self.config.scan_impl,
+                               q, fb, ns, st.live_bits, k=k, nprobe=nprobe,
+                               r=r, scan_impl=self.config.scan_impl,
                                rerank_impl=self.config.rerank_impl,
                                ef=self.config.ef)
 

@@ -601,9 +601,50 @@ def autotune_cache_size() -> int:
     return len(_AUTOTUNE_CACHE)
 
 
-def clear_autotune_cache() -> None:
-    """Drop all resolutions (tests; a backend change mid-process)."""
-    _AUTOTUNE_CACHE.clear()
+def clear_autotune_cache(kind: str | None = None, *, nlist: int | None = None,
+                         cap: int | None = None, n: int | None = None) -> int:
+    """Drop resolved verdicts; with no arguments, all of them.
+
+    Selective form (the mutation path, docs/mutability.md): ``kind``
+    restricts to 'scan' or 'rerank' keys; ``nlist``/``cap`` match scan keys
+    on the ListStore dimensions a compaction can change; ``n`` matches
+    rerank keys on the base-row count an upsert can grow. The mutable
+    engine calls this when an epoch swap retires a shape signature, so the
+    retired epoch's verdicts can neither serve a lookup (the new shape
+    re-keys anyway) nor be re-persisted by ``save_autotune_cache`` into a
+    warmup file that outlives them. Returns the number of entries dropped.
+
+    ``nlist``/``cap`` only ever match scan keys and ``n`` only rerank keys,
+    so e.g. ``clear_autotune_cache(cap=1024)`` leaves every rerank verdict
+    alone without needing ``kind='scan'`` spelled out.
+    """
+    with _AUTOTUNE_LOCK:
+        if kind is None and nlist is None and cap is None and n is None:
+            dropped = len(_AUTOTUNE_CACHE)
+            _AUTOTUNE_CACHE.clear()
+            return dropped
+        doomed = []
+        for key in _AUTOTUNE_CACHE:
+            if kind is not None and key[0] != kind:
+                continue
+            if key[0] == "scan":
+                # ('scan', backend, interpret, G, cap, M, nlist)
+                if n is not None:
+                    continue
+                if nlist is not None and key[6] != nlist:
+                    continue
+                if cap is not None and key[4] != cap:
+                    continue
+            else:
+                # ('rerank', backend, interpret, Q, R, D, k, N)
+                if nlist is not None or cap is not None:
+                    continue
+                if n is not None and key[7] != n:
+                    continue
+            doomed.append(key)
+        for key in doomed:
+            del _AUTOTUNE_CACHE[key]
+        return len(doomed)
 
 
 _AUTOTUNE_SCHEMA = "repro.autotune/v2"

@@ -23,6 +23,13 @@ process-wide attribute filter bitmap (``filter_bits`` / ``set_filter``) and
 each request can carry a ``namespace`` id. Both ride the dispatch as traced
 values — mixed-namespace batches share buckets and compiles, and the per-row
 ``rows_filtered`` counter flows into ``ServeResult`` and ``TenantStats``.
+
+Live mutation (docs/mutability.md): ``upsert`` / ``delete`` / ``compact``
+forward to the engine, whose epoch-versioned snapshot swap means in-flight
+batches finish on the retiring epoch while the next dispatch reads the new
+one — queries and mutations interleave with zero failed futures.
+``metrics()`` reports the engine's current ``epoch`` and the cumulative
+``rows_tombstoned`` the loop's queries probed past.
 """
 from __future__ import annotations
 
@@ -51,6 +58,7 @@ class ServeResult(NamedTuple):
     codes_scanned: int
     reranked: int
     rows_filtered: int    # probed rows the loop's filter excluded (0 if none)
+    rows_tombstoned: int  # probed slots holding tombstones (0 if none)
     latency_s: float      # submit -> results on host
 
 
@@ -67,6 +75,8 @@ class LoopMetrics(NamedTuple):
     #                        (incl. warmup; only grows when scan_impl='auto'
     #                        or rerank_impl='auto' meets a new shape
     #                        signature)
+    epoch: int             # the engine's mutation epoch at snapshot time
+    rows_tombstoned: int   # probed tombstone slots summed over served rows
 
 
 class ServingLoop:
@@ -114,6 +124,7 @@ class ServingLoop:
         self._bucket_counts: dict[int, int] = {}
         self._compiles = 0
         self._autotuned = 0
+        self._rows_tombstoned = 0
         self._dim = int(engine.index.centroids.shape[1])
 
     # -- lifecycle ----------------------------------------------------------
@@ -223,6 +234,36 @@ class ServingLoop:
         return await asyncio.wrap_future(
             self.submit(query, k=k, tenant=tenant, namespace=namespace))
 
+    # -- live mutation (docs/mutability.md) ---------------------------------
+
+    def upsert(self, ids, vecs, *, attrs=None) -> np.ndarray:
+        """Insert/replace rows while serving.
+
+        Delegates to ``SearchEngine.upsert`` under the engine's mutation
+        lock; the engine installs the new epoch as ONE snapshot swap, so
+        batches already dispatched finish on the retiring epoch and the
+        next dispatch reads the new one — no pause, no failed futures.
+        Safe to call from any thread, running loop or not.
+        """
+        return self.engine.upsert(ids, vecs, attrs=attrs)
+
+    def delete(self, ids) -> int:
+        """Tombstone rows while serving (see ``upsert`` for the epoch
+        contract). Returns the number of rows deleted."""
+        return self.engine.delete(ids)
+
+    def compact(self, cap: int | None = None) -> int:
+        """Rebuild tombstone-heavy lists into a fresh epoch while serving.
+
+        The rebuild happens off to the side on host arrays; the swap is the
+        same single-snapshot install as ``upsert``, so in-flight batches
+        finish on the old epoch. A cap change retires the scan kernels'
+        autotune signatures (the engine invalidates them); the next dispatch
+        pays one re-sweep/compile, subsequent traffic is steady again.
+        Returns the number of tombstoned slots reclaimed.
+        """
+        return self.engine.compact(cap=cap)
+
     def set_filter(self, filter_bits) -> None:
         """Swap the loop-level filter bitmap (None = unfiltered).
 
@@ -247,6 +288,8 @@ class ServingLoop:
                 compiles=self._compiles,
                 bucket_counts=dict(self._bucket_counts),
                 autotuned=self._autotuned,
+                epoch=self.engine.epoch,
+                rows_tombstoned=self._rows_tombstoned,
             )
 
     # -- dispatch thread -----------------------------------------------------
@@ -304,6 +347,7 @@ class ServingLoop:
         cs = np.asarray(res.stats.codes_scanned)
         rr = np.asarray(res.stats.reranked)
         rf = np.asarray(res.stats.rows_filtered)
+        rt = np.asarray(res.stats.rows_tombstoned)
         t_done = time.monotonic()
         lats = [t_done - r.t_submit for r in reqs]
 
@@ -311,13 +355,15 @@ class ServingLoop:
             r.future.set_result(ServeResult(
                 dists=dists[i], ids=ids[i], lists_probed=int(lp[i]),
                 codes_scanned=int(cs[i]), reranked=int(rr[i]),
-                rows_filtered=int(rf[i]), latency_s=lats[i]))
+                rows_filtered=int(rf[i]), rows_tombstoned=int(rt[i]),
+                latency_s=lats[i]))
         # padding rows [n:] are dropped on the floor here — accounting and
         # callers only ever see rows [:n]
         self.stats.record_batch([r.tenant for r in reqs], lp[:n], cs[:n],
-                                rr[:n], lats, rf[:n])
+                                rr[:n], lats, rf[:n], rt[:n])
         with self._lock:
             self._batches += 1
             self._rows_served += n
             self._rows_padded += bucket - n
+            self._rows_tombstoned += int(rt[:n].sum())
             self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1

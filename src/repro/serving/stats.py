@@ -32,6 +32,9 @@ class TenantStats:
     rows_filtered: int = 0      # sum of QueryStats.rows_filtered (rows the
     #                             attribute filter excluded mid-scan; 0 when
     #                             the loop serves unfiltered)
+    rows_tombstoned: int = 0    # sum of QueryStats.rows_tombstoned (probed
+    #                             slots holding deleted rows; 0 while the
+    #                             index carries no tombstones)
     latency_sum_s: float = 0.0  # submit -> result, summed
     latency_max_s: float = 0.0
 
@@ -59,12 +62,14 @@ class StatsRegistry:
     def record_batch(self, tenants: Iterable[str], lists_probed: np.ndarray,
                      codes_scanned: np.ndarray, reranked: np.ndarray,
                      latencies_s: Iterable[float],
-                     rows_filtered: np.ndarray | None = None) -> None:
+                     rows_filtered: np.ndarray | None = None,
+                     rows_tombstoned: np.ndarray | None = None) -> None:
         """Fold one batch's per-row counters into the per-tenant aggregates.
 
         tenants / latencies_s: one entry per *real* row of the batch, aligned
-        with the stat arrays (each (Q_real,)). ``rows_filtered`` is optional
-        (trailing, defaulted) so pre-filtering callers keep working.
+        with the stat arrays (each (Q_real,)). ``rows_filtered`` and
+        ``rows_tombstoned`` are optional (trailing, defaulted) so
+        pre-filtering / pre-mutability callers keep working.
         """
         with self._lock:
             seen: set[str] = set()
@@ -78,6 +83,8 @@ class StatsRegistry:
                 st.reranked += int(reranked[i])
                 if rows_filtered is not None:
                     st.rows_filtered += int(rows_filtered[i])
+                if rows_tombstoned is not None:
+                    st.rows_tombstoned += int(rows_tombstoned[i])
                 st.latency_sum_s += float(lat)
                 st.latency_max_s = max(st.latency_max_s, float(lat))
                 if tenant not in seen:

@@ -1,0 +1,47 @@
+"""shard_map driver on a real >1-device mesh.
+
+``--xla_force_host_platform_device_count`` must be set before jax's backend
+initializes, so the 8-device run happens in a subprocess executing
+``tests/_multidevice_harness.py`` (which asserts vmap/shard_map bit-identity
+through a full mutation program); this module just launches it and checks
+the exit status. Marked slow: the child pays its own jax init + compiles.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_HARNESS = pathlib.Path(__file__).with_name("_multidevice_harness.py")
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def _run_harness(extra_env):
+    env = dict(os.environ)
+    env.update(extra_env)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, str(_HARNESS)], env=env,
+                          capture_output=True, text=True, timeout=900)
+
+
+@pytest.mark.slow
+def test_sharded_drivers_on_eight_device_mesh():
+    proc = _run_harness(
+        {"XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                       + " --xla_force_host_platform_device_count=8").strip(),
+         "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, (
+        f"harness failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "OK" in proc.stdout
+
+
+def test_harness_refuses_to_run_without_forced_devices():
+    """The guard that keeps the harness meaningful: without the flag it must
+    die loudly instead of silently testing a 1-device mesh."""
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(_HARNESS)], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode != 0
+    assert "forced devices" in (proc.stderr + proc.stdout)

@@ -1,0 +1,192 @@
+"""Property suite for the filter bitmap helpers and top-k reductions.
+
+Hypothesis drives random widths/selectivities/splits (skipped gracefully
+when the package is absent — see conftest); each property also has a
+deterministic seed-swept twin so the tier-1 container exercises the same
+oracles without hypothesis installed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as hst
+
+from repro.core.lists import (build_lists, filter_from_attrs,
+                              filter_pass_sizes, filter_words,
+                              pack_filter_mask, unpack_filter_mask)
+from repro.core.topk import distributed_topk, gather_ids, masked_topk
+
+_SETTINGS = dict(max_examples=25, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow,
+                                        HealthCheck.data_too_large])
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round-trip
+# ---------------------------------------------------------------------------
+
+def _roundtrip(mask: np.ndarray):
+    bits = pack_filter_mask(jnp.asarray(mask))
+    assert bits.shape == (*mask.shape[:-1], filter_words(mask.shape[-1]))
+    assert bits.dtype == jnp.uint8
+    back = unpack_filter_mask(bits, mask.shape[-1])
+    np.testing.assert_array_equal(np.asarray(back), mask)
+
+
+@given(rows=hst.integers(1, 7), cap=hst.integers(1, 300),
+       selectivity=hst.floats(0.0, 1.0), seed=hst.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_pack_unpack_roundtrip_property(rows, cap, selectivity, seed):
+    rng = np.random.default_rng(seed)
+    _roundtrip(rng.random((rows, cap)) < selectivity)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pack_unpack_roundtrip_seeds(seed):
+    rng = np.random.default_rng(seed)
+    rows = int(rng.integers(1, 7))
+    cap = int(rng.integers(1, 300))
+    _roundtrip(rng.random((rows, cap)) < rng.random())
+    # degenerate widths: all-true / all-false at non-multiple-of-8 caps
+    _roundtrip(np.ones((2, 8 * seed + 1), bool))
+    _roundtrip(np.zeros((2, 8 * seed + 3), bool))
+
+
+# ---------------------------------------------------------------------------
+# filter_from_attrs vs the numpy predicate oracle
+# ---------------------------------------------------------------------------
+
+def _attrs_store(nlist, cap, seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, cap + 1, nlist)
+    n = max(int(sizes.sum()), 1)
+    assign = np.repeat(np.arange(nlist), sizes)[:n]
+    packed = rng.integers(0, 256, (assign.size, 2), np.uint8)
+    attrs = rng.integers(0, 50, assign.size).astype(np.int32)
+    return build_lists(assign, packed, nlist=nlist, cap=cap,
+                       attrs=attrs), attrs
+
+
+def _check_filter_from_attrs(nlist, cap, thresh, seed):
+    store, _ = _attrs_store(nlist, cap, seed)
+    bits = filter_from_attrs(store, lambda a: a < thresh)
+    got = np.asarray(unpack_filter_mask(bits, cap))
+    ids = np.asarray(store.ids)
+    want = (np.asarray(store.attrs) < thresh) & (ids >= 0)
+    np.testing.assert_array_equal(got, want)
+    # pass-size accounting agrees with popcount over occupied slots
+    np.testing.assert_array_equal(np.asarray(filter_pass_sizes(store, bits)),
+                                  want.sum(axis=1))
+
+
+@given(nlist=hst.integers(1, 12), cap=hst.integers(1, 64),
+       thresh=hst.integers(0, 50), seed=hst.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_filter_from_attrs_oracle_property(nlist, cap, thresh, seed):
+    _check_filter_from_attrs(nlist, cap, thresh, seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_filter_from_attrs_oracle_seeds(seed):
+    rng = np.random.default_rng(100 + seed)
+    _check_filter_from_attrs(int(rng.integers(1, 12)),
+                             int(rng.integers(1, 64)),
+                             int(rng.integers(0, 50)), seed)
+
+
+# ---------------------------------------------------------------------------
+# masked_topk vs a stable-argsort numpy oracle (tie-break included)
+# ---------------------------------------------------------------------------
+
+def _check_masked_topk(d, valid, k):
+    vals, pos = masked_topk(jnp.asarray(d), jnp.asarray(valid), k)
+    vals, pos = np.asarray(vals), np.asarray(pos)
+    for qi in range(d.shape[0]):
+        dd = np.where(valid[qi], d[qi], np.inf)
+        # lax.top_k prefers the lowest index among equal keys — exactly a
+        # stable sort's order, which is the tie-break the engine's layout
+        # identity rests on
+        order = np.argsort(dd, kind="stable")[:k]
+        want_vals = dd[order]
+        want_pos = np.where(np.isfinite(want_vals), order, -1)
+        np.testing.assert_array_equal(vals[qi], want_vals)
+        np.testing.assert_array_equal(pos[qi], want_pos)
+
+
+@given(n=hst.integers(1, 200), k=hst.integers(1, 32),
+       dup=hst.integers(1, 6), selectivity=hst.floats(0.0, 1.0),
+       seed=hst.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_masked_topk_tiebreak_property(n, k, dup, selectivity, seed):
+    rng = np.random.default_rng(seed)
+    k = min(k, n)
+    # draw from `dup` distinct values so exact ties are common
+    d = rng.integers(0, dup, (3, n)).astype(np.float32)
+    valid = rng.random((3, n)) < selectivity
+    _check_masked_topk(d, valid, k)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_masked_topk_tiebreak_seeds(seed):
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(5, 200))
+    k = min(int(rng.integers(1, 32)), n)
+    d = rng.integers(0, 4, (3, n)).astype(np.float32)
+    valid = rng.random((3, n)) < rng.random()
+    _check_masked_topk(d, valid, k)
+
+
+def test_masked_topk_all_invalid_row():
+    vals, pos = masked_topk(jnp.ones((1, 8)), jnp.zeros((1, 8), bool), 4)
+    assert np.isinf(np.asarray(vals)).all()
+    assert (np.asarray(pos) == -1).all()
+    # gather_ids preserves the sentinel through the id map
+    ids = gather_ids(jnp.arange(8)[None, :].astype(jnp.int32), pos)
+    assert (np.asarray(ids) == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# distributed_topk merge parity under random shard splits
+# ---------------------------------------------------------------------------
+
+def _check_distributed_merge(q, n, shards, k, seed):
+    """Random per-shard candidate pools: the distributed merge must equal a
+    single global top-k over the union (dists exactly; ids tie-aware)."""
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, 10_000, (shards, q, n)).astype(np.float32)
+    ids = rng.permutation(shards * n).astype(np.int32).reshape(shards, n)
+    ids = np.broadcast_to(ids[:, None, :], (shards, q, n)).copy()
+
+    merged = jax.vmap(
+        lambda dd, ii: distributed_topk(dd, ii, k, "sh"),
+        axis_name="sh")(jnp.asarray(d), jnp.asarray(ids))
+    mvals, mids = np.asarray(merged[0][0]), np.asarray(merged[1][0])
+
+    flat_d = d.transpose(1, 0, 2).reshape(q, -1)
+    flat_i = ids.transpose(1, 0, 2).reshape(q, -1)
+    for qi in range(q):
+        order = np.argsort(flat_d[qi], kind="stable")[:k]
+        np.testing.assert_array_equal(mvals[qi], flat_d[qi][order])
+        # ids within an exact-tie group may legally permute across shards
+        want = flat_i[qi][order]
+        for v in np.unique(flat_d[qi][order]):
+            grp = flat_d[qi][order] == v
+            assert sorted(mids[qi][grp].tolist()) == sorted(want[grp].tolist())
+
+
+@given(q=hst.integers(1, 4), n=hst.integers(1, 64),
+       shards=hst.integers(1, 6), k=hst.integers(1, 16),
+       seed=hst.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_distributed_topk_random_splits_property(q, n, shards, k, seed):
+    _check_distributed_merge(q, n, shards, min(k, n), seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_distributed_topk_random_splits_seeds(seed):
+    rng = np.random.default_rng(300 + seed)
+    n = int(rng.integers(1, 64))
+    _check_distributed_merge(int(rng.integers(1, 4)), n,
+                             int(rng.integers(1, 6)),
+                             min(int(rng.integers(1, 16)), n), seed)
