@@ -148,6 +148,99 @@ def scan_stage_traffic(q: int = 32, p: int = 16, cap: int = 1024,
     return records
 
 
+def anytime_scan_traffic(q: int = 32, p: int = 16, cap: int = 1024,
+                         m: int = 16, nlist: int = 64, tile: int = 256,
+                         tau: float = 2.0) -> list[dict]:
+    """Scan-stage traffic under the anytime policy on a margin-skewed mix.
+
+    XLA's static cost model cannot see data-dependent work, so this record
+    models the stream scan's dominant HBM term directly from the kernel's
+    own counters: codes-DMA bytes = tiles actually scanned x ``tile x M/2``
+    plus one (M, 16) LUT per valid group. The "margin-skewed mix" is the
+    regime docs/anytime.md targets — clustered data, every query near one
+    centroid — so the coarse margins are real: the margin policy drops
+    whole probes (their groups' DMAs never issue) and the early-exit bound
+    skips surviving far groups' tiles in-kernel. Recall is matched by
+    construction *and checked*: the adaptive pool's final top-10 against
+    the fixed-nprobe pool's (acceptance: recall@10 >= 0.99 with >= 25%
+    fewer modeled bytes).
+    """
+    from repro.core.topk import (gather_ids, margin_prune_probes, masked_topk,
+                                 smallest_k)
+
+    rng = np.random.default_rng(0)
+    d = 32
+    # well-separated centroids + near-centroid queries = real coarse margins
+    centroids = rng.normal(size=(nlist, d)).astype(np.float32) * 4.0
+    codes = rng.integers(0, 256, (nlist, cap, m // 2), np.uint8)
+    ids = np.arange(nlist * cap, dtype=np.int32).reshape(nlist, cap)
+    index = ivf.IVFIndex(
+        centroids=jnp.asarray(centroids),
+        codebook=PQCodebook(jnp.asarray(
+            rng.normal(size=(m, 16, d // m)).astype(np.float32))),
+        lists=ListStore(codes=jnp.asarray(codes), ids=jnp.asarray(ids),
+                        sizes=jnp.asarray(np.full(nlist, cap, np.int32))),
+    )
+    # half the queries sit on a centroid (tight margin: the policy prunes
+    # all but the home probe), half sit between two clusters (wide margin:
+    # both survive the prune and the early-exit bound skips the farther
+    # group's tiles in-kernel) — both anytime mechanisms show up in the
+    # counters below
+    home = rng.integers(0, nlist, q)
+    mate = (home + 1) % nlist
+    w = np.where(np.arange(q) < q // 2, 0.0, 0.42).astype(np.float32)[:, None]
+    qs = jnp.asarray((1.0 - w) * centroids[home] + w * centroids[mate]
+                     + 0.3 * rng.normal(size=(q, d)).astype(np.float32))
+    cd = jnp.sum((qs[:, None, :] - index.centroids[None]) ** 2, axis=-1)
+    cvals, probes = smallest_k(cd, p)
+    adp_probes, lists_pruned = margin_prune_probes(cvals, probes, tau)
+
+    keep = 40
+    fix_d, fix_i = ivf.scan_probes_stream(index, qs, probes, keep=keep,
+                                          tile_n=tile)
+    adp_d, adp_i, skipped = ivf.scan_probes_stream(index, qs, adp_probes,
+                                                   keep=keep, tile_n=tile,
+                                                   early_exit=True)
+
+    def _final10(dd, ii):
+        v, pos = masked_topk(dd, ii >= 0, 10)
+        return np.asarray(gather_ids(ii, pos))
+
+    want, got = _final10(fix_d, fix_i), _final10(adp_d, adp_i)
+    recall10 = float(np.mean([np.isin(got[i], want[i]).mean()
+                              for i in range(q)]))
+
+    n_tiles = cap // tile
+    group_lut = m * 16                      # (M, 16) u8 LUT per valid group
+    tile_bytes = tile * (m // 2)            # packed-codes DMA per tile
+    pruned = int(np.asarray(lists_pruned).sum())
+    n_skip = int(np.asarray(skipped).sum())
+    fixed_bytes = q * p * (n_tiles * tile_bytes + group_lut)
+    valid_groups = q * p - pruned
+    adp_bytes = (valid_groups * group_lut
+                 + (valid_groups * n_tiles - n_skip) * tile_bytes)
+    reduction = 1.0 - adp_bytes / fixed_bytes
+    base = {"kernel": "anytime_scan", "Q": q, "P": p, "cap": cap, "M": m,
+            "nlist": nlist, "tile_n": tile, "modeled": True,
+            "backend": jax.default_backend()}
+    records = [
+        dict(base, impl="fixed", bytes_accessed=float(fixed_bytes)),
+        dict(base, impl="adaptive", bytes_accessed=float(adp_bytes),
+             margin_tau=tau, lists_pruned=pruned, tiles_skipped=n_skip,
+             reduction_pct=reduction * 100.0, recall10_vs_fixed=recall10),
+    ]
+    common.emit("anytime_scan_bytes_fixed", 0.0,
+                f"modeled_bytes={fixed_bytes}")
+    common.emit("anytime_scan_bytes_adaptive", 0.0,
+                f"modeled_bytes={adp_bytes};lists_pruned={pruned};"
+                f"tiles_skipped={n_skip};reduction={reduction:.1%};"
+                f"recall10_vs_fixed={recall10:.3f} "
+                "(acceptance: >= 25% fewer bytes at matched recall)")
+    assert reduction >= 0.25, f"anytime reduction {reduction:.1%} < 25%"
+    assert recall10 >= 0.99, f"anytime recall@10 {recall10:.3f} < 0.99"
+    return records
+
+
 def rerank_stage_traffic(q: int = 32, k: int = 10, r: int = 4,
                          d: int = 128, n: int = 4096) -> list[dict]:
     """HBM bytes-accessed of the exact re-rank STAGE, gathered vs stream.
@@ -203,7 +296,8 @@ def main() -> None:
         common.emit(f"kernel_{impl}_Q{q_}_N{n_}_M{m_}", t / q_,
                     "interpret-mode wall clock (CPU correctness path)")
 
-    records = grouped_sweep() + scan_stage_traffic() + rerank_stage_traffic()
+    records = (grouped_sweep() + scan_stage_traffic()
+               + anytime_scan_traffic() + rerank_stage_traffic())
     with open(KERNELS_JSON, "w") as f:
         json.dump({"schema": "repro.kernel_bench/v1", "records": records}, f,
                   indent=2)

@@ -217,11 +217,12 @@ def scan_probes(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
     return dists, ids
 
 
-@functools.partial(jax.jit, static_argnames=("keep", "tile_n"))
+@functools.partial(jax.jit, static_argnames=("keep", "tile_n", "early_exit"))
 def scan_probes_stream(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
                        keep: int, tile_n: int = 0,
-                       filter_bits: jax.Array | None = None
-                       ) -> tuple[jax.Array, jax.Array]:
+                       filter_bits: jax.Array | None = None,
+                       early_exit: bool = False
+                       ) -> tuple[jax.Array, ...]:
     """Gather-free fine scan with fused candidate reduction (+ filtering).
 
     The ``impl='stream'`` serving hot path: ADC runs over ``index.lists``
@@ -244,29 +245,51 @@ def scan_probes_stream(index: IVFIndex, q: jax.Array, probe_ids: jax.Array, *,
     the pool preserves (probe, tile, slot) order, and in-tile ties resolve
     lowest-slot-first, matching ``masked_topk``'s lowest-flat-index
     tie-break.
+
+    ``early_exit`` arms the kernel's anytime tile pruning (docs/anytime.md)
+    and changes the return to (dists, ids, tiles_skipped (Q,) i32) — the
+    per-query count of valid-probe tiles whose scan (and usually DMA) the
+    lower bound proved irrelevant. The final <= ``keep`` selection stays
+    bit-identical; the raw pool does not (pruned tiles surface as absent
+    candidates).
     """
     from repro.kernels import ops
 
     qlut = _probe_tables(index, q, probe_ids)          # (Q, P, M, 16)
     qq, p = probe_ids.shape
-    vals, slots = ops.fastscan_stream_topk(
-        qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:]),
-        index.lists.codes, probe_ids.reshape(-1), index.lists.sizes,
-        keep=keep, tile_n=tile_n,
-        filter_bits=filter_bits)                       # (G, n_tiles, kc) x2
+    bias_sum = jnp.sum(qlut.bias, axis=-1)             # (Q, P)
+    tiles_skipped = None
+    if early_exit:
+        vals, slots, skipped = ops.fastscan_stream_topk(
+            qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:]),
+            index.lists.codes, probe_ids.reshape(-1), index.lists.sizes,
+            keep=keep, tile_n=tile_n, filter_bits=filter_bits,
+            early_exit=True, groups_per_query=p,
+            scales=qlut.scale.reshape(-1),
+            biases=bias_sum.reshape(-1))               # + (G, n_tiles)
+        tiles_skipped = jnp.sum(skipped.reshape(qq, -1), axis=1)
+    else:
+        vals, slots = ops.fastscan_stream_topk(
+            qlut.table_q8.reshape(qq * p, *qlut.table_q8.shape[2:]),
+            index.lists.codes, probe_ids.reshape(-1), index.lists.sizes,
+            keep=keep, tile_n=tile_n,
+            filter_bits=filter_bits)                   # (G, n_tiles, kc) x2
     n_tiles, kc = vals.shape[1], vals.shape[2]
     vals = vals.reshape(qq, p, n_tiles * kc)
     slots = slots.reshape(qq, p, n_tiles * kc)
     valid = slots >= 0
     # same affine dequantization expression as scan_probes -> f32-identical
+    # (and the same expression the early-exit kernel thresholds with)
     dists = (qlut.scale[..., None] * vals.astype(jnp.float32)
-             + jnp.sum(qlut.bias, axis=-1)[..., None])
+             + bias_sum[..., None])
     dists = jnp.where(valid, dists, jnp.inf)
     # ids only for the kept candidates: a (Q, P, n_tiles*kc) gather instead
     # of the full (Q, P, cap) one
     lids = jnp.maximum(probe_ids, 0)[..., None]
     ids = index.lists.ids[lids, jnp.maximum(slots, 0)]
     ids = jnp.where(valid & (probe_ids >= 0)[..., None], ids, -1)
+    if early_exit:
+        return dists.reshape(qq, -1), ids.reshape(qq, -1), tiles_skipped
     return dists.reshape(qq, -1), ids.reshape(qq, -1)
 
 

@@ -72,6 +72,32 @@ def masked_topk(dists: jax.Array, valid: jax.Array, k: int
 
 
 @jax.jit
+def margin_prune_probes(vals: jax.Array, probes: jax.Array, tau: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Adaptive-nprobe mask: drop probes outside the per-query margin.
+
+    vals: (Q, P) coarse centroid distances aligned with probes (Q, P); slots
+    already -1 must carry +inf vals. A probe survives iff its distance is
+    within ``(1 + tau) * d0`` of the query's best probed centroid ``d0``.
+    ``tau`` is traced (scalar or (Q,)), so per-query budgets recompile
+    nothing; ``tau = +inf`` keeps every probe (bit-identical to fixed
+    nprobe) — guarded explicitly so ``d0 == 0`` never turns ``0 * inf``
+    into NaN — and the best probe always survives regardless of tau.
+
+    Returns (probes with pruned slots set to -1, per-query pruned count).
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    if tau.ndim == 1:
+        tau = tau[:, None]
+    present = probes >= 0
+    d = jnp.where(present, vals, INF)
+    d0 = jnp.min(d, axis=1, keepdims=True)
+    keep = (d <= d0 * (1.0 + tau)) | jnp.isposinf(tau) | (d <= d0)
+    pruned = jnp.sum((present & ~keep).astype(jnp.int32), axis=1)
+    return jnp.where(keep, probes, -1), pruned
+
+
+@jax.jit
 def gather_ids(ids: jax.Array, pos: jax.Array) -> jax.Array:
     """Map masked_topk positions back to ids, preserving the -1 sentinel.
 

@@ -70,7 +70,7 @@ COARSE_KINDS = ("flat", "hnsw", "tree")
 class EngineConfig(NamedTuple):
     """Static search-time knobs (all shapes derive from these => jit-stable)."""
 
-    nprobe: int = 8         # lists scanned per query
+    nprobe: int = 8         # lists scanned per query (the MAX under 'margin')
     rerank_mult: int = 0    # refine rerank_mult*k candidates exactly; 0 = off
     scan_impl: str = "ref"  # grouped ADC impl: 'ref' | 'select' | 'mxu' |
     #                         'stream' (gather-free in-kernel list DMA) |
@@ -79,9 +79,24 @@ class EngineConfig(NamedTuple):
     rerank_impl: str = "gathered"  # exact re-rank impl: 'gathered' |
     #                         'stream' (gather-free in-kernel row DMA) |
     #                         'auto' (see kernels.ops.RERANK_IMPLS)
+    probe_policy: str = "fixed"  # 'fixed' (always nprobe lists) | 'margin'
+    #                         (adaptive nprobe, docs/anytime.md: drop probes
+    #                         whose coarse distance exceeds (1 + tau) x the
+    #                         query's best — nprobe becomes a per-query MAX)
+    margin_tau: float = float("inf")  # 'margin' width; traced at search time
+    #                         (per-request overrides never recompile); +inf
+    #                         keeps every probe (bit-identical to 'fixed')
+    early_exit: bool = False  # anytime tile pruning inside the stream scan
+    #                         kernel (docs/anytime.md); lossless for the
+    #                         final top-k, no-op on gathered impls
 
 
 _EF_DEFAULT = EngineConfig._field_defaults["ef"]
+PROBE_POLICIES = ("fixed", "margin")
+# valid-probe fraction the autotune sweep assumes under a margin policy: the
+# 'auto' verdict for an adaptive workload is timed (and cached) against a
+# probe set with this fill instead of a dense one (kernels.ops).
+MARGIN_PROBE_FILL = 0.5
 
 
 class QueryStats(NamedTuple):
@@ -98,6 +113,11 @@ class QueryStats(NamedTuple):
     rows_tombstoned: jax.Array  # (Q,) i32  probed slots inside the watermark
     #                           holding deleted rows (docs/mutability.md);
     #                           always 0 on an unmutated engine
+    lists_pruned: jax.Array   # (Q,) i32  coarse probes the margin policy
+    #                           dropped (docs/anytime.md); 0 under 'fixed'
+    tiles_skipped: jax.Array  # (Q,) i32  valid-probe cap tiles the stream
+    #                           kernel's early exit proved irrelevant; 0
+    #                           without early_exit or on gathered impls
 
 
 class SearchResult(NamedTuple):
@@ -126,6 +146,13 @@ def validate_config(config: EngineConfig, *, coarse_kind: str,
         raise ValueError(
             f"EngineConfig.rerank_impl {config.rerank_impl!r} unknown; "
             f"want one of {RERANK_IMPLS}")
+    if config.probe_policy not in PROBE_POLICIES:
+        raise ValueError(
+            f"EngineConfig.probe_policy {config.probe_policy!r} unknown; "
+            f"want one of {PROBE_POLICIES}")
+    if config.margin_tau is None or not config.margin_tau >= 0:  # rejects NaN
+        raise ValueError(
+            f"EngineConfig.margin_tau must be >= 0, got {config.margin_tau}")
     if config.ef < 1:
         raise ValueError(f"EngineConfig.ef must be >= 1, got {config.ef}")
     if config.ef != _EF_DEFAULT and coarse_kind != "hnsw":
@@ -148,12 +175,16 @@ def validate_config(config: EngineConfig, *, coarse_kind: str,
 
 def coarse_probes(coarse, q: jax.Array, *, nprobe: int, ef: int,
                   ns_member: jax.Array | None = None,
-                  namespaces: jax.Array | None = None) -> jax.Array:
-    """Stage 1 — coarse: pick the nprobe most promising lists.
+                  namespaces: jax.Array | None = None,
+                  probe_policy: str = "fixed",
+                  margin_tau: jax.Array | float | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 — coarse: pick the most promising lists, up to nprobe.
 
     coarse: any of the ``core.coarse`` quantizer pytrees (or a custom object
-    with ``.search(q, nprobe)``). q: (Q, D) f32. Returns (Q, nprobe) i32
-    list ids, -1 = no probe.
+    with ``.search(q, nprobe)``). q: (Q, D) f32. Returns
+    (probes (Q, nprobe) i32 list ids with -1 = no probe,
+    lists_pruned (Q,) i32 — probes the adaptive policy dropped).
 
     Namespacing (docs/filtering.md): ``ns_member`` is the engine-held
     (n_ns, nlist) bool membership table and ``namespaces`` the per-query
@@ -163,6 +194,17 @@ def coarse_probes(coarse, q: jax.Array, *, nprobe: int, ef: int,
     tree coarse post-masks the routed probes to -1 (they may under-fill
     nprobe, never over-reach). With every query unrestricted the flat path
     is exactly ``smallest_k`` — bit-identical to the namespace-free engine.
+
+    Adaptive nprobe (docs/anytime.md): with ``probe_policy='margin'`` the
+    coarse distances every quantizer already returns feed
+    ``core.topk.margin_prune_probes`` — a probe survives only while its
+    centroid distance is within ``(1 + margin_tau) x`` the query's best, so
+    ``nprobe`` becomes a per-query *maximum* and easy (large-margin) queries
+    scan fewer lists. ``margin_tau`` is traced (scalar or (Q,)):
+    per-request budgets never recompile. ``margin_tau=None`` or ``+inf``
+    keeps every probe — bit-identical to ``'fixed'``. The probe mask keeps
+    its static (Q, nprobe) shape; pruned slots are the ``-1`` sentinel the
+    stream kernels skip without touching HBM.
     """
     restrict = ns_member is not None and namespaces is not None
     if restrict:
@@ -171,26 +213,32 @@ def coarse_probes(coarse, q: jax.Array, *, nprobe: int, ef: int,
                  | ns_member[jnp.maximum(namespaces, 0)])
     if isinstance(coarse, coarse_mod.FlatCoarse) and restrict:
         coarse_d = pairwise_sqdist(q, coarse.centroids)
-        _, probes = topk_mod.masked_topk(coarse_d, allow, nprobe)
-        return probes
-    if isinstance(coarse, coarse_mod.HNSWCoarse):
-        _, probes = coarse.search(q, nprobe, ef=max(ef, nprobe))
+        vals, probes = topk_mod.masked_topk(coarse_d, allow, nprobe)
     else:
-        _, probes = coarse.search(q, nprobe)
-    if restrict:
-        ok = jnp.take_along_axis(allow, jnp.maximum(probes, 0), axis=1)
-        probes = jnp.where(ok & (probes >= 0), probes, -1)
-    return probes
+        if isinstance(coarse, coarse_mod.HNSWCoarse):
+            vals, probes = coarse.search(q, nprobe, ef=max(ef, nprobe))
+        else:
+            vals, probes = coarse.search(q, nprobe)
+        if restrict:
+            ok = jnp.take_along_axis(allow, jnp.maximum(probes, 0), axis=1)
+            probes = jnp.where(ok & (probes >= 0), probes, -1)
+    if probe_policy == "margin":
+        tau = jnp.inf if margin_tau is None else margin_tau
+        return topk_mod.margin_prune_probes(vals, probes, tau)
+    return probes, jnp.zeros((probes.shape[0],), jnp.int32)
 
 
 def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
                     *, scan_impl: str, keep: int | None = None,
-                    filter_bits: jax.Array | None = None
-                    ) -> tuple[jax.Array, jax.Array]:
+                    filter_bits: jax.Array | None = None,
+                    early_exit: bool = False, probe_fill: float = 1.0
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Stage 2 — quantized scan, flattened to one candidate pool per query.
 
-    Returns (dists (Q, C) f32, ids (Q, C) i32, -1 = pad). With the gathered
-    impls C = nprobe*cap. ``keep`` is the per-query candidate budget the
+    Returns (dists (Q, C) f32, ids (Q, C) i32 with -1 = pad,
+    tiles_skipped (Q,) i32 — early-exit counter, zeros unless the stream
+    path ran with ``early_exit=True``). With the gathered impls
+    C = nprobe*cap. ``keep`` is the per-query candidate budget the
     downstream selection will take (r*k, or k without re-rank): when the
     resolved impl is 'stream' and ``keep`` is given, the scan runs gather-
     free over the in-place ListStore with fused per-tile reduction
@@ -207,17 +255,29 @@ def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
     reference post-filter oracle: scan everything, then mask excluded rows
     to (inf, -1). The two are bit-identical through any final selection of
     <= keep candidates (tested at 0/1/50/100% selectivity).
+
+    ``early_exit`` arms the stream kernel's anytime tile pruning
+    (docs/anytime.md) — lossless for the final top-``keep``; a no-op (zeros
+    counter) whenever the resolved impl is gathered. ``probe_fill`` is the
+    valid-probe fraction the 'auto' sweep should assume (< 1 under a margin
+    policy, where many probes arrive as -1).
     """
     if keep is not None:
         from repro.kernels import ops
         qq, p = probes.shape
         impl, tile_n = ops.resolve_scan_impl(
             scan_impl, qq * p, index.lists.cap,
-            2 * index.lists.codes.shape[-1], nlist=index.lists.nlist)
+            2 * index.lists.codes.shape[-1], nlist=index.lists.nlist,
+            probe_fill=probe_fill)
         if impl == "stream":
-            return ivf_mod.scan_probes_stream(index, q, probes, keep=keep,
-                                              tile_n=tile_n,
-                                              filter_bits=filter_bits)
+            out = ivf_mod.scan_probes_stream(index, q, probes, keep=keep,
+                                             tile_n=tile_n,
+                                             filter_bits=filter_bits,
+                                             early_exit=early_exit)
+            if early_exit:
+                return out
+            dists, ids = out
+            return dists, ids, jnp.zeros((dists.shape[0],), jnp.int32)
     dists, ids = ivf_mod.scan_probes(index, q, probes, impl=scan_impl)
     if filter_bits is not None:
         # post-filter oracle: (Q, P, cap) bool of rows that pass
@@ -227,7 +287,8 @@ def scan_candidates(index: ivf_mod.IVFIndex, q: jax.Array, probes: jax.Array,
         dists = jnp.where(ok, dists, jnp.inf)
         ids = jnp.where(ok, ids, -1)
     qq = dists.shape[0]
-    return dists.reshape(qq, -1), ids.reshape(qq, -1)
+    return (dists.reshape(qq, -1), ids.reshape(qq, -1),
+            jnp.zeros((qq,), jnp.int32))
 
 
 def combine_filter_bits(filter_bits: jax.Array | None,
@@ -286,8 +347,15 @@ def count_rows_tombstoned(index: ivf_mod.IVFIndex, probes: jax.Array,
 def make_stats(index: ivf_mod.IVFIndex, probes: jax.Array,
                reranked: jax.Array,
                filter_bits: jax.Array | None = None,
-               live_bits: jax.Array | None = None) -> QueryStats:
-    """Work counters from the probe set + the re-rank stage's counter."""
+               live_bits: jax.Array | None = None,
+               lists_pruned: jax.Array | None = None,
+               tiles_skipped: jax.Array | None = None) -> QueryStats:
+    """Work counters from the probe set + the re-rank stage's counter.
+
+    ``lists_pruned``/``tiles_skipped`` are the anytime counters
+    (docs/anytime.md); None (the hand-composition default) records zeros.
+    """
+    qq = probes.shape[0]
     return QueryStats(
         lists_probed=jnp.sum((probes >= 0).astype(jnp.int32), axis=1),
         codes_scanned=jnp.sum(index.lists.probed_sizes(probes), axis=1),
@@ -295,6 +363,10 @@ def make_stats(index: ivf_mod.IVFIndex, probes: jax.Array,
         rows_filtered=count_rows_filtered(index, probes, filter_bits,
                                           live_bits),
         rows_tombstoned=count_rows_tombstoned(index, probes, live_bits),
+        lists_pruned=(jnp.zeros((qq,), jnp.int32) if lists_pruned is None
+                      else lists_pruned),
+        tiles_skipped=(jnp.zeros((qq,), jnp.int32) if tiles_skipped is None
+                       else tiles_skipped),
     )
 
 
@@ -302,16 +374,18 @@ def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
               norms: jax.Array | None, ns_member: jax.Array | None,
               q: jax.Array, filter_bits: jax.Array | None,
               namespaces: jax.Array | None,
-              live_bits: jax.Array | None = None, *, k: int, nprobe: int,
-              r: int, scan_impl: str, rerank_impl: str, ef: int
+              live_bits: jax.Array | None = None,
+              margin_tau: jax.Array | None = None, *, k: int, nprobe: int,
+              r: int, scan_impl: str, rerank_impl: str, ef: int,
+              probe_policy: str = "fixed", early_exit: bool = False
               ) -> SearchResult:
     """The whole engine as one pure function (stages 1-4 + stats).
 
-    ``filter_bits``/``namespaces``/``live_bits`` are *traced* arguments
-    (None simply drops out of the trace): changing the predicate, tenant
-    mix, or tombstone set between requests never recompiles — only
-    presence/absence does, giving a handful of compile-cache entries per
-    shape bucket instead of one per predicate.
+    ``filter_bits``/``namespaces``/``live_bits``/``margin_tau`` are *traced*
+    arguments (None simply drops out of the trace): changing the predicate,
+    tenant mix, tombstone set, or per-request margin budget between requests
+    never recompiles — only presence/absence does, giving a handful of
+    compile-cache entries per shape bucket instead of one per predicate.
 
     ``live_bits`` is the engine-held live-row bitmap
     (``core.lists.live_filter_bits``), present only while the store carries
@@ -320,20 +394,30 @@ def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
     selection — the condition for mutated results to stay bit-identical to
     a rebuilt engine's (docs/mutability.md). Gathered impls mask tombstones
     by id anyway; for them the AND only changes the stats, not the math.
+
+    ``probe_policy``/``early_exit`` are the static anytime knobs
+    (docs/anytime.md): the policy picks which coarse branch traces and the
+    sweep fill the autotuner should time against; early exit changes the
+    stream kernel variant. ``margin_tau`` itself stays traced.
     """
-    probes = coarse_probes(coarse, q, nprobe=nprobe, ef=ef,
-                           ns_member=ns_member, namespaces=namespaces)
+    probes, lists_pruned = coarse_probes(
+        coarse, q, nprobe=nprobe, ef=ef, ns_member=ns_member,
+        namespaces=namespaces, probe_policy=probe_policy,
+        margin_tau=margin_tau)
     # the selection budget stage 3+4 will take — under 'stream' this lets
     # the scan kernel reduce candidates in VMEM instead of writing the full
     # (Q, nprobe*cap) pool to HBM
-    flat_d, flat_ids = scan_candidates(
+    flat_d, flat_ids, tiles_skipped = scan_candidates(
         index, q, probes, scan_impl=scan_impl, keep=(r * k) if r else k,
-        filter_bits=combine_filter_bits(filter_bits, live_bits))
+        filter_bits=combine_filter_bits(filter_bits, live_bits),
+        early_exit=early_exit,
+        probe_fill=(MARGIN_PROBE_FILL if probe_policy == "margin" else 1.0))
     vals, out_ids, reranked = rerank_mod.finalize_candidates(
         flat_d, flat_ids, base, q, k, r, norms=norms, rerank_impl=rerank_impl)
     return SearchResult(dists=vals, ids=out_ids,
                         stats=make_stats(index, probes, reranked, filter_bits,
-                                         live_bits))
+                                         live_bits, lists_pruned,
+                                         tiles_skipped))
 
 
 # ONE process-wide jit: cache is keyed on static knobs + pytree structure +
@@ -341,7 +425,8 @@ def _pipeline(coarse, index: ivf_mod.IVFIndex, base: jax.Array | None,
 # compiles. This is the serving fast path.
 _fused_pipeline = jax.jit(
     _pipeline,
-    static_argnames=("k", "nprobe", "r", "scan_impl", "rerank_impl", "ef"))
+    static_argnames=("k", "nprobe", "r", "scan_impl", "rerank_impl", "ef",
+                     "probe_policy", "early_exit"))
 
 
 def fused_cache_size() -> int:
@@ -671,22 +756,48 @@ class SearchEngine:
     #    pure stage functions above) ----------------------------------------
 
     def select_probes(self, q: jax.Array, nprobe: int) -> jax.Array:
-        """Stage 1 — coarse: pick the nprobe most promising lists."""
-        return coarse_probes(self.coarse, q, nprobe=nprobe, ef=self.config.ef)
+        """Stage 1 — coarse: pick up to nprobe promising lists (-1 = none).
+
+        Applies the config's probe policy; the pruned-count counter is
+        dropped here (hand-composition back-compat) — use ``coarse_probes``
+        directly to observe it.
+        """
+        probes, _ = coarse_probes(
+            self.coarse, q, nprobe=nprobe, ef=self.config.ef,
+            probe_policy=self.config.probe_policy,
+            margin_tau=self.config.margin_tau)
+        return probes
 
     def scan(self, q: jax.Array, probe_ids: jax.Array
              ) -> tuple[jax.Array, jax.Array]:
         """Stage 2 — quantized scan: flattened ADC candidates per query."""
-        return scan_candidates(self.index, q, probe_ids,
-                               scan_impl=self.config.scan_impl)
+        dists, ids, _ = scan_candidates(self.index, q, probe_ids,
+                                        scan_impl=self.config.scan_impl)
+        return dists, ids
 
     # -- the unified entry points ------------------------------------------
 
     def _resolve(self, queries, nprobe, rerank_mult, filter_bits, namespaces,
-                 st: EngineState):
+                 st: EngineState, margin_tau=None):
         q = queries[None] if queries.ndim == 1 else queries
         nprobe = self.config.nprobe if nprobe is None else nprobe
         r = self.config.rerank_mult if rerank_mult is None else rerank_mult
+        if margin_tau is not None and self.config.probe_policy != "margin":
+            raise ValueError(
+                "margin_tau override given but probe_policy is "
+                f"{self.config.probe_policy!r}; build the engine with "
+                "EngineConfig(probe_policy='margin')")
+        if self.config.probe_policy == "margin":
+            tau = (self.config.margin_tau if margin_tau is None
+                   else margin_tau)
+            tau = jnp.asarray(tau, jnp.float32)
+            if tau.ndim not in (0, 1) or (tau.ndim == 1
+                                          and tau.shape != (q.shape[0],)):
+                raise ValueError(
+                    f"margin_tau must be a scalar or ({q.shape[0]},) per-"
+                    f"query widths, got shape {tau.shape}")
+        else:
+            tau = None
         if r and st.base is None:
             raise ValueError("exact re-rank requested but engine holds no "
                              "base vectors (build with keep_base=True)")
@@ -717,12 +828,13 @@ class SearchEngine:
                 raise ValueError(
                     f"namespaces must be ({q.shape[0]},) i32 (one per query, "
                     f"-1 = unrestricted), got shape {namespaces.shape}")
-        return q, nprobe, r, filter_bits, namespaces
+        return q, nprobe, r, filter_bits, namespaces, tau
 
     def search(self, queries: jax.Array, k: int = 10, *,
                nprobe: int | None = None, rerank_mult: int | None = None,
                filter_bits: jax.Array | None = None,
-               namespaces: jax.Array | None = None) -> SearchResult:
+               namespaces: jax.Array | None = None,
+               margin_tau: jax.Array | float | None = None) -> SearchResult:
         """Batched ANN search, staged. queries: (Q, D) or (D,).
 
         ``rerank_mult`` overrides the config: r > 0 refines the top r*k
@@ -735,21 +847,30 @@ class SearchEngine:
         the engine's membership table, -1 = unrestricted. Both restrict
         which rows can appear in results — see docs/filtering.md for the
         exact contract.
+
+        ``margin_tau`` (scalar or (Q,)) overrides the config's margin width
+        for this request — the anytime latency/recall dial
+        (docs/anytime.md). Only legal under ``probe_policy='margin'``.
         """
         st = self._state  # ONE snapshot read: the whole search is one epoch
-        q, nprobe, r, fb, ns = self._resolve(queries, nprobe, rerank_mult,
-                                             filter_bits, namespaces, st)
+        q, nprobe, r, fb, ns, tau = self._resolve(
+            queries, nprobe, rerank_mult, filter_bits, namespaces, st,
+            margin_tau)
         return _pipeline(self.coarse, st.index, st.base, st.base_norms,
                          self.ns_member if ns is not None else None,
-                         q, fb, ns, st.live_bits, k=k, nprobe=nprobe, r=r,
-                         scan_impl=self.config.scan_impl,
+                         q, fb, ns, st.live_bits, tau, k=k, nprobe=nprobe,
+                         r=r, scan_impl=self.config.scan_impl,
                          rerank_impl=self.config.rerank_impl,
-                         ef=self.config.ef)
+                         ef=self.config.ef,
+                         probe_policy=self.config.probe_policy,
+                         early_exit=self.config.early_exit)
 
     def search_jit(self, queries: jax.Array, k: int = 10, *,
                    nprobe: int | None = None, rerank_mult: int | None = None,
                    filter_bits: jax.Array | None = None,
-                   namespaces: jax.Array | None = None) -> SearchResult:
+                   namespaces: jax.Array | None = None,
+                   margin_tau: jax.Array | float | None = None
+                   ) -> SearchResult:
         """Batched ANN search, fused: the whole pipeline in one ``jax.jit``.
 
         Same semantics and bit-identical results to ``search``, but a single
@@ -760,25 +881,31 @@ class SearchEngine:
         ``core.coarse``'s are; a custom non-pytree object falls back to
         ``search``).
 
-        ``filter_bits``/``namespaces`` (see ``search``) are traced, not
-        static: the predicate VALUES never key the compile cache — only
-        their presence does (a None is absent from the pytree), so a stream
-        of distinct filters compiles at most once per presence combination.
+        ``filter_bits``/``namespaces``/``margin_tau`` (see ``search``) are
+        traced, not static: the predicate/budget VALUES never key the
+        compile cache — only their presence does (a None is absent from the
+        pytree), so a stream of distinct filters or per-request tau dials
+        compiles at most once per presence combination.
         """
         st = self._state  # ONE snapshot read: the whole search is one epoch
-        q, nprobe, r, fb, ns = self._resolve(queries, nprobe, rerank_mult,
-                                             filter_bits, namespaces, st)
+        q, nprobe, r, fb, ns, tau = self._resolve(
+            queries, nprobe, rerank_mult, filter_bits, namespaces, st,
+            margin_tau)
         if self.coarse_kind == "custom":
             # unknown coarse objects may not be jax pytrees => not traceable
             return self.search(queries, k, nprobe=nprobe, rerank_mult=r,
-                               filter_bits=fb, namespaces=ns)
+                               filter_bits=fb, namespaces=ns,
+                               margin_tau=margin_tau)
         return _fused_pipeline(self.coarse, st.index, st.base,
                                st.base_norms,
                                self.ns_member if ns is not None else None,
-                               q, fb, ns, st.live_bits, k=k, nprobe=nprobe,
-                               r=r, scan_impl=self.config.scan_impl,
+                               q, fb, ns, st.live_bits, tau, k=k,
+                               nprobe=nprobe, r=r,
+                               scan_impl=self.config.scan_impl,
                                rerank_impl=self.config.rerank_impl,
-                               ef=self.config.ef)
+                               ef=self.config.ef,
+                               probe_policy=self.config.probe_policy,
+                               early_exit=self.config.early_exit)
 
 
 def _coarse_kind_of(coarse) -> str:

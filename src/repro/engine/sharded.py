@@ -44,17 +44,19 @@ from repro.core.lists import (ListStore, filter_pass_sizes, pack_filter_mask,
                               partition_base, partition_filter,
                               partition_lists, round_robin_perm)
 from repro.engine import rerank as rerank_mod
-from repro.engine.engine import (EngineConfig, QueryStats, SearchEngine,
-                                 SearchResult, combine_filter_bits,
-                                 scan_candidates)
+from repro.engine.engine import (MARGIN_PROBE_FILL, EngineConfig, QueryStats,
+                                 SearchEngine, SearchResult,
+                                 combine_filter_bits, scan_candidates)
 from repro.kernels import ops as ops_mod
 
 AXIS = "shards"
 
 
 def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
-                  norms, member, q, fbits, live, ns, *, k: int, nprobe: int,
-                  r: int, scan_impl: str, rerank_impl: str, remap: bool):
+                  norms, member, q, fbits, live, ns, tau, *, k: int,
+                  nprobe: int, r: int, scan_impl: str, rerank_impl: str,
+                  remap: bool, probe_policy: str = "fixed",
+                  early_exit: bool = False):
     """One shard's pipeline + the cross-shard merge. Runs under a named axis.
 
     With ``remap=True`` the shard's list ids are *local* rows into its own
@@ -72,15 +74,29 @@ def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
     lists only; padding lists are member-False everywhere, and with every
     query unrestricted the mask is all-True so the selection is exactly
     ``smallest_k`` — bit-identical to the namespace-free driver.
+
+    Anytime knobs (docs/anytime.md): under ``probe_policy='margin'`` each
+    shard prunes against the best centroid among *its own* lists (``tau``
+    is the replicated traced margin width) — the margin is shard-local, so
+    a shard holding none of the query's near lists prunes almost
+    everything, which is exactly the work-skipping the policy wants.
+    ``early_exit`` arms the stream kernel's tile pruning per shard; both
+    counters are psum'd so the merged stats read as totals across shards,
+    like every other counter.
     """
     index = ivf_mod.IVFIndex(centroids=centroids, codebook=codebook, lists=lists)
     nprobe_local = min(nprobe, centroids.shape[0])
     coarse_d = pairwise_sqdist(q, centroids)
     if member is not None and ns is not None:
         allow = (ns < 0)[:, None] | member[jnp.maximum(ns, 0)]
-        _, probes = topk_mod.masked_topk(coarse_d, allow, nprobe_local)
+        cvals, probes = topk_mod.masked_topk(coarse_d, allow, nprobe_local)
     else:
-        _, probes = topk_mod.smallest_k(coarse_d, nprobe_local)
+        cvals, probes = topk_mod.smallest_k(coarse_d, nprobe_local)
+    if probe_policy == "margin":
+        probes, lists_pruned = topk_mod.margin_prune_probes(
+            cvals, probes, jnp.inf if tau is None else tau)
+    else:
+        lists_pruned = jnp.zeros((q.shape[0],), jnp.int32)
     # same stage function as the single-host engine, including its stream
     # routing: each shard's local ListStore already has the
     # (nlist_local, cap, M//2) layout the stream kernel scans in place, so a
@@ -89,9 +105,10 @@ def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
     # filter: ANDed in so the stream kernel's candidate budget skips them
     # before selection.
     eff = combine_filter_bits(fbits, live)
-    flat_d, flat_ids = scan_candidates(index, q, probes, scan_impl=scan_impl,
-                                       keep=(r * k) if r else k,
-                                       filter_bits=eff)
+    flat_d, flat_ids, tiles_skipped = scan_candidates(
+        index, q, probes, scan_impl=scan_impl, keep=(r * k) if r else k,
+        filter_bits=eff, early_exit=early_exit,
+        probe_fill=(MARGIN_PROBE_FILL if probe_policy == "margin" else 1.0))
     # re-rank (either impl) runs on the shard-local (R, D) base slice with
     # its precomputed local norms; local candidate ids map back to global
     # through gids only after the top-k, just before the merge
@@ -125,6 +142,8 @@ def _local_search(centroids, lists: ListStore, real, gids, codebook, base,
         reranked=jax.lax.psum(reranked, AXIS),
         rows_filtered=jax.lax.psum(rows_filtered, AXIS),
         rows_tombstoned=jax.lax.psum(rows_tombstoned, AXIS),
+        lists_pruned=jax.lax.psum(lists_pruned, AXIS),
+        tiles_skipped=jax.lax.psum(tiles_skipped, AXIS),
     )
     return mvals, mids, stats
 
@@ -564,6 +583,7 @@ class ShardedEngine:
                nprobe: int | None = None, rerank_mult: int | None = None,
                filter_bits: jax.Array | None = None,
                namespaces: jax.Array | None = None,
+               margin_tau: jax.Array | float | None = None,
                mesh: jax.sharding.Mesh | None = None) -> SearchResult:
         """Batched search with the distributed shard merge.
 
@@ -578,6 +598,11 @@ class ShardedEngine:
         slice of the membership table, so a tenant's query only ever probes
         (and only ever DMAs) the tenant's lists on every shard. See
         docs/filtering.md.
+
+        ``margin_tau`` (scalar or (Q,), replicated) overrides the config's
+        margin width for this request — only legal under the wrapped
+        engine's ``probe_policy='margin'`` (docs/anytime.md). Each shard
+        prunes against its own best centroid distance.
         """
         st = self._state  # ONE snapshot read: the whole search is one epoch
         q = queries[None] if queries.ndim == 1 else queries
@@ -586,6 +611,22 @@ class ShardedEngine:
         if r and st.base_s is None:
             raise ValueError("exact re-rank requested but engine holds no "
                              "base vectors (build with keep_base=True)")
+        if margin_tau is not None and self.config.probe_policy != "margin":
+            raise ValueError(
+                "margin_tau override given but probe_policy is "
+                f"{self.config.probe_policy!r}; build the wrapped engine "
+                "with EngineConfig(probe_policy='margin')")
+        if self.config.probe_policy == "margin":
+            tau = (self.config.margin_tau if margin_tau is None
+                   else margin_tau)
+            tau = jnp.asarray(tau, jnp.float32)
+            if tau.ndim not in (0, 1) or (tau.ndim == 1
+                                          and tau.shape != (q.shape[0],)):
+                raise ValueError(
+                    f"margin_tau must be a scalar or ({q.shape[0]},) per-"
+                    f"query widths, got shape {tau.shape}")
+        else:
+            tau = None
         if namespaces is not None:
             if self.member_s is None:
                 raise ValueError(
@@ -608,18 +649,20 @@ class ShardedEngine:
         fn = functools.partial(_local_search, k=k, nprobe=nprobe, r=r,
                                scan_impl=self.config.scan_impl,
                                rerank_impl=self.config.rerank_impl,
-                               remap=st.base_s is not None)
+                               remap=st.base_s is not None,
+                               probe_policy=self.config.probe_policy,
+                               early_exit=self.config.early_exit)
         base_ax = 0 if st.base_s is not None else None
 
         if mesh is None:
             # None args are empty pytrees: their in_axes entries are inert
             mvals, mids, stats = jax.vmap(
                 fn, in_axes=(0, 0, 0, 0, None, base_ax, base_ax, 0, None, 0,
-                             0, None),
+                             0, None, None),
                 axis_name=AXIS,
             )(st.centroids_s, st.lists_s, st.real_s, st.gids_s,
               self.codebook, st.base_s, st.norms_s, member_s, q, fbits_s,
-              st.live_s, namespaces)
+              st.live_s, namespaces, tau)
             # merge output is replicated across the shard axis; take shard 0
             return SearchResult(mvals[0], mids[0],
                                 QueryStats(*(s[0] for s in stats)))
@@ -633,7 +676,7 @@ class ShardedEngine:
                 f"engine holds {self.num_shards} shards")
 
         def per_device(cen, lists, real, gids, cb, base, norms, mem, qq, fb,
-                       lv, nss):
+                       lv, nss, tt):
             # each device owns exactly one shard => leading block dim is 1
             out_v, out_i, stt = fn(cen[0], jax.tree.map(lambda x: x[0], lists),
                                    real[0], gids[0], cb,
@@ -641,7 +684,7 @@ class ShardedEngine:
                                    None if norms is None else norms[0],
                                    None if mem is None else mem[0], qq,
                                    None if fb is None else fb[0],
-                                   None if lv is None else lv[0], nss)
+                                   None if lv is None else lv[0], nss, tt)
             return (out_v[None], out_i[None],
                     jax.tree.map(lambda x: x[None], stt))
 
@@ -649,7 +692,7 @@ class ShardedEngine:
         sharded = shard_map(
             per_device, mesh=mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), base_spec,
-                      base_spec, P(AXIS), P(), P(AXIS), P(AXIS), P()),
+                      base_spec, P(AXIS), P(), P(AXIS), P(AXIS), P(), P()),
             out_specs=(P(AXIS), P(AXIS), P(AXIS)),
             # jax has no replication rule for pallas_call (the 'stream'
             # scan/re-rank kernels); the merge replicates results itself via
@@ -659,5 +702,5 @@ class ShardedEngine:
         mvals, mids, stats = sharded(st.centroids_s, st.lists_s,
                                      st.real_s, st.gids_s, self.codebook,
                                      st.base_s, st.norms_s, member_s, q,
-                                     fbits_s, st.live_s, namespaces)
+                                     fbits_s, st.live_s, namespaces, tau)
         return SearchResult(mvals[0], mids[0], QueryStats(*(s[0] for s in stats)))

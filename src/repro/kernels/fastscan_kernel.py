@@ -62,7 +62,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pipeline import double_buffered_dma
+from repro.kernels.pipeline import double_buffered_dma, double_buffered_dma_gated
 
 # Default tile sizes. Lane dim multiples of 128, sublane multiples of 8
 # (f32/i32 VREG tile is 8x128). N tile of 1024 keeps the code tile
@@ -540,12 +540,146 @@ def _stream_topk_kernel(probe_ref, sizes_ref, table_ref, *rest,
         slots_ref[...] = jnp.full_like(slots_ref, -1)
 
 
+def _merge_smallest(cat: jax.Array, kc: int) -> jax.Array:
+    """Smallest kc of cat (1, W) f32 ascending, +inf = absent. Same iterative
+    min-extraction as ``_tile_topk`` but in the dequantized f32 domain the
+    early-exit threshold lives in."""
+    w = cat.shape[-1]
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, kc), 1)
+
+    def body(j, carry):
+        a, vals = carry
+        mn = jnp.min(a, axis=-1, keepdims=True)
+        am = jnp.argmin(a, axis=-1).astype(jnp.int32)[:, None]
+        vals = jnp.where(iota_k == j, mn, vals)
+        a = jnp.where(iota_n == am, jnp.float32(jnp.inf), a)
+        return a, vals
+
+    init = (cat, jnp.full((1, kc), jnp.inf, jnp.float32))
+    _, vals = jax.lax.fori_loop(0, kc, body, init)
+    return vals
+
+
+def _stream_topk_prune_kernel(probe_ref, sizes_ref, table_ref, bounds_ref,
+                              scales_ref, biases_ref, *rest, tile_n: int,
+                              kc: int, n_tiles: int, g: int, gpq: int,
+                              has_filter: bool):
+    """Early-exit variant of ``_stream_topk_kernel``: anytime tile pruning.
+
+    Extra operands (all (G,), SMEM — read as scalars, never tiled):
+      bounds_ref  f32 — per-group lower bound on any candidate's dequantized
+                  distance (``scale * sum_m min_j LUT[m, j] + bias``), the
+                  min possible ADC sum made comparable across a query's
+                  probes. Admissible by construction: the per-subquantizer
+                  minimum undercuts every real code, and ``a*x + b`` with
+                  ``a >= 0`` is monotone under f32 rounding.
+      scales_ref / biases_ref — the group's dequantization affine, the SAME
+                  expression downstream selection applies to the emitted
+                  quantized vals, so in-kernel threshold comparisons agree
+                  bitwise with the host-side ordering.
+
+    Extra scratch: ``run_ref`` (1, kc) f32 VMEM — running top-kc dequantized
+    distances of the *current query* (groups arrive query-major, ``gpq``
+    groups per query); ``thr_ref`` (1,) f32 SMEM — mirror of the running
+    kc-th best for scalar reads inside the DMA gate; ``latch_ref`` (2,) i32
+    SMEM — per-slot copy-issued flags for ``double_buffered_dma_gated``.
+
+    A tile is skipped when its group's bound can't beat the running kc-th
+    best: every candidate it could emit is >= bound >= threshold, and the
+    running set already holds kc candidates from earlier flat positions, so
+    with downstream's lowest-index tie-break the final top-kc is unchanged
+    (bit-identical for kc == keep). The decision is taken twice: once at
+    DMA-issue time through the latched gate (saving the copy itself — the
+    threshold only tightens afterwards, so a stale verdict is conservative),
+    and once fresh at compute time (saving the scan for tiles whose copy was
+    issued under a looser threshold). Tiles of the *next* query are always
+    copied — their query's threshold doesn't exist yet.
+
+    Third output ``skip_ref`` (1, 1) i32: 1 iff this (group, tile) held a
+    valid probe but was pruned (its emitted candidates are sentinels).
+    """
+    if has_filter:
+        (fbits_ref, codes_hbm, vals_ref, slots_ref, skip_ref,
+         scratch, sem, run_ref, thr_ref, latch_ref) = rest
+    else:
+        (codes_hbm, vals_ref, slots_ref, skip_ref,
+         scratch, sem, run_ref, thr_ref, latch_ref) = rest
+        fbits_ref = None
+    gi = pl.program_id(0)
+    ni = pl.program_id(1)
+    step = gi * n_tiles + ni
+    lid = probe_ref[gi]
+    total = g * n_tiles
+    qspan = gpq * n_tiles  # sequential steps belonging to one query
+
+    @pl.when(step % qspan == 0)
+    def _reset():  # first tile of a new query: no candidates seen yet
+        run_ref[...] = jnp.full_like(run_ref, jnp.inf)
+        thr_ref[0] = jnp.float32(jnp.inf)
+
+    start, wait, _ = _stream_dma_plan(
+        probe_ref, codes_hbm, scratch, sem,
+        tile_n=tile_n, n_tiles=n_tiles, total=total)
+
+    def want(s):
+        sc = jnp.minimum(s, total - 1)
+        gq = sc // n_tiles
+        ok = probe_ref[gq] >= 0
+        same_q = (gq // gpq) == (gi // gpq)
+        survives = bounds_ref[gq] < thr_ref[0]
+        return ok & (survives | ~same_q)
+
+    double_buffered_dma_gated(step, total, start, wait, want, latch_ref)
+
+    landed = latch_ref[step % 2] != 0
+    do_scan = landed & (bounds_ref[gi] < thr_ref[0])  # fresh re-check
+
+    @pl.when(do_scan)
+    def _scan():
+        codes = _unpack_nibbles_i32(scratch[step % 2])  # (tn, M)
+        t = table_ref[0].astype(jnp.int32)
+        acc = _select_tree_acc(t, codes)[None, :]  # (1, tn)
+        slot = (jax.lax.broadcasted_iota(jnp.int32, (1, tile_n), 1)
+                + ni * tile_n)
+        acc = jnp.where(slot < sizes_ref[lid], acc, ACC_SENTINEL)
+        if fbits_ref is not None:
+            fb = fbits_ref[...].astype(jnp.int32)  # (1, W)
+            bits = jnp.stack([(fb >> j) & 1 for j in range(8)],
+                             axis=-1).reshape(1, -1)
+            tile_bits = jax.lax.dynamic_slice(
+                bits, (0, ni * tile_n), (1, tile_n))
+            acc = jnp.where(tile_bits > 0, acc, ACC_SENTINEL)
+        vals, slots = _tile_topk(acc, ni * tile_n, kc)
+        vals_ref[...] = vals[:, None, :]
+        slots_ref[...] = slots[:, None, :]
+        skip_ref[...] = jnp.zeros_like(skip_ref)
+        # fold this tile's candidates into the query's running top-kc and
+        # tighten the threshold (the same affine downstream applies)
+        d = scales_ref[gi] * vals.astype(jnp.float32) + biases_ref[gi]
+        d = jnp.where(slots < 0, jnp.float32(jnp.inf), d)
+        merged = _merge_smallest(
+            jnp.concatenate([run_ref[...], d], axis=-1), kc)
+        run_ref[...] = merged
+        thr_ref[0] = merged[0, kc - 1]
+
+    @pl.when(~do_scan)
+    def _skip():  # invalid probe, or a tile the bound proved irrelevant
+        vals_ref[...] = jnp.full_like(vals_ref, ACC_SENTINEL)
+        slots_ref[...] = jnp.full_like(slots_ref, -1)
+        skip_ref[...] = jnp.full_like(skip_ref, (lid >= 0).astype(jnp.int32))
+
+
 def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
                                  probe_ids: jax.Array, sizes: jax.Array, *,
                                  kc: int, tile_n: int = TILE_N,
                                  filter_bits: jax.Array | None = None,
-                                 interpret: bool = True
-                                 ) -> tuple[jax.Array, jax.Array]:
+                                 interpret: bool = True,
+                                 early_exit: bool = False,
+                                 groups_per_query: int = 0,
+                                 scales: jax.Array | None = None,
+                                 biases: jax.Array | None = None
+                                 ) -> tuple[jax.Array, ...]:
     """Gather-free grouped ADC with fused candidate reduction + filtering.
 
     table_q8 (G, M, 16) u8; list_codes (nlist, cap, M//2) u8 in place;
@@ -568,6 +702,17 @@ def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
     full array (lowest slot wins) — and the predicate mask joins the
     occupancy mask *before* selection, so the filtered result is
     bit-identical to filtering the full accumulation after the fact.
+
+    With ``early_exit`` (anytime search, docs/anytime.md) the kernel also
+    prunes tiles whose group-level lower bound on any dequantized distance
+    can't beat the query's running kc-th best — skipping the tile's scan
+    and, when the verdict lands before the copy is issued, its DMA. Requires
+    ``groups_per_query`` (consecutive groups per query, > 0, dividing G) and
+    the per-group dequantization affine ``scales``/``biases`` ((G,) f32,
+    exactly what downstream selection applies). Returns a third array
+    ``skipped`` (G, n_tiles) i32, 1 per pruned valid-probe tile. The final
+    top-kc per query is bit-identical to the unpruned kernel; the raw
+    candidate pool is not (pruned tiles emit sentinels).
     """
     g, m, k = table_q8.shape
     nlist, cap, mh = list_codes.shape
@@ -580,6 +725,23 @@ def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
         pl.BlockSpec((1, m, 16), lambda gi, ni, pr, sz: (gi, 0, 0)),
     ]
     operands = [probe_ids, sizes, table_q8]
+    if early_exit:
+        assert groups_per_query > 0 and g % groups_per_query == 0, (
+            g, groups_per_query)
+        assert scales is not None and biases is not None
+        assert scales.shape == (g,) and biases.shape == (g,), (
+            scales.shape, biases.shape, g)
+        scales = scales.astype(jnp.float32)
+        biases = biases.astype(jnp.float32)
+        # Admissible per-group lower bound: the min possible ADC sum (each
+        # subquantizer contributes its smallest LUT entry), dequantized with
+        # the group's own affine so it is comparable across a query's probes.
+        acc_min = jnp.sum(jnp.min(table_q8.astype(jnp.int32), axis=-1),
+                          axis=-1)  # (G,)
+        bounds = scales * acc_min.astype(jnp.float32) + biases
+        for arr in (bounds, scales, biases):
+            in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+            operands.append(arr)
     if filter_bits is not None:
         w = filter_bits.shape[-1]
         assert filter_bits.shape == (g, w) and w * 8 >= cap, (
@@ -588,28 +750,44 @@ def fastscan_stream_topk_grouped(table_q8: jax.Array, list_codes: jax.Array,
         operands.append(filter_bits)
     in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
     operands.append(list_codes)
+    out_specs = [
+        pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
+        pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((g, n_tiles, kc), jnp.int32),
+        jax.ShapeDtypeStruct((g, n_tiles, kc), jnp.int32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((2, tile_n, mh), jnp.uint8),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    if early_exit:
+        out_specs.append(pl.BlockSpec((1, 1), lambda gi, ni, pr, sz: (gi, ni)))
+        out_shape.append(jax.ShapeDtypeStruct((g, n_tiles), jnp.int32))
+        scratch_shapes += [
+            pltpu.VMEM((1, kc), jnp.float32),   # running top-kc (dequant)
+            pltpu.SMEM((1,), jnp.float32),      # threshold mirror
+            pltpu.SMEM((2,), jnp.int32),        # DMA-issued latches
+        ]
+        kernel = functools.partial(
+            _stream_topk_prune_kernel, tile_n=tile_n, kc=kc,
+            n_tiles=n_tiles, g=g, gpq=groups_per_query,
+            has_filter=filter_bits is not None)
+    else:
+        kernel = functools.partial(_stream_topk_kernel, tile_n=tile_n, kc=kc,
+                                   n_tiles=n_tiles, g=g,
+                                   has_filter=filter_bits is not None)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(g, n_tiles),
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
-            pl.BlockSpec((1, 1, kc), lambda gi, ni, pr, sz: (gi, ni, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((2, tile_n, mh), jnp.uint8),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
     )
-    kernel = functools.partial(_stream_topk_kernel, tile_n=tile_n, kc=kc,
-                               n_tiles=n_tiles, g=g,
-                               has_filter=filter_bits is not None)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((g, n_tiles, kc), jnp.int32),
-            jax.ShapeDtypeStruct((g, n_tiles, kc), jnp.int32),
-        ],
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)

@@ -14,10 +14,12 @@ Impl registries — ONE source of truth, everything else derives from it:
   ``SCAN_IMPLS``     what callers may request: GROUPED_IMPLS + 'auto'.
 
 ``impl='auto'`` resolves to a concrete (impl, tile_n) via a one-time timed
-micro-sweep per ``('scan', backend, interpret, G, cap, M, nlist)`` signature
-(``resolve_grouped_impl``; ``nlist`` is in the key because the 'stream'
-candidate is timed against a real nlist-sized ListStore — its HBM strides,
-not an arange-probed G-list stand-in), cached process-wide — the analogue of
+micro-sweep per ``('scan', backend, interpret, G, cap, M, nlist,
+probe_fill)`` signature (``resolve_grouped_impl``; ``nlist`` is in the key
+because the 'stream' candidate is timed against a real nlist-sized
+ListStore — its HBM strides, not an arange-probed G-list stand-in;
+``probe_fill`` because an adaptive-nprobe workload presents sparse probe
+sets whose skipped DMAs change the verdict), cached process-wide — the analogue of
 the paper picking the widest SIMD unit per target CPU, done empirically per
 shape instead of hard-coded per arch. The exact re-rank stage has the same
 dispatch problem and shares the machinery: ``RERANK_IMPLS`` ('gathered' |
@@ -28,8 +30,9 @@ interpret, Q, R, D, k, N)`` in the same cache).
 inspection, mirroring ``engine.fused_cache_size``;
 ``save_autotune_cache()`` / ``load_autotune_cache()`` persist the resolved
 table to JSON so a serving fleet stops re-timing identical signatures on
-every boot (``ServingLoop(warmup_cache=...)``) — schema v2; v1 files load
-with their scan verdicts re-keyed to the G-list store they actually timed.
+every boot (``ServingLoop(warmup_cache=...)``) — schema v3; v1/v2 files
+load with their scan verdicts re-keyed to the store / probe density they
+actually timed (v1: nlist=g; v1+v2: probe_fill=1.0).
 """
 from __future__ import annotations
 
@@ -221,7 +224,8 @@ _fastscan_grouped_ref_jit = jax.jit(ref_mod.fastscan_grouped_ref)
 
 def resolve_scan_impl(impl: str, g: int, cap: int, m: int, *,
                       nlist: int | None = None,
-                      interpret: bool | None = None) -> tuple[str, int]:
+                      interpret: bool | None = None,
+                      probe_fill: float = 1.0) -> tuple[str, int]:
     """Resolve a requested scan impl to a concrete ``(impl, tile_n)``.
 
     Concrete impls pass through with tile 0 (shape-fit default); ``'auto'``
@@ -229,7 +233,12 @@ def resolve_scan_impl(impl: str, g: int, cap: int, m: int, *,
     ``'stream'``, letting callers that hold the codes in place
     (``core.ivf.scan_probes``) route to the gather-free path; such callers
     pass their store's ``nlist`` so the stream candidate is timed against
-    the strides it will really see. Shared by the single-host and sharded
+    the strides it will really see. ``probe_fill`` is the expected fraction
+    of *valid* probe slots: under adaptive pruning (docs/anytime.md) a
+    margin policy leaves many ``-1`` slots whose DMA the stream kernel
+    skips outright, so a sweep timed on dense probes would overstate the
+    stream cost — the sweep masks ``1 - probe_fill`` of its probes and the
+    verdict is keyed by the fill. Shared by the single-host and sharded
     pipelines so dispatch cannot drift.
     """
     if impl not in SCAN_IMPLS:
@@ -237,7 +246,8 @@ def resolve_scan_impl(impl: str, g: int, cap: int, m: int, *,
                          f"want one of {SCAN_IMPLS}")
     if impl != "auto":
         return impl, 0
-    tuned = resolve_grouped_impl(g, cap, m, nlist=nlist, interpret=interpret)
+    tuned = resolve_grouped_impl(g, cap, m, nlist=nlist, interpret=interpret,
+                                 probe_fill=probe_fill)
     return tuned.impl, tuned.tile_n
 
 
@@ -284,13 +294,18 @@ def fastscan_stream_grouped(table_q8: jax.Array, list_codes: jax.Array,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("keep", "tile_n", "interpret"))
+                   static_argnames=("keep", "tile_n", "interpret",
+                                    "early_exit", "groups_per_query"))
 def fastscan_stream_topk(table_q8: jax.Array, list_codes: jax.Array,
                          probe_ids: jax.Array, sizes: jax.Array, *,
                          keep: int, tile_n: int = 0,
                          filter_bits: jax.Array | None = None,
-                         interpret: bool | None = None
-                         ) -> tuple[jax.Array, jax.Array]:
+                         interpret: bool | None = None,
+                         early_exit: bool = False,
+                         groups_per_query: int = 0,
+                         scales: jax.Array | None = None,
+                         biases: jax.Array | None = None
+                         ) -> tuple[jax.Array, ...]:
     """Gather-free scan + fused candidate reduction over an in-place store.
 
     Like ``fastscan_stream_grouped`` but the full (G, cap) accumulation
@@ -305,6 +320,17 @@ def fastscan_stream_topk(table_q8: jax.Array, list_codes: jax.Array,
     code bytes at M=16) ever reach the kernel. Returns
     (vals (G, n_tiles, kc) i32, slots (G, n_tiles, kc) i32, -1 = absent —
     padding, filtered-out, or invalid probe).
+
+    With ``early_exit`` (plus ``groups_per_query`` > 0 dividing G and the
+    per-group dequantization affine ``scales``/``biases``, both (G,) f32)
+    the kernel additionally prunes tiles whose lower bound can't beat the
+    query's running kc-th best, and a third ``skipped`` (G, n_tiles) i32
+    array is returned (docs/anytime.md). Pruning is only armed when the
+    per-tile candidate width covers the full selection (``kc == keep``,
+    i.e. ``keep <= tile_n``) — otherwise the running kc-th best would be
+    tighter than the keep-th best the caller selects and the skip would
+    stop being lossless, so the kernel silently falls back to the unpruned
+    path (``skipped`` all zeros).
     """
     g, m, k = table_q8.shape
     cap = list_codes.shape[1]
@@ -321,6 +347,20 @@ def fastscan_stream_topk(table_q8: jax.Array, list_codes: jax.Array,
         # pre-gather each group's bitmap row; invalid probes (-1) clamp to
         # row 0 but their whole group is skipped inside the kernel anyway
         fb = filter_bits.astype(jnp.uint8)[jnp.maximum(probes, 0)]
+    if early_exit:
+        assert scales is not None and biases is not None, (
+            "early_exit requires the per-group dequantization affine")
+        if kc == keep and groups_per_query > 0 and g % groups_per_query == 0:
+            vals, slots, skipped = fk.fastscan_stream_topk_grouped(
+                table_q8, list_codes, probes, sizes.astype(jnp.int32), kc=kc,
+                tile_n=tn, filter_bits=fb, interpret=interp, early_exit=True,
+                groups_per_query=groups_per_query, scales=scales,
+                biases=biases)
+            return vals, slots, skipped
+        vals, slots = fk.fastscan_stream_topk_grouped(
+            table_q8, list_codes, probes, sizes.astype(jnp.int32), kc=kc,
+            tile_n=tn, filter_bits=fb, interpret=interp)
+        return vals, slots, jnp.zeros(vals.shape[:2], jnp.int32)
     return fk.fastscan_stream_topk_grouped(
         table_q8, list_codes, probes, sizes.astype(jnp.int32), kc=kc,
         tile_n=tn, filter_bits=fb, interpret=interp)
@@ -435,20 +475,27 @@ def _resolve_cached(sig: tuple, sweep_fn, *args) -> TunedScan:
 
 
 def resolve_grouped_impl(g: int, cap: int, m: int, *, nlist: int | None = None,
-                         interpret: bool | None = None) -> TunedScan:
+                         interpret: bool | None = None,
+                         probe_fill: float = 1.0) -> TunedScan:
     """Resolve ``impl='auto'`` for the grouped scan at one shape signature.
 
     Times every concrete impl (x its tile candidates) on synthetic data of
     the exact workload shape and caches the winner per
-    ``('scan', backend, interpret, G, cap, M, nlist)`` — one sweep per
-    signature per process (interpret mode is part of the key: a verdict
-    timed on the Pallas interpreter must never be reused for compiled
-    execution, or vice versa). ``nlist`` is the size of the in-place
-    ListStore the 'stream' candidate would scan: the sweep times it against
-    a store of that many lists with random probes, so the verdict reflects
-    real list-store strides rather than the arange-probed G-list stand-in
-    (``nlist=None`` keeps the gathered calling convention's G-list store —
-    what ``fastscan_grouped`` itself executes). The fixed-seed synthetic
+    ``('scan', backend, interpret, G, cap, M, nlist, probe_fill)`` — one
+    sweep per signature per process (interpret mode is part of the key: a
+    verdict timed on the Pallas interpreter must never be reused for
+    compiled execution, or vice versa). ``nlist`` is the size of the
+    in-place ListStore the 'stream' candidate would scan: the sweep times
+    it against a store of that many lists with random probes, so the
+    verdict reflects real list-store strides rather than the arange-probed
+    G-list stand-in (``nlist=None`` keeps the gathered calling convention's
+    G-list store — what ``fastscan_grouped`` itself executes).
+    ``probe_fill`` in (0, 1] is the expected valid-probe fraction: the
+    sweep masks ``1 - probe_fill`` of its probes to ``-1`` (evenly across
+    the sweep's queries), the workload an adaptive-nprobe policy actually
+    presents — the stream kernel skips those groups' DMAs while the
+    gathered impls still pay full freight, so a dense-probe sweep would
+    overstate the stream advantage's denominator. The fixed-seed synthetic
     data makes the sweep reproducible; the cache makes resolution
     deterministic for the life of the process (asserted in
     tests/test_kernels.py). A candidate that fails to build at this shape
@@ -457,12 +504,16 @@ def resolve_grouped_impl(g: int, cap: int, m: int, *, nlist: int | None = None,
     """
     interp = _default_interpret() if interpret is None else interpret
     nl = int(g if nlist is None else nlist)
-    sig = ("scan", jax.default_backend(), interp, int(g), int(cap), int(m), nl)
+    fill = round(float(probe_fill), 4)
+    if not 0.0 < fill <= 1.0:
+        raise ValueError(f"probe_fill must be in (0, 1], got {probe_fill}")
+    sig = ("scan", jax.default_backend(), interp, int(g), int(cap), int(m),
+           nl, fill)
     return _resolve_cached(sig, _run_grouped_sweep, int(g), int(cap), int(m),
-                           nl, interp)
+                           nl, fill, interp)
 
 
-def _run_grouped_sweep(g: int, cap: int, m: int, nlist: int,
+def _run_grouped_sweep(g: int, cap: int, m: int, nlist: int, fill: float,
                        interp: bool) -> TunedScan:
     rng = np.random.default_rng(0)
     # plain numpy on purpose: jnp.asarray under an ambient trace would make
@@ -474,6 +525,15 @@ def _run_grouped_sweep(g: int, cap: int, m: int, nlist: int,
     # random probes — the strides scan_probes actually drives it with
     store = rng.integers(0, 256, (nlist, cap, m // 2), dtype=np.uint8)
     probes = rng.integers(0, nlist, (g,), dtype=np.int32)
+    if fill < 1.0:
+        # representative adaptive-probe mix: prune a deterministic
+        # 1-fill fraction of slots to the -1 sentinel, spread evenly so
+        # the stream kernel's skip pattern matches a margin policy's
+        # (some groups per query dropped) rather than a dead prefix
+        n_prune = min(g - 1, int(round(g * (1.0 - fill))))
+        if n_prune > 0:
+            pruned_idx = np.linspace(0, g - 1, n_prune).astype(np.int64)
+            probes[pruned_idx] = -1
     sweep = []
     for impl in GROUPED_IMPLS:
         if impl == "ref":
@@ -511,36 +571,55 @@ def _run_grouped_sweep(g: int, cap: int, m: int, nlist: int,
     return tuned
 
 
-# cap on the synthetic base built for the re-rank sweep. The real N stays
-# in the verdict KEY (two engines with identical (Q, R, D, k) but different
-# base sizes must never share a verdict), but building a multi-million-row
-# synthetic copy would cost more than the sweep measures, so beyond the cap
-# the timing runs on a 64k-row stand-in. What actually varies with N for
-# fixed R is row-gather cache locality, and at 64k x 128 f32 (~32 MB) the
-# stand-in already misses on-chip caches like a large table does — still,
-# verdicts for N far beyond the cap deserve re-measurement on real HBM
-# (ROADMAP).
+# Default cap on the synthetic base built for the re-rank sweep. The real N
+# stays in the verdict KEY (two engines with identical (Q, R, D, k) but
+# different base sizes must never share a verdict), but building a
+# multi-million-row synthetic copy would cost more than the sweep measures,
+# so beyond the cap the timing runs on a 64k-row stand-in. What actually
+# varies with N for fixed R is row-gather cache locality, and at 64k x 128
+# f32 (~32 MB) the stand-in already misses on-chip caches like a large table
+# does. Real-TPU deployments that want the sweep to touch genuine multi-
+# million-row strides raise the cap via the REPRO_RERANK_SWEEP_N_CAP env var
+# or the ``sweep_n_cap`` kwarg (docs/kernels.md).
 _RERANK_SWEEP_N_CAP = 65536
 
 
+def _rerank_sweep_n_cap() -> int:
+    """Effective sweep cap: ``REPRO_RERANK_SWEEP_N_CAP`` env override (>= 1)
+    falling back to ``_RERANK_SWEEP_N_CAP``. Read at resolve time, so tests
+    and long-lived servers can retarget without a restart."""
+    raw = os.environ.get("REPRO_RERANK_SWEEP_N_CAP", "")
+    try:
+        cap = int(raw)
+    except ValueError:
+        return _RERANK_SWEEP_N_CAP
+    return cap if cap >= 1 else _RERANK_SWEEP_N_CAP
+
+
 def resolve_rerank_impl(q: int, r: int, d: int, k: int, n: int, *,
-                        interpret: bool | None = None) -> TunedScan:
+                        interpret: bool | None = None,
+                        sweep_n_cap: int | None = None) -> TunedScan:
     """Resolve ``rerank_impl='auto'`` at one (Q, R, D, k, N) re-rank
     signature (N = base-row count).
 
     Times the gathered norms+GEMM fallback against the streaming kernel
     (x its chunk-tile candidates) on synthetic data of the workload shape
-    (base rows capped at ``_RERANK_SWEEP_N_CAP``) and caches the verdict
-    per ``('rerank', backend, interpret, Q, R, D, k, N)`` in the same
-    process-wide table (and the same persisted JSON) as the scan verdicts.
-    Both candidates are bit-identical, so the verdict is purely a
-    performance choice — 'gathered' always survives as the fallback.
+    (base rows capped at ``sweep_n_cap``, defaulting to the
+    ``REPRO_RERANK_SWEEP_N_CAP`` env var then ``_RERANK_SWEEP_N_CAP``) and
+    caches the verdict per ``('rerank', backend, interpret, Q, R, D, k, N)``
+    in the same process-wide table (and the same persisted JSON) as the
+    scan verdicts. The cap shapes only the synthetic stand-in's size, never
+    the key, so re-resolving with a bigger cap requires clearing the cached
+    verdict first (``clear_autotune_cache(n=...)``). Both candidates are
+    bit-identical, so the verdict is purely a performance choice —
+    'gathered' always survives as the fallback.
     """
     interp = _default_interpret() if interpret is None else interpret
+    cap = _rerank_sweep_n_cap() if sweep_n_cap is None else max(1, int(sweep_n_cap))
     sig = ("rerank", jax.default_backend(), interp, int(q), int(r), int(d),
            int(k), int(n))
     return _resolve_cached(sig, _run_rerank_sweep, int(q), int(r), int(d),
-                           int(k), int(n), interp)
+                           int(k), int(n), cap, interp)
 
 
 def _rerank_tile_candidates(r: int) -> tuple[int, ...]:
@@ -550,12 +629,12 @@ def _rerank_tile_candidates(r: int) -> tuple[int, ...]:
     return tuple(sorted({fit} | {t for t in (16, 32) if t < fit}))
 
 
-def _run_rerank_sweep(q: int, r: int, d: int, k: int, n: int,
+def _run_rerank_sweep(q: int, r: int, d: int, k: int, n: int, n_cap: int,
                       interp: bool) -> TunedScan:
     from repro.engine import rerank as rerank_mod  # lazy: engine -> ops
 
     rng = np.random.default_rng(0)
-    n_sweep = max(r, min(n, _RERANK_SWEEP_N_CAP))
+    n_sweep = max(r, min(n, n_cap))
     base = rng.standard_normal((n_sweep, d), dtype=np.float32)
     norms = np.sum(base * base, axis=-1)
     queries = rng.standard_normal((q, d), dtype=np.float32)
@@ -590,7 +669,7 @@ def _run_rerank_sweep(q: int, r: int, d: int, k: int, n: int,
 
 def autotune_cache() -> dict[tuple, TunedScan]:
     """Snapshot of the process-wide autotune cache, keyed by
-    ('scan', backend, interpret, G, cap, M, nlist) and
+    ('scan', backend, interpret, G, cap, M, nlist, probe_fill) and
     ('rerank', backend, interpret, Q, R, D, k, N). For inspection/metrics —
     mutations don't stick."""
     return dict(_AUTOTUNE_CACHE)
@@ -628,7 +707,7 @@ def clear_autotune_cache(kind: str | None = None, *, nlist: int | None = None,
             if kind is not None and key[0] != kind:
                 continue
             if key[0] == "scan":
-                # ('scan', backend, interpret, G, cap, M, nlist)
+                # ('scan', backend, interpret, G, cap, M, nlist, probe_fill)
                 if n is not None:
                     continue
                 if nlist is not None and key[6] != nlist:
@@ -647,21 +726,22 @@ def clear_autotune_cache(kind: str | None = None, *, nlist: int | None = None,
         return len(doomed)
 
 
-_AUTOTUNE_SCHEMA = "repro.autotune/v2"
+_AUTOTUNE_SCHEMA = "repro.autotune/v3"
+_AUTOTUNE_SCHEMA_V2 = "repro.autotune/v2"
 _AUTOTUNE_SCHEMA_V1 = "repro.autotune/v1"
 
 
 def save_autotune_cache(path: str) -> int:
     """Serialize the resolved TunedScan table to JSON at ``path``.
 
-    Returns the number of entries written. Schema v2: each entry carries a
+    Returns the number of entries written. Schema v3: each entry carries a
     ``kind`` ('scan' | 'rerank') plus its kind's full key dims (scan:
-    backend/interpret/g/cap/m/nlist; rerank: backend/interpret/q/r/d/k/n), so
-    one file can hold both stages' verdicts for several backends;
-    ``load_autotune_cache`` re-keys them verbatim and lookups still only
-    ever hit the running backend's signatures. A serving fleet saves after
-    its first warmup and ships the file to every replica
-    (``ServingLoop(warmup_cache=...)``).
+    backend/interpret/g/cap/m/nlist/probe_fill; rerank:
+    backend/interpret/q/r/d/k/n), so one file can hold both stages'
+    verdicts for several backends; ``load_autotune_cache`` re-keys them
+    verbatim and lookups still only ever hit the running backend's
+    signatures. A serving fleet saves after its first warmup and ships the
+    file to every replica (``ServingLoop(warmup_cache=...)``).
     """
     with _AUTOTUNE_LOCK:  # a concurrent sweep may be inserting its verdict
         snapshot = dict(_AUTOTUNE_CACHE)
@@ -669,9 +749,10 @@ def save_autotune_cache(path: str) -> int:
     for key, t in snapshot.items():
         timings = [[name, us] for name, us in t.timings_us]
         if key[0] == "scan":
-            _, b, i, g, c, m, nl = key
+            _, b, i, g, c, m, nl, fill = key
             entries.append({"kind": "scan", "backend": b, "interpret": bool(i),
                             "g": g, "cap": c, "m": m, "nlist": nl,
+                            "probe_fill": fill,
                             "impl": t.impl, "tile_n": t.tile_n,
                             "timings_us": timings})
         else:
@@ -691,13 +772,15 @@ def load_autotune_cache(path: str) -> int:
 
     Returns the number of entries adopted. Missing file, wrong schema, or
     malformed JSON load nothing (0) — a stale or absent warmup cache must
-    never stop a boot, it just means the sweeps run again. v1 files (no
-    ``kind``, no ``nlist``) migrate gracefully: their scan verdicts are
-    re-keyed to ``nlist=g`` — the arange-probed G-list store that sweep
-    actually timed — so they only ever satisfy lookups for the shapes they
-    measured. Entries naming an impl that no longer exists are skipped
-    (stale file from an older build); entries already resolved in this
-    process keep their in-process verdict.
+    never stop a boot, it just means the sweeps run again. Older schemas
+    migrate gracefully: v1 files (no ``kind``, no ``nlist``) re-key their
+    scan verdicts to ``nlist=g`` — the arange-probed G-list store that
+    sweep actually timed — and both v1 and v2 files (no ``probe_fill``)
+    re-key to ``probe_fill=1.0``, the dense-probe sweep they ran, so they
+    only ever satisfy lookups for the workloads they measured. Entries
+    naming an impl that no longer exists are skipped (stale file from an
+    older build); entries already resolved in this process keep their
+    in-process verdict.
     """
     if not os.path.exists(path):
         return 0
@@ -707,7 +790,7 @@ def load_autotune_cache(path: str) -> int:
     except (OSError, json.JSONDecodeError):
         return 0
     if not isinstance(data, dict) or data.get("schema") not in (
-            _AUTOTUNE_SCHEMA, _AUTOTUNE_SCHEMA_V1):
+            _AUTOTUNE_SCHEMA, _AUTOTUNE_SCHEMA_V2, _AUTOTUNE_SCHEMA_V1):
         return 0
     loaded = 0
     with _AUTOTUNE_LOCK:
@@ -718,7 +801,8 @@ def load_autotune_cache(path: str) -> int:
                     g = int(e["g"])
                     key = ("scan", str(e["backend"]), bool(e["interpret"]),
                            g, int(e["cap"]), int(e["m"]),
-                           int(e.get("nlist", g)))  # v1: the G-list store
+                           int(e.get("nlist", g)),  # v1: the G-list store
+                           round(float(e.get("probe_fill", 1.0)), 4))
                     known = GROUPED_IMPLS
                 elif kind == "rerank":
                     key = ("rerank", str(e["backend"]), bool(e["interpret"]),

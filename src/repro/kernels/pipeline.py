@@ -64,3 +64,55 @@ def double_buffered_dma(step, total: int, start, wait, valid) -> None:
     @pl.when(valid(step))
     def _land():
         wait(step, step % 2)
+
+
+def double_buffered_dma_gated(step, total: int, start, wait, want,
+                              latch) -> None:
+    """Two-slot pipeline whose skip predicate may change between steps.
+
+    ``double_buffered_dma`` evaluates ``valid(s)`` independently at the
+    start-issue site (step ``s - 1``) and the wait site (step ``s``). That is
+    only sound when the predicate is a pure function of ``s``. An early-exit
+    kernel's skip decision also reads a *mutable* threshold (the running
+    k-th-best distance), which can tighten between those two evaluations —
+    the wait would then see ``False`` for a copy that was actually issued,
+    leaking an unconsumed DMA semaphore signal into the next step that reuses
+    the slot.
+
+    This variant evaluates ``want(s)`` exactly once, at the moment step
+    ``s``'s copy would be issued, and records the verdict in ``latch`` (SMEM
+    scratch, shape (2,), i32, indexed by ``s % 2``). The wait site consults
+    the latch, never the predicate, so every started copy is waited and every
+    skipped copy stays skipped — the slots cannot desync no matter how the
+    threshold moves. ``want`` must still clamp indexing on ``s`` (evaluated
+    for ``s`` up to ``total``). Skips based on a stale-but-monotone threshold
+    are conservative: the threshold only tightens, so a copy issued under an
+    older looser threshold is merely wasted bandwidth, never a correctness
+    hazard; the caller re-checks the fresh bound before computing.
+
+    Returns nothing; after it, ``latch[step % 2] != 0`` iff step ``step``'s
+    data is resident in slot ``step % 2``.
+    """
+    nxt = step + 1
+
+    @pl.when(step == 0)
+    def _prime():  # decide + issue (or latch the skip of) the first copy
+        w = want(step)
+        latch[0] = w.astype(latch.dtype)
+
+        @pl.when(w)
+        def _go():
+            start(step, 0)
+
+    @pl.when(nxt < total)
+    def _prefetch():
+        w = want(nxt)
+        latch[nxt % 2] = w.astype(latch.dtype)
+
+        @pl.when(w)
+        def _go():
+            start(nxt, nxt % 2)
+
+    @pl.when(latch[step % 2] != 0)
+    def _land():
+        wait(step, step % 2)

@@ -59,6 +59,10 @@ class ServeResult(NamedTuple):
     reranked: int
     rows_filtered: int    # probed rows the loop's filter excluded (0 if none)
     rows_tombstoned: int  # probed slots holding tombstones (0 if none)
+    lists_pruned: int     # coarse probes the margin policy dropped (0 under
+    #                       probe_policy='fixed' — docs/anytime.md)
+    tiles_skipped: int    # scan tiles the early-exit bound skipped (0
+    #                       without early_exit)
     latency_s: float      # submit -> results on host
 
 
@@ -77,6 +81,10 @@ class LoopMetrics(NamedTuple):
     #                        signature)
     epoch: int             # the engine's mutation epoch at snapshot time
     rows_tombstoned: int   # probed tombstone slots summed over served rows
+    lists_pruned: int      # margin-pruned probes summed over served rows
+    tiles_skipped: int     # early-exited scan tiles summed over served rows
+    auto_compactions: int  # compactions the loop's tombstone-ratio policy
+    #                        triggered itself (0 with compact_at=None)
 
 
 class ServingLoop:
@@ -94,8 +102,27 @@ class ServingLoop:
                  nprobe: int | None = None, rerank_mult: int | None = None,
                  stats: StatsRegistry | None = None,
                  warmup_cache: str | None = None,
-                 filter_bits=None):
+                 filter_bits=None,
+                 margin_tau: float | None = None,
+                 compact_at: float | None = None):
         self.engine = engine
+        # per-loop margin width override (docs/anytime.md): traced, so two
+        # loops over one engine can serve different latency tiers without
+        # extra compiles. Only legal when the engine's probe_policy='margin'.
+        if margin_tau is not None and engine.config.probe_policy != "margin":
+            raise ValueError(
+                "margin_tau given but the engine's probe_policy is "
+                f"{engine.config.probe_policy!r}; build it with "
+                "EngineConfig(probe_policy='margin')")
+        self.margin_tau = None if margin_tau is None else float(margin_tau)
+        # auto-compaction policy (docs/mutability.md): when the engine's
+        # tombstone count reaches this fraction of total occupancy, the
+        # dispatch thread runs compact() between batches. None = never
+        # (the default — compaction stays an explicit operator action).
+        if compact_at is not None and not 0.0 < compact_at <= 1.0:
+            raise ValueError(
+                f"compact_at must be in (0, 1], got {compact_at}")
+        self.compact_at = None if compact_at is None else float(compact_at)
         # loop-level attribute filter: a (nlist, W) packed bitmap applied to
         # every dispatched batch (docs/filtering.md). Swap it atomically with
         # ``set_filter`` on attribute epoch changes — the values are traced,
@@ -125,6 +152,9 @@ class ServingLoop:
         self._compiles = 0
         self._autotuned = 0
         self._rows_tombstoned = 0
+        self._lists_pruned = 0
+        self._tiles_skipped = 0
+        self._auto_compactions = 0
         self._dim = int(engine.index.centroids.shape[1])
 
     # -- lifecycle ----------------------------------------------------------
@@ -290,6 +320,9 @@ class ServingLoop:
                 autotuned=self._autotuned,
                 epoch=self.engine.epoch,
                 rows_tombstoned=self._rows_tombstoned,
+                lists_pruned=self._lists_pruned,
+                tiles_skipped=self._tiles_skipped,
+                auto_compactions=self._auto_compactions,
             )
 
     # -- dispatch thread -----------------------------------------------------
@@ -305,6 +338,34 @@ class ServingLoop:
                 for r in reqs:
                     if not r.future.done():
                         r.future.set_exception(e)
+                continue
+            self._maybe_compact()
+
+    def _maybe_compact(self) -> None:
+        """Auto-compaction: runs on the dispatch thread BETWEEN batches.
+
+        With ``compact_at`` set, compact once the tombstone count reaches
+        that fraction of the store's total occupancy (watermark slots). The
+        check is host-side ints off the engine snapshot — no device sync —
+        and the compact itself is the same epoch swap an operator-issued one
+        is, so the next dispatch simply reads the fresh epoch. A failed
+        compaction is swallowed (and not counted): a compaction hiccup must
+        never take the serving thread down with it.
+        """
+        if self.compact_at is None:
+            return
+        tomb = self.engine.n_tombstones
+        if not tomb:
+            return
+        occupancy = int(np.asarray(self.engine.index.lists.sizes).sum())
+        if tomb / max(1, occupancy) < self.compact_at:
+            return
+        try:
+            self.engine.compact()
+        except Exception:
+            return  # a compaction hiccup must not kill the dispatch thread
+        with self._lock:
+            self._auto_compactions += 1
 
     def _call_engine(self, q, k: int, namespaces=None):
         """search_jit + per-loop compile/autotune attribution (cache deltas
@@ -324,7 +385,8 @@ class ServingLoop:
         res = self.engine.search_jit(q, k, nprobe=self.nprobe,
                                      rerank_mult=self.rerank_mult,
                                      filter_bits=self.filter_bits,
-                                     namespaces=namespaces)
+                                     namespaces=namespaces,
+                                     margin_tau=self.margin_tau)
         with self._lock:
             self._compiles += fused_cache_size() - c0
             self._autotuned += autotune_cache_size() - a0
@@ -348,6 +410,8 @@ class ServingLoop:
         rr = np.asarray(res.stats.reranked)
         rf = np.asarray(res.stats.rows_filtered)
         rt = np.asarray(res.stats.rows_tombstoned)
+        pr = np.asarray(res.stats.lists_pruned)
+        ts = np.asarray(res.stats.tiles_skipped)
         t_done = time.monotonic()
         lats = [t_done - r.t_submit for r in reqs]
 
@@ -356,14 +420,17 @@ class ServingLoop:
                 dists=dists[i], ids=ids[i], lists_probed=int(lp[i]),
                 codes_scanned=int(cs[i]), reranked=int(rr[i]),
                 rows_filtered=int(rf[i]), rows_tombstoned=int(rt[i]),
+                lists_pruned=int(pr[i]), tiles_skipped=int(ts[i]),
                 latency_s=lats[i]))
         # padding rows [n:] are dropped on the floor here — accounting and
         # callers only ever see rows [:n]
         self.stats.record_batch([r.tenant for r in reqs], lp[:n], cs[:n],
-                                rr[:n], lats, rf[:n], rt[:n])
+                                rr[:n], lats, rf[:n], rt[:n], pr[:n], ts[:n])
         with self._lock:
             self._batches += 1
             self._rows_served += n
             self._rows_padded += bucket - n
             self._rows_tombstoned += int(rt[:n].sum())
+            self._lists_pruned += int(pr[:n].sum())
+            self._tiles_skipped += int(ts[:n].sum())
             self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1

@@ -35,6 +35,12 @@ class TenantStats:
     rows_tombstoned: int = 0    # sum of QueryStats.rows_tombstoned (probed
     #                             slots holding deleted rows; 0 while the
     #                             index carries no tombstones)
+    lists_pruned: int = 0       # sum of QueryStats.lists_pruned (coarse
+    #                             probes the margin policy dropped; 0 under
+    #                             probe_policy='fixed' — docs/anytime.md)
+    tiles_skipped: int = 0      # sum of QueryStats.tiles_skipped (scan tiles
+    #                             the early-exit bound proved irrelevant; 0
+    #                             without early_exit)
     latency_sum_s: float = 0.0  # submit -> result, summed
     latency_max_s: float = 0.0
 
@@ -63,13 +69,16 @@ class StatsRegistry:
                      codes_scanned: np.ndarray, reranked: np.ndarray,
                      latencies_s: Iterable[float],
                      rows_filtered: np.ndarray | None = None,
-                     rows_tombstoned: np.ndarray | None = None) -> None:
+                     rows_tombstoned: np.ndarray | None = None,
+                     lists_pruned: np.ndarray | None = None,
+                     tiles_skipped: np.ndarray | None = None) -> None:
         """Fold one batch's per-row counters into the per-tenant aggregates.
 
         tenants / latencies_s: one entry per *real* row of the batch, aligned
-        with the stat arrays (each (Q_real,)). ``rows_filtered`` and
-        ``rows_tombstoned`` are optional (trailing, defaulted) so
-        pre-filtering / pre-mutability callers keep working.
+        with the stat arrays (each (Q_real,)). ``rows_filtered`` /
+        ``rows_tombstoned`` / ``lists_pruned`` / ``tiles_skipped`` are
+        optional (trailing, defaulted) so pre-filtering / pre-mutability /
+        pre-anytime callers keep working.
         """
         with self._lock:
             seen: set[str] = set()
@@ -85,6 +94,10 @@ class StatsRegistry:
                     st.rows_filtered += int(rows_filtered[i])
                 if rows_tombstoned is not None:
                     st.rows_tombstoned += int(rows_tombstoned[i])
+                if lists_pruned is not None:
+                    st.lists_pruned += int(lists_pruned[i])
+                if tiles_skipped is not None:
+                    st.tiles_skipped += int(tiles_skipped[i])
                 st.latency_sum_s += float(lat)
                 st.latency_max_s = max(st.latency_max_s, float(lat))
                 if tenant not in seen:

@@ -80,5 +80,40 @@ rf_m = sh.search(q, 10, filter_bits=fb, mesh=mesh)
 rf_v = sh.search(q, 10, filter_bits=fb)
 np.testing.assert_array_equal(np.asarray(rf_m.ids), np.asarray(rf_v.ids))
 
+# anytime path over the mesh (docs/anytime.md): margin policy + in-kernel
+# early exit through the stream scan — drivers must agree on results AND the
+# pruned/skipped counters, and tau=inf must match a fixed-policy engine
+cfg_any = EngineConfig(nprobe=2, rerank_mult=4, scan_impl="stream",
+                       probe_policy="margin", early_exit=True)
+eng_any = SearchEngine.build(jax.random.PRNGKey(0), jnp.asarray(ds.train),
+                             jnp.asarray(ds.base), m=8, nlist=16,
+                             config=cfg_any, coarse_iters=4, pq_iters=4)
+sh_any = ShardedEngine(eng_any, S)
+for tau in (float("inf"), 0.2):
+    ra_m = sh_any.search(q, 10, margin_tau=tau, mesh=mesh)
+    ra_v = sh_any.search(q, 10, margin_tau=tau)
+    np.testing.assert_array_equal(np.asarray(ra_m.ids), np.asarray(ra_v.ids),
+                                  err_msg=f"anytime tau={tau}")
+    np.testing.assert_array_equal(np.asarray(ra_m.dists),
+                                  np.asarray(ra_v.dists),
+                                  err_msg=f"anytime tau={tau}")
+    for a, b in zip(ra_m.stats, ra_v.stats):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"anytime stats tau={tau}")
+cfg_fix = EngineConfig(nprobe=2, rerank_mult=4, scan_impl="stream")
+eng_fix = SearchEngine.build(jax.random.PRNGKey(0), jnp.asarray(ds.train),
+                             jnp.asarray(ds.base), m=8, nlist=16,
+                             config=cfg_fix, coarse_iters=4, pq_iters=4)
+sh_fix = ShardedEngine(eng_fix, S)
+r_fix = sh_fix.search(q, 10, mesh=mesh)
+r_inf = sh_any.search(q, 10, margin_tau=float("inf"), mesh=mesh)
+np.testing.assert_array_equal(np.asarray(r_inf.ids), np.asarray(r_fix.ids))
+np.testing.assert_array_equal(np.asarray(r_inf.dists),
+                              np.asarray(r_fix.dists))
+assert (np.asarray(r_inf.stats.lists_pruned) == 0).all()
+r_tight = sh_any.search(q, 10, margin_tau=0.0, mesh=mesh)
+assert (np.asarray(r_tight.stats.lists_pruned) > 0).any(), \
+    "tau=0 pruned nothing across 8 shards"
+
 print("OK")
 sys.exit(0)

@@ -188,7 +188,7 @@ def test_auto_resolves_deterministically_and_caches():
         # scan keys carry the store size the stream candidate was timed
         # against; the gathered signature defaults to nlist=G (its own store)
         key = ("scan", jax.default_backend(), ops._default_interpret(),
-               g, cap, 2 * mh, g)
+               g, cap, 2 * mh, g, 1.0)
         assert ops.autotune_cache()[key] is tuned1
     finally:
         ops.clear_autotune_cache()

@@ -571,15 +571,16 @@ def test_clear_autotune_cache_selective():
     try:
         ops_mod._AUTOTUNE_CACHE.clear()
         ops_mod._AUTOTUNE_CACHE.update({
-            ("scan", "cpu", False, 8, 512, 8, 64): "a",
-            ("scan", "cpu", False, 8, 1024, 8, 64): "b",
-            ("scan", "cpu", False, 8, 512, 8, 128): "c",
+            ("scan", "cpu", False, 8, 512, 8, 64, 1.0): "a",
+            ("scan", "cpu", False, 8, 1024, 8, 64, 1.0): "b",
+            ("scan", "cpu", False, 8, 512, 8, 128, 0.5): "c",
             ("rerank", "cpu", False, 8, 40, 32, 10, 3000): "d",
             ("rerank", "cpu", False, 8, 40, 32, 10, 4096): "e",
         })
         # cap matcher touches only scan keys with that cap
         assert ops_mod.clear_autotune_cache(cap=512) == 2
-        assert ("scan", "cpu", False, 8, 1024, 8, 64) in ops_mod._AUTOTUNE_CACHE
+        assert ("scan", "cpu", False, 8, 1024, 8, 64, 1.0) in \
+            ops_mod._AUTOTUNE_CACHE
         assert len(ops_mod._AUTOTUNE_CACHE) == 3
         # n matcher touches only rerank keys with that N
         assert ops_mod.clear_autotune_cache(n=3000) == 1

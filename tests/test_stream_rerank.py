@@ -337,7 +337,7 @@ def test_resolve_rerank_impl_sweeps_both_and_caches():
         ops.clear_autotune_cache()
 
 
-def test_autotune_v2_roundtrips_scan_and_rerank_entries(tmp_path):
+def test_autotune_roundtrips_scan_and_rerank_entries(tmp_path):
     path = str(tmp_path / "tuned.json")
     ops.clear_autotune_cache()
     try:
@@ -346,7 +346,7 @@ def test_autotune_v2_roundtrips_scan_and_rerank_entries(tmp_path):
         assert ops.save_autotune_cache(path) == 2
         with open(path) as f:
             data = json.load(f)
-        assert data["schema"] == "repro.autotune/v2"
+        assert data["schema"] == "repro.autotune/v3"
         kinds = {e["kind"] for e in data["entries"]}
         assert kinds == {"scan", "rerank"}
         assert all("nlist" in e for e in data["entries"]
@@ -378,7 +378,7 @@ def test_autotune_v1_files_migrate_gracefully(tmp_path):
     try:
         assert ops.load_autotune_cache(str(v1)) == 1
         (key,) = ops.autotune_cache().keys()
-        assert key == ("scan", jax.default_backend(), True, 3, 64, 4, 3)
+        assert key == ("scan", jax.default_backend(), True, 3, 64, 4, 3, 1.0)
         # the migrated verdict is a hit for the shape it measured...
         tuned = ops.resolve_grouped_impl(3, 64, 4, interpret=True)
         assert tuned.impl == "ref" and ops.autotune_cache_size() == 1

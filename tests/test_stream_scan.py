@@ -248,15 +248,17 @@ def test_scan_candidates_keep_routes_stream_to_reduced_pool():
     index, _ = _synth_index(5, 64, 8, seed=9)
     q = _queries(index, 2)
     probes = jnp.asarray(np.array([[0, 2], [4, 1]], np.int32))
-    full_d, full_i = scan_candidates(index, q, probes, scan_impl="ref",
-                                     keep=5)
-    red_d, red_i = scan_candidates(index, q, probes, scan_impl="stream",
-                                   keep=5)
+    full_d, full_i, full_ts = scan_candidates(index, q, probes,
+                                              scan_impl="ref", keep=5)
+    red_d, red_i, _ = scan_candidates(index, q, probes, scan_impl="stream",
+                                      keep=5)
     assert full_d.shape[1] == 2 * 64
     assert red_d.shape[1] < full_d.shape[1]
+    # the tiles-skipped counter is all zeros without early_exit
+    np.testing.assert_array_equal(np.asarray(full_ts), 0)
     # both pools contain the same top-5 (checked end-to-end elsewhere);
     # keep=None falls back to the full pool under every impl
-    s_d, s_i = scan_candidates(index, q, probes, scan_impl="stream")
+    s_d, s_i, _ = scan_candidates(index, q, probes, scan_impl="stream")
     assert s_d.shape == full_d.shape
     valid = np.asarray(full_i) >= 0
     np.testing.assert_array_equal(np.asarray(s_i), np.asarray(full_i))

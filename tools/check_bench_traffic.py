@@ -3,8 +3,13 @@
 Diffs the ``bytes_accessed`` fields of a freshly produced BENCH_kernels.json
 against the committed baseline and emits a GitHub Actions ``::warning``
 annotation for every record whose scan-stage HBM traffic grew more than the
-threshold (default 10%). Always exits 0 — traffic is a trend to watch, not
-a gate (shapes and backends legitimately change); the annotation puts the
+threshold (default 10%). Also watches the anytime serving frontier
+(``serve_frontier`` records, docs/anytime.md): a warning fires when an
+adaptive operating point's recall@1 drops more than 1% against the
+committed baseline at the matched point, or when no adaptive point beats
+the fixed-budget baseline's p99 at matched recall anymore. Always exits
+0 — traffic and frontier shape are trends to watch, not gates (shapes,
+machines and backends legitimately change); the annotations put the
 regression in the job summary where a reviewer sees it.
 
 Usage:
@@ -18,14 +23,17 @@ import json
 import sys
 
 
-def _load_records(path: str) -> dict[tuple, dict]:
-    """Index records by identity key; records without bytes are skipped."""
+def _load_json(path: str) -> dict:
     try:
         with open(path) as f:
-            data = json.load(f)
+            return json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         print(f"::notice::traffic check skipped: cannot read {path} ({e})")
         return {}
+
+
+def _index_records(data: dict) -> dict[tuple, dict]:
+    """Index records by identity key; records without bytes are skipped."""
     out = {}
     for rec in data.get("records", []):
         if rec.get("bytes_accessed") is None:
@@ -38,6 +46,63 @@ def _load_records(path: str) -> dict[tuple, dict]:
     return out
 
 
+def _frontier_points(data: dict) -> dict[tuple, dict]:
+    """serve_frontier records keyed by operating point (policy, tau, np)."""
+    return {(r.get("probe_policy"), r.get("margin_tau"), r.get("nprobe_max")):
+            r for r in data.get("records", [])
+            if r.get("kernel") == "serve_frontier"}
+
+
+def check_frontier(base: dict, fresh: dict, recall_drop: float = 0.01) -> int:
+    """Warn when the anytime frontier degrades vs the committed baseline.
+
+    Two non-blocking signals (p99 itself is machine-dependent wall clock, so
+    absolute latency is never diffed across runs):
+      - an operating point's recall@1 fell more than ``recall_drop`` vs the
+        committed record for the same (policy, tau, nprobe_max);
+      - within the fresh run alone, no adaptive point reaches the fixed
+        nprobe_max baseline's recall@1 at strictly lower p99 (the
+        serve_bench acceptance property stopped holding).
+    Returns the number of warnings emitted.
+    """
+    bpts, fpts = _frontier_points(base), _frontier_points(fresh)
+    if not fpts:
+        return 0
+    warned = 0
+    for key, rec in sorted(fpts.items(), key=str):
+        old = bpts.get(key)
+        if old is None or old.get("recall_at_1") is None:
+            continue
+        drop = old["recall_at_1"] - rec.get("recall_at_1", 0.0)
+        label = "/".join(str(k) for k in key if k is not None)
+        if drop > recall_drop:
+            warned += 1
+            print(f"::warning title=anytime frontier regression::{label}: "
+                  f"recall@1 {old['recall_at_1']:.3f} -> "
+                  f"{rec['recall_at_1']:.3f} (-{drop * 100:.1f}%)")
+        else:
+            print(f"ok frontier {label}: recall@1 "
+                  f"{old['recall_at_1']:.3f} -> {rec['recall_at_1']:.3f}")
+    fixed = [r for (p, _, _), r in fpts.items() if p == "fixed"]
+    adaptive = [r for (p, _, _), r in fpts.items() if p == "margin"]
+    if fixed and adaptive:
+        baseline = max(fixed, key=lambda r: r.get("nprobe_max") or 0)
+        wins = [r for r in adaptive
+                if r.get("recall_at_1", 0.0) >= baseline.get("recall_at_1", 0.0)
+                and r.get("p99_us", float("inf")) < baseline.get("p99_us", 0.0)]
+        if not wins:
+            warned += 1
+            print("::warning title=anytime frontier regression::no adaptive "
+                  "point beats the fixed baseline's p99 at matched recall@1 "
+                  f"(baseline {baseline.get('impl')}: "
+                  f"recall@1={baseline.get('recall_at_1'):.3f}, "
+                  f"p99_us={baseline.get('p99_us'):.0f})")
+        else:
+            print(f"ok frontier acceptance: {len(wins)} adaptive point(s) "
+                  "beat the fixed baseline")
+    return warned
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True,
@@ -48,10 +113,13 @@ def main(argv: list[str] | None = None) -> int:
                     help="relative growth that triggers a warning")
     args = ap.parse_args(argv)
 
-    base = _load_records(args.baseline)
-    fresh = _load_records(args.fresh)
+    base_data = _load_json(args.baseline)
+    fresh_data = _load_json(args.fresh)
+    base = _index_records(base_data)
+    fresh = _index_records(fresh_data)
     if not base or not fresh:
         print("::notice::traffic check: nothing to compare")
+        check_frontier(base_data, fresh_data)
         return 0
 
     grew = checked = 0
@@ -72,6 +140,7 @@ def main(argv: list[str] | None = None) -> int:
                   f"{rec['bytes_accessed']:.0f} ({(ratio - 1) * 100:+.1f}%)")
     print(f"traffic check: {checked} records compared, {grew} grew "
           f">{args.threshold * 100:.0f}%")
+    check_frontier(base_data, fresh_data)
     return 0
 
 
