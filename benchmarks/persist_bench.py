@@ -1,0 +1,149 @@
+"""Durability-path benchmark: snapshot save/load bandwidth + WAL replay rate.
+
+The crash-safe index (docs/persistence.md) trades write-path work for
+recovery guarantees; this job puts numbers on both sides so regressions in
+the durable path show up next to the kernel sweeps:
+
+  - ``snapshot_save_mb_per_s`` / ``snapshot_load_mb_per_s``: checkpoint
+    serialization and CRC-verified deserialization bandwidth over the
+    manifest's segment bytes (what the checkpoint thread and a recovering
+    boot actually move);
+  - ``wal_append_rows_per_s``: upsert throughput WITH the fsync'd WAL
+    attached — the delta against mutation_bench's bare
+    ``upsert_rows_per_s`` is the price of durability per acknowledged row;
+  - ``wal_replay_rows_per_s``: recovery-side replay rate over the same
+    records (rows folded back per second through ``open_engine``).
+
+Records append into BENCH_kernels.json (no ``bytes_accessed``, so the
+traffic regression check skips them); CSV lines ride ``common.emit``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import persist
+from repro.engine import EngineConfig, SearchEngine
+
+KERNELS_JSON = os.environ.get("REPRO_BENCH_KERNELS", "BENCH_kernels.json")
+
+N_BASE = 4_000 if common.SMOKE else 20_000
+N_TRAIN = 2_000 if common.SMOKE else 8_000
+NLIST = 32 if common.SMOKE else 64
+WAL_BATCH = 256
+WAL_BATCHES = 4 if common.SMOKE else 8
+
+
+def _build_engine(d: int = 32, m: int = 8) -> SearchEngine:
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(N_BASE, d)).astype(np.float32)
+    train = rng.normal(size=(N_TRAIN, d)).astype(np.float32)
+    return SearchEngine.build(
+        jax.random.PRNGKey(0), jnp.asarray(train), jnp.asarray(base),
+        m=m, nlist=NLIST, coarse_iters=4, pq_iters=4,
+        config=EngineConfig(nprobe=8, rerank_mult=4))
+
+
+def _snapshot_bytes(directory: str) -> int:
+    manifest = persist.read_manifest(directory)
+    total = sum(e["size"] for e in manifest["segments"].values())
+    total += sum(sh["size"] for sh in manifest.get("shards", ()))
+    return total
+
+
+def snapshot_bandwidth(eng: SearchEngine, directory: str) -> list[dict]:
+    t0 = time.perf_counter()
+    persist.save_snapshot(eng, directory)
+    t_save = time.perf_counter() - t0
+    nbytes = _snapshot_bytes(directory)
+    t0 = time.perf_counter()
+    persist.load_snapshot(directory)
+    t_load = time.perf_counter() - t0
+    recs = []
+    for metric, t in (("snapshot_save_mb_per_s", t_save),
+                      ("snapshot_load_mb_per_s", t_load)):
+        mbps = nbytes / t / 1e6
+        recs.append({"kernel": "persist", "metric": metric,
+                     "snapshot_bytes": nbytes, "mb_per_s": mbps,
+                     "backend": jax.default_backend()})
+        common.emit(metric.removesuffix("_mb_per_s"), t,
+                    f"{mbps:.0f} MB/s over {nbytes / 1e6:.1f} MB of segments")
+    return recs
+
+
+def wal_rates(eng: SearchEngine, directory: str) -> list[dict]:
+    """Durable-upsert throughput, then replay rate over the same records."""
+    d = int(eng.index.centroids.shape[1])
+    rng = np.random.default_rng(1)
+    # spare capacity first, so the timed loop isolates encode+append+fsync
+    warm = np.arange(N_BASE, N_BASE + WAL_BATCH)
+    eng.upsert(warm, rng.normal(size=(WAL_BATCH, d)).astype(np.float32))
+    persist.save_snapshot(eng, directory)  # replay below starts here
+    t0 = time.perf_counter()
+    for b in range(WAL_BATCHES):
+        ids = np.arange(N_BASE + (b + 1) * WAL_BATCH,
+                        N_BASE + (b + 2) * WAL_BATCH)
+        eng.upsert(ids, rng.normal(size=(WAL_BATCH, d)).astype(np.float32))
+    dt_append = time.perf_counter() - t0
+    rows = WAL_BATCH * WAL_BATCHES
+    t0 = time.perf_counter()
+    _rec, info = persist.open_engine(directory, attach=False)
+    dt_replay = time.perf_counter() - t0
+    assert info.replayed == WAL_BATCHES
+    recs = [
+        {"kernel": "persist", "metric": "wal_append_rows_per_s",
+         "batch": WAL_BATCH, "batches": WAL_BATCHES,
+         "rows_per_s": rows / dt_append, "backend": jax.default_backend()},
+        {"kernel": "persist", "metric": "wal_replay_rows_per_s",
+         "batch": WAL_BATCH, "batches": WAL_BATCHES,
+         "rows_per_s": rows / dt_replay, "backend": jax.default_backend()},
+    ]
+    common.emit("persist_wal_append_batch", dt_append / WAL_BATCHES,
+                f"{rows / dt_append:.0f} rows/s through fsync'd durable "
+                f"upsert (batch={WAL_BATCH})")
+    common.emit("persist_wal_replay", dt_replay,
+                f"{rows / dt_replay:.0f} rows/s replayed through "
+                f"open_engine ({WAL_BATCHES} records)")
+    return recs
+
+
+def _merge_records(new: list[dict]) -> None:
+    """Append into BENCH_kernels.json without clobbering earlier jobs."""
+    try:
+        with open(KERNELS_JSON) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        data = {"schema": "repro.kernel_bench/v1", "records": []}
+    kept = [r for r in data.get("records", [])
+            if r.get("kernel") != "persist"]
+    data["records"] = kept + new
+    with open(KERNELS_JSON, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+
+
+def main() -> None:
+    eng = _build_engine()
+    tmp = tempfile.mkdtemp(prefix="persist_bench_")
+    try:
+        snap_recs = snapshot_bandwidth(eng, os.path.join(tmp, "snap"))
+        wal_dir = os.path.join(tmp, "wal")
+        persist.ensure_attached(eng, wal_dir)
+        wal_recs = wal_rates(eng, wal_dir)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    _merge_records(snap_recs + wal_recs)
+    print(f"# persist_bench: appended {len(snap_recs) + len(wal_recs)} "
+          f"records to {KERNELS_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,16 +44,17 @@ def main(argv: list[str] | None = None) -> int:
                     help="comma-separated job subset (default: all)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig2, kernel_bench, mutation_bench, serve_bench,
-                            table1)
+    from benchmarks import (fig2, kernel_bench, mutation_bench, persist_bench,
+                            serve_bench, table1)
 
     jobs = [
         ("kernel_bench", kernel_bench.main),
         ("fig2", fig2.main),
         ("table1", table1.main),
         ("serve_bench", serve_bench.main),
-        # after kernel_bench: appends its records into BENCH_kernels.json
+        # after kernel_bench: these append their records into BENCH_kernels.json
         ("mutation_bench", mutation_bench.main),
+        ("persist_bench", persist_bench.main),
     ]
     if args.jobs:
         want = {j.strip() for j in args.jobs.split(",") if j.strip()}

@@ -399,6 +399,31 @@ def compact_lists(store: ListStore, cap: int | None = None) -> ListStore:
     )
 
 
+def store_arrays(store: ListStore) -> dict[str, np.ndarray]:
+    """The store as plain host arrays — the persistence wire format.
+
+    Works on 2-D (single-host) and 3-D (shard-stacked) stores alike; the
+    ``attrs`` key is simply absent when the store carries no attribute
+    column, so ``store_from_arrays(store_arrays(s))`` round-trips the
+    pytree arity exactly (docs/persistence.md)."""
+    out = {"codes": np.asarray(store.codes),
+           "ids": np.asarray(store.ids),
+           "sizes": np.asarray(store.sizes)}
+    if store.attrs is not None:
+        out["attrs"] = np.asarray(store.attrs)
+    return out
+
+
+def store_from_arrays(arrays: dict[str, np.ndarray]) -> ListStore:
+    """Inverse of ``store_arrays``: rebuild the ListStore pytree."""
+    return ListStore(
+        codes=jnp.asarray(arrays["codes"]),
+        ids=jnp.asarray(arrays["ids"]),
+        sizes=jnp.asarray(arrays["sizes"]),
+        attrs=jnp.asarray(arrays["attrs"]) if "attrs" in arrays else None,
+    )
+
+
 def round_robin_perm(nlist: int, num_shards: int) -> np.ndarray:
     """The list permutation ``partition_lists`` applies: shard j owns lists
     j, j+S, j+2S, ... of the (padded to S*L) id space. Exposed so per-request

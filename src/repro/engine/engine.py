@@ -499,6 +499,14 @@ class SearchEngine:
             epoch=0, n_tombstones=n_tomb)
         self._mutate_lock = threading.RLock()
         self._locator: dict[int, tuple[int, int]] | None = None  # lazy
+        # optional persist.WALWriter (attach_wal): every mutation is logged
+        # and fsync'd BEFORE its state swap, so an acknowledged mutation
+        # survives kill-9 (docs/persistence.md)
+        self._wal = None
+        # retained so a snapshot can record how to rebuild the coarse
+        # structure deterministically from the centroids alone
+        self.hnsw_m = int(hnsw_m)
+        self.ef_construction = int(ef_construction)
         # (n_ns, nlist) bool membership: row t = the lists holding tenant
         # t's vectors. None = engine is namespace-free (docs/filtering.md).
         if namespaces is not None:
@@ -563,6 +571,15 @@ class SearchEngine:
     def n_tombstones(self) -> int:
         """Tombstoned slots currently held (0 right after ``compact``)."""
         return self._state.n_tombstones
+
+    def attach_wal(self, wal) -> None:
+        """Attach a ``persist.WALWriter``: every later ``upsert``/``delete``/
+        ``compact`` appends a checksummed, fsync'd record *before* installing
+        its state swap, making the mutation durable the moment the call
+        returns (docs/persistence.md). Pass ``None`` to detach (replay must
+        not re-log)."""
+        with self._mutate_lock:
+            self._wal = wal
 
     def locate(self, gid: int) -> tuple[int, int] | None:
         """(list, slot) of a live row by global id, None if absent/deleted."""
@@ -671,6 +688,9 @@ class SearchEngine:
                 # same row-wise mul+sum expression as core.lists.base_norms
                 # => bitwise equal to a from-scratch norms pass
                 norms = norms.at[gidx].set(jnp.sum(rows * rows, axis=-1))
+            if self._wal is not None:
+                # durable before visible: fsync the record, then swap
+                self._wal.log_upsert(ids, vecs, avals)
             self._locator = loc
             self._state = EngineState(
                 index=st.index._replace(lists=store), base=base,
@@ -703,6 +723,10 @@ class SearchEngine:
                 np.array([loc[g][1] for g in found], np.int32))
             for g in found:
                 del loc[g]
+            if self._wal is not None:
+                # a no-op delete returned above without logging; replaying
+                # the full id batch re-derives the same `found` set
+                self._wal.log_delete(ids)
             self._locator = loc
             self._state = EngineState(
                 index=st.index._replace(lists=store), base=st.base,
@@ -730,6 +754,8 @@ class SearchEngine:
             if store.cap != old_cap:
                 ops_mod.clear_autotune_cache(nlist=store.nlist, cap=old_cap)
             reclaimed = st.n_tombstones
+            if self._wal is not None:
+                self._wal.log_compact(cap)
             self._locator = lists_mod.locate_rows(store)
             self._state = EngineState(
                 index=st.index._replace(lists=store), base=st.base,

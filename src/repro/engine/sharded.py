@@ -226,6 +226,9 @@ class ShardedEngine:
             rows_used=rows_used, epoch=0, n_tombstones=n_tomb)
         self._mutate_lock = threading.RLock()
         self._locator: dict[int, tuple[int, int, int]] | None = None
+        # optional persist.WALWriter, mirroring SearchEngine.attach_wal:
+        # mutations are logged + fsync'd before the state swap
+        self._wal = None
         # namespace membership sharded with the same round-robin permutation
         # as the lists: shard j's (n_ns, L) slice covers exactly its lists;
         # padding lists are member-False for every namespace
@@ -294,6 +297,14 @@ class ShardedEngine:
     @property
     def n_tombstones(self) -> int:
         return self._state.n_tombstones
+
+    def attach_wal(self, wal) -> None:
+        """Attach a ``persist.WALWriter`` (same contract as
+        ``SearchEngine.attach_wal``): every later mutation appends a
+        checksummed, fsync'd record before its state swap. ``None``
+        detaches — replay must not re-log (docs/persistence.md)."""
+        with self._mutate_lock:
+            self._wal = wal
 
     def locate(self, gid: int) -> tuple[int, int, int] | None:
         """(shard, local list, slot) of a live row, None if absent."""
@@ -462,6 +473,9 @@ class ShardedEngine:
             for g, j, l, s in zip(ids.tolist(), shard.tolist(),
                                   local.tolist(), slots.tolist()):
                 loc[int(g)] = (int(j), int(l), int(s))
+            if self._wal is not None:
+                # durable before visible (docs/persistence.md)
+                self._wal.log_upsert(ids, vecs, avals)
             self._locator = loc
             self._state = _ShardState(
                 centroids_s=st.centroids_s, lists_s=lists_s,
@@ -493,6 +507,10 @@ class ShardedEngine:
                        else st.lists_s.attrs.at[js, ls, ss].set(-1)))
             for g in found:
                 del loc[g]
+            if self._wal is not None:
+                # no-op deletes returned above unlogged; replay re-derives
+                # the same `found` set from the full batch
+                self._wal.log_delete(ids)
             self._locator = loc
             self._state = st._replace(
                 lists_s=lists_s,
@@ -568,6 +586,8 @@ class ShardedEngine:
                 ops_mod.clear_autotune_cache(kind="rerank",
                                              n=st.base_s.shape[1])
             reclaimed = st.n_tombstones
+            if self._wal is not None:
+                self._wal.log_compact(cap)
             self._locator = None
             self._state = st._replace(
                 lists_s=lists_s,

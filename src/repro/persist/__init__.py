@@ -1,0 +1,26 @@
+"""Crash-safe durable index: checksummed snapshots + WAL recovery.
+
+``save_snapshot``/``load_snapshot`` serialize an engine (single-host or
+sharded) as versioned, per-segment CRC-verified files behind an atomically
+renamed manifest; ``WALWriter`` (attached via ``engine.attach_wal``) makes
+every mutation durable before it becomes visible; ``open_engine`` recovers
+snapshot + replay, bit-identical to the never-crashed engine over the
+acknowledged prefix — or fails loudly with a typed error. See
+docs/persistence.md.
+"""
+from repro.persist.errors import (CorruptSnapshotError, CorruptWALError,
+                                  NoSnapshotError, PersistError)
+from repro.persist.snapshot import (MANIFEST_NAME, RecoveryInfo,
+                                    ensure_attached, load_snapshot,
+                                    open_engine, read_manifest,
+                                    save_snapshot)
+from repro.persist.wal import (WALRecord, WALWriter, apply_record, iter_wal,
+                               scan_wal, wal_files, wal_name)
+
+__all__ = [
+    "PersistError", "NoSnapshotError", "CorruptSnapshotError",
+    "CorruptWALError", "MANIFEST_NAME", "RecoveryInfo", "save_snapshot",
+    "load_snapshot", "open_engine", "read_manifest", "ensure_attached",
+    "WALRecord", "WALWriter", "apply_record", "iter_wal", "scan_wal",
+    "wal_files", "wal_name",
+]

@@ -1,0 +1,258 @@
+"""Write-ahead mutation log: fixed-format, checksummed, fsync'd records.
+
+Every mutation (``upsert`` / ``delete`` / ``compact``) appends ONE record —
+fsync'd *before* the engine installs the new in-memory epoch — so recovery
+is always "last snapshot + replay" and a crash can lose at most the
+unacknowledged tail (docs/persistence.md).
+
+On-disk record format (little-endian, 28-byte preamble + payload):
+
+    u32  magic       0x4C415752 ("RWAL")
+    u8   op          1=upsert 2=delete 3=compact
+    u8   flags       0 (reserved)
+    u16  reserved    0
+    u64  seq         global record number, contiguous from 1
+    u32  payload_len
+    u32  payload_crc CRC-32 of the payload bytes
+    u32  header_crc  CRC-32 of the preceding 24 header bytes
+    ...  payload     ``np.savez`` archive of the mutation's arrays
+
+Torn-tail vs corruption: a record cut short by EOF (crash mid-append) is a
+*clean* stop — ``scan_wal`` returns the valid prefix and flags the tail.
+A record whose bytes are all present but whose CRC fails (bit flip), whose
+magic is wrong, or that is torn with more data after it, raises
+``CorruptWALError``: acknowledged mutations may be missing and silently
+replaying the rest would build a wrong index.
+
+WAL files are named ``wal-<start_seq:012d>.log`` so a directory's files
+chain in seq order; ``rotate`` (the checkpoint path) closes the current
+file and opens the next, and GC deletes files whose records a durable
+snapshot fully covers.
+"""
+from __future__ import annotations
+
+import io as _io
+import os
+import re
+import struct
+import threading
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+from repro.persist import io as pio
+from repro.persist.errors import CorruptWALError
+
+_MAGIC = 0x4C415752  # "RWAL" little-endian
+_HEADER = struct.Struct("<IBBHQII")   # magic, op, flags, reserved, seq, len, crc
+_HEADER_CRC = struct.Struct("<I")
+PREAMBLE = _HEADER.size + _HEADER_CRC.size  # 28 bytes
+
+OP_UPSERT = 1
+OP_DELETE = 2
+OP_COMPACT = 3
+_OP_NAMES = {OP_UPSERT: "upsert", OP_DELETE: "delete", OP_COMPACT: "compact"}
+_OP_CODES = {v: k for k, v in _OP_NAMES.items()}
+
+_WAL_RE = re.compile(r"^wal-(\d{12})\.log$")
+
+
+def wal_name(start_seq: int) -> str:
+    """File name of the WAL segment whose first record is ``start_seq``."""
+    return f"wal-{start_seq:012d}.log"
+
+
+def wal_files(directory: str) -> list[tuple[int, str]]:
+    """(start_seq, path) of every WAL file in ``directory``, seq-ascending."""
+    out = []
+    for name in os.listdir(directory):
+        m = _WAL_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(directory, name)))
+    out.sort()
+    return out
+
+
+class WALRecord(NamedTuple):
+    seq: int
+    op: str                        # 'upsert' | 'delete' | 'compact'
+    arrays: dict[str, np.ndarray]  # the mutation's payload arrays
+
+
+def encode_record(seq: int, op: str, arrays: dict[str, np.ndarray]) -> bytes:
+    """One record's bytes: checksummed preamble + npz payload."""
+    bio = _io.BytesIO()
+    np.savez(bio, **arrays)
+    payload = bio.getvalue()
+    head = _HEADER.pack(_MAGIC, _OP_CODES[op], 0, 0, int(seq), len(payload),
+                        pio.crc32(payload))
+    return head + _HEADER_CRC.pack(pio.crc32(head)) + payload
+
+
+def _decode_payload(payload: bytes) -> dict[str, np.ndarray]:
+    with np.load(_io.BytesIO(payload), allow_pickle=False) as z:
+        return {k: z[k] for k in z.files}
+
+
+def scan_wal(path: str) -> tuple[list[WALRecord], int, bool]:
+    """Parse one WAL file: (records, valid_byte_length, clean).
+
+    ``clean=False`` means the file ends in a torn record (crash mid-append):
+    the returned records are the trustworthy prefix and ``valid_byte_length``
+    is where it ends — the caller may truncate there before appending.
+    Anything that is NOT a clean torn tail — bad magic, failed header or
+    payload CRC on fully-present bytes — raises ``CorruptWALError``.
+    """
+    data = pio.read_bytes(path)
+    records: list[WALRecord] = []
+    off = 0
+    n = len(data)
+    while off < n:
+        if n - off < PREAMBLE:
+            return records, off, False          # torn header at EOF
+        head = data[off:off + _HEADER.size]
+        (magic, op_code, _flags, _rsvd, seq, plen,
+         pcrc) = _HEADER.unpack(head)
+        (hcrc,) = _HEADER_CRC.unpack(
+            data[off + _HEADER.size:off + PREAMBLE])
+        if hcrc != pio.crc32(head):
+            raise CorruptWALError(
+                f"{path}: header CRC mismatch at offset {off}")
+        if magic != _MAGIC or op_code not in _OP_NAMES:
+            raise CorruptWALError(
+                f"{path}: bad record magic/op at offset {off}")
+        if n - off - PREAMBLE < plen:
+            return records, off, False          # torn payload at EOF
+        payload = data[off + PREAMBLE:off + PREAMBLE + plen]
+        if pio.crc32(payload) != pcrc:
+            raise CorruptWALError(
+                f"{path}: payload CRC mismatch at offset {off} (seq {seq})")
+        try:
+            arrays = _decode_payload(payload)
+        except Exception as e:  # zipfile/np.load damage the CRC missed
+            raise CorruptWALError(
+                f"{path}: undecodable payload at offset {off}: {e}") from e
+        records.append(WALRecord(int(seq), _OP_NAMES[op_code], arrays))
+        off += PREAMBLE + plen
+    return records, off, True
+
+
+def iter_wal(directory: str, after_seq: int = 0) -> Iterator[WALRecord]:
+    """Replay-ordered records with seq > ``after_seq`` across the file chain.
+
+    Enforces the recovery contract: records must be contiguous from
+    ``after_seq + 1`` (a gap means a missing WAL file — acknowledged
+    mutations lost in the *middle*, so ``CorruptWALError``), and only the
+    FINAL file may end torn (a torn earlier file likewise hides
+    acknowledged mutations that later files prove existed).
+    """
+    files = wal_files(directory)
+    expect = int(after_seq) + 1
+    for i, (_start, path) in enumerate(files):
+        records, _valid, clean = scan_wal(path)
+        if not clean and i != len(files) - 1:
+            raise CorruptWALError(
+                f"{path}: torn record in a non-final WAL file")
+        for rec in records:
+            if rec.seq <= after_seq:
+                continue
+            if rec.seq != expect:
+                raise CorruptWALError(
+                    f"{path}: sequence gap — expected seq {expect}, found "
+                    f"{rec.seq} (a WAL file is missing or out of order)")
+            yield rec
+            expect += 1
+
+
+class WALWriter:
+    """Append-side of the log: one open file, fsync per record.
+
+    Thread-safe (the engines call ``log_*`` under their own mutation lock,
+    but the checkpointer rotates from another thread). ``seq`` is global
+    and survives rotation — the next record after ``rotate`` lands in the
+    new file with the next contiguous number.
+    """
+
+    def __init__(self, path: str, next_seq: int):
+        self.path = path
+        self._f = open(path, "ab")
+        self._next = int(next_seq)
+        self._written_here = 0  # records appended to the CURRENT file
+        self._lock = threading.Lock()
+
+    @property
+    def last_seq(self) -> int:
+        """Seq of the last appended record (0 before the first)."""
+        with self._lock:
+            return self._next - 1
+
+    def append(self, op: str, arrays: dict[str, np.ndarray]) -> int:
+        """Encode + append + fsync one record; returns its seq."""
+        with self._lock:
+            seq = self._next
+            pio.append_record(self._f, encode_record(seq, op, arrays))
+            self._next += 1
+            self._written_here += 1
+            return seq
+
+    # -- the engine-facing hooks (docs/persistence.md) ----------------------
+
+    def log_upsert(self, ids: np.ndarray, vecs: np.ndarray,
+                   attrs: np.ndarray | None = None) -> int:
+        arrays = {"ids": np.asarray(ids, np.int64),
+                  "vecs": np.asarray(vecs, np.float32)}
+        if attrs is not None:
+            arrays["attrs"] = np.asarray(attrs, np.int32)
+        return self.append("upsert", arrays)
+
+    def log_delete(self, ids: np.ndarray) -> int:
+        return self.append("delete", {"ids": np.asarray(ids, np.int64)})
+
+    def log_compact(self, cap: int | None) -> int:
+        return self.append(
+            "compact", {"cap": np.asarray(-1 if cap is None else cap,
+                                          np.int64)})
+
+    # -- checkpoint-side ----------------------------------------------------
+
+    def rotate(self, directory: str) -> str:
+        """Close the current file and start ``wal-<next_seq>.log``.
+
+        No-op when the current file holds no records yet (back-to-back
+        checkpoints with no intervening mutations would otherwise mint a
+        same-named file). Returns the active path.
+        """
+        with self._lock:
+            if self._written_here == 0:
+                return self.path
+            self._f.close()
+            self.path = os.path.join(directory, wal_name(self._next))
+            self._f = open(self.path, "ab")
+            self._written_here = 0
+            pio.fsync_dir(directory)
+            return self.path
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+
+def apply_record(engine, rec: WALRecord) -> None:
+    """Apply one replayed record through the engine's own mutators.
+
+    The mutators are deterministic functions of (state, arguments) — the
+    exactness spine of docs/mutability.md — so replaying the logged
+    arguments reproduces bit-identical state. The caller must have the
+    engine's WAL detached (or never attached): replay must not re-log.
+    """
+    a = rec.arrays
+    if rec.op == "upsert":
+        engine.upsert(a["ids"], a["vecs"], attrs=a.get("attrs"))
+    elif rec.op == "delete":
+        engine.delete(a["ids"])
+    elif rec.op == "compact":
+        cap = int(a["cap"])
+        engine.compact(cap=None if cap < 0 else cap)
+    else:  # pragma: no cover - scan_wal already rejects unknown ops
+        raise CorruptWALError(f"unknown WAL op {rec.op!r}")

@@ -23,5 +23,10 @@ from repro.serving.batcher import (  # noqa: F401
     bucket_for,
     pad_to_bucket,
 )
+from repro.serving.errors import (  # noqa: F401
+    DeadlineExceeded,
+    LoopClosed,
+    Overloaded,
+)
 from repro.serving.loop import LoopMetrics, ServeResult, ServingLoop  # noqa: F401
 from repro.serving.stats import StatsRegistry, TenantStats  # noqa: F401

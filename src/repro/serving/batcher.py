@@ -28,6 +28,8 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.serving.errors import DeadlineExceeded, LoopClosed, Overloaded
+
 DEFAULT_BUCKETS = (1, 8, 32, 128)
 
 
@@ -66,6 +68,9 @@ class Request:
     namespace: int = -1  # engine namespace id, -1 = unrestricted; namespaces
     #                      are traced per-row, so mixed-namespace batches
     #                      share one dispatch (docs/filtering.md)
+    deadline: float | None = None  # absolute time.monotonic() past which the
+    #                      request is failed instead of dispatched; None =
+    #                      wait forever (docs/serving.md)
 
 
 class Batcher:
@@ -78,32 +83,56 @@ class Batcher:
     """
 
     def __init__(self, buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 max_wait_s: float = 0.002):
+                 max_wait_s: float = 0.002, max_pending: int | None = None):
         if not buckets or list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be ascending and unique: {buckets}")
         if buckets[0] < 1:
             raise ValueError(f"buckets must be >= 1: {buckets}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.buckets = tuple(int(b) for b in buckets)
         self.max_wait_s = float(max_wait_s)
+        # bounded admission (docs/serving.md): beyond this many queued
+        # requests, submit sheds load with a typed Overloaded instead of
+        # letting the queue (and every caller's latency) grow without limit.
+        # None = unbounded, the pre-hardening behavior.
+        self.max_pending = None if max_pending is None else int(max_pending)
         self._queue: deque[Request] = deque()
         self._cond = threading.Condition()
         self._closed = False
+        self.rejects = 0          # submits shed by the max_pending bound
+        self.deadline_misses = 0  # queued requests failed past their deadline
 
     # -- producer side ------------------------------------------------------
 
     def submit(self, query, k: int = 10, tenant: str = "default",
-               namespace: int = -1) -> Future:
-        """Enqueue one query; the future resolves to a ``loop.ServeResult``."""
+               namespace: int = -1, deadline_s: float | None = None) -> Future:
+        """Enqueue one query; the future resolves to a ``loop.ServeResult``.
+
+        ``deadline_s`` (relative seconds) bounds the total queue wait: a
+        request still undispatched past it is failed with
+        ``DeadlineExceeded`` before it can burn a batch slot. Raises
+        ``Overloaded`` immediately when the queue is at ``max_pending``.
+        """
         q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit takes a single (D,) query, got {q.shape}")
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        now = time.monotonic()
         req = Request(query=q, k=int(k), tenant=str(tenant), future=Future(),
-                      t_submit=time.monotonic(), namespace=int(namespace))
+                      t_submit=now, namespace=int(namespace),
+                      deadline=None if deadline_s is None else now + deadline_s)
         with self._cond:
             if self._closed:
-                raise RuntimeError("batcher is closed")
+                raise LoopClosed("batcher is closed")
+            if (self.max_pending is not None
+                    and len(self._queue) >= self.max_pending):
+                self.rejects += 1
+                raise Overloaded(
+                    f"queue at max_pending={self.max_pending}; request shed")
             self._queue.append(req)
             self._cond.notify_all()
         return req.future
@@ -136,7 +165,10 @@ class Batcher:
         cap = self.buckets[-1]
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
-            while not self._queue:
+            while True:
+                self._purge_expired_locked()
+                if self._queue:
+                    break
                 if self._closed:
                     return None
                 wait = None if deadline is None else deadline - time.monotonic()
@@ -151,6 +183,13 @@ class Batcher:
                    and (remaining := batch_deadline - time.monotonic()) > 0):
                 self._cond.wait(remaining)
 
+            # expire again after the co-rider wait: a request whose deadline
+            # passed while the batch was filling must not occupy a slot (it
+            # would reach search_jit only to have its result thrown away)
+            self._purge_expired_locked()
+            if not self._queue:
+                return None
+            head = self._queue[0]
             out: list[Request] = []
             kept: deque[Request] = deque()
             for req in self._queue:
@@ -160,6 +199,24 @@ class Batcher:
                     kept.append(req)
             self._queue = kept
             return out
+
+    def _purge_expired_locked(self) -> None:
+        """Fail every queued request past its deadline (caller holds _cond)."""
+        now = time.monotonic()
+        if not any(r.deadline is not None and r.deadline < now
+                   for r in self._queue):
+            return
+        kept: deque[Request] = deque()
+        for req in self._queue:
+            if req.deadline is not None and req.deadline < now:
+                self.deadline_misses += 1
+                if not req.future.done():
+                    req.future.set_exception(DeadlineExceeded(
+                        f"deadline expired after "
+                        f"{now - req.t_submit:.3f}s in queue"))
+            else:
+                kept.append(req)
+        self._queue = kept
 
     def _count_k(self, k: int) -> int:
         return sum(1 for r in self._queue if r.k == k)

@@ -42,10 +42,12 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import persist
 from repro.engine import SearchEngine, fused_cache_size
 from repro.kernels.ops import (autotune_cache_size, load_autotune_cache,
                                save_autotune_cache)
 from repro.serving.batcher import DEFAULT_BUCKETS, Batcher, Request
+from repro.serving.errors import LoopClosed, Overloaded
 from repro.serving.stats import StatsRegistry
 
 
@@ -85,6 +87,12 @@ class LoopMetrics(NamedTuple):
     tiles_skipped: int     # early-exited scan tiles summed over served rows
     auto_compactions: int  # compactions the loop's tombstone-ratio policy
     #                        triggered itself (0 with compact_at=None)
+    rejects: int           # submits shed by the bounded queue (Overloaded;
+    #                        0 with max_pending=None — docs/serving.md)
+    deadline_misses: int   # queued requests failed past their deadline
+    #                        before reaching a dispatch slot
+    checkpoints: int       # background snapshots written (0 without
+    #                        snapshot_dir — docs/persistence.md)
 
 
 class ServingLoop:
@@ -104,8 +112,28 @@ class ServingLoop:
                  warmup_cache: str | None = None,
                  filter_bits=None,
                  margin_tau: float | None = None,
-                 compact_at: float | None = None):
+                 compact_at: float | None = None,
+                 max_pending: int | None = None,
+                 snapshot_dir: str | None = None,
+                 snapshot_every: float = 30.0):
         self.engine = engine
+        # durable serving (docs/persistence.md): with snapshot_dir set the
+        # loop makes the engine durable into that directory (initial
+        # snapshot + WAL attach on a fresh dir; an engine recovered by
+        # persist.open_engine is recognized and left as-is) and a
+        # background thread checkpoints every snapshot_every seconds while
+        # mutations arrive, truncating the WAL chain as it goes.
+        if snapshot_every <= 0:
+            raise ValueError(f"snapshot_every must be > 0, got {snapshot_every}")
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = float(snapshot_every)
+        self._last_ckpt_seq = 0
+        self._ckpt_thread: threading.Thread | None = None
+        self._ckpt_error: Exception | None = None
+        if snapshot_dir is not None:
+            persist.ensure_attached(engine, snapshot_dir)
+            self._last_ckpt_seq = persist.read_manifest(
+                snapshot_dir)["wal_seq"]
         # per-loop margin width override (docs/anytime.md): traced, so two
         # loops over one engine can serve different latency tiers without
         # extra compiles. Only legal when the engine's probe_policy='margin'.
@@ -134,7 +162,9 @@ class ServingLoop:
         # kernel sweeps its siblings already ran, re-saved after warmup so
         # first boot populates it. None = per-process sweeps only.
         self.warmup_cache = warmup_cache
-        self.batcher = batcher or Batcher(buckets=buckets, max_wait_s=max_wait_s)
+        self.batcher = batcher or Batcher(buckets=buckets,
+                                          max_wait_s=max_wait_s,
+                                          max_pending=max_pending)
         self.nprobe = engine.config.nprobe if nprobe is None else int(nprobe)
         self.rerank_mult = (engine.config.rerank_mult if rerank_mult is None
                             else int(rerank_mult))
@@ -155,6 +185,7 @@ class ServingLoop:
         self._lists_pruned = 0
         self._tiles_skipped = 0
         self._auto_compactions = 0
+        self._checkpoints = 0
         self._dim = int(engine.index.centroids.shape[1])
 
     # -- lifecycle ----------------------------------------------------------
@@ -189,19 +220,57 @@ class ServingLoop:
         self._thread = threading.Thread(target=self._run, name="repro-serve",
                                         daemon=True)
         self._thread.start()
+        if self.snapshot_dir is not None:
+            self._ckpt_thread = threading.Thread(
+                target=self._ckpt_run, name="repro-checkpoint", daemon=True)
+            self._ckpt_thread.start()
         return self
 
     def stop(self, timeout: float = 5.0) -> None:
-        """Stop dispatching; cancel anything still queued."""
+        """Stop dispatching; cancel anything still queued.
+
+        With ``snapshot_dir`` set, a final checkpoint runs first so every
+        acknowledged mutation is covered by the last snapshot (the WAL
+        already covered it — this just shortens replay on the next boot).
+        """
         if self._thread is None:
             return
         self.batcher.close()
         self._stop.set()
         self._thread.join(timeout)
         self._thread = None
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join(timeout)
+            self._ckpt_thread = None
+            self._checkpoint_if_dirty()
         while (reqs := self.batcher.next_batch(timeout=0)):
             for r in reqs:
                 r.future.cancel()
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Shut down and DRAIN: fail every still-pending future.
+
+        Unlike ``stop`` (which cancels, for restart scenarios), ``close``
+        resolves each queued request's future with a ``LoopClosed`` error —
+        a caller blocked in ``future.result()`` gets a typed failure
+        instead of waiting forever on a future nothing will ever run.
+        """
+        if self._thread is None:
+            self.batcher.close()
+        else:
+            self.batcher.close()
+            self._stop.set()
+            self._thread.join(timeout)
+            self._thread = None
+            if self._ckpt_thread is not None:
+                self._ckpt_thread.join(timeout)
+                self._ckpt_thread = None
+                self._checkpoint_if_dirty()
+        while (reqs := self.batcher.next_batch(timeout=0)):
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(
+                        LoopClosed("serving loop closed before dispatch"))
 
     def __enter__(self) -> "ServingLoop":
         return self.start()
@@ -231,12 +300,17 @@ class ServingLoop:
     # -- request entry points ------------------------------------------------
 
     def submit(self, query, k: int = 10, tenant: str = "default",
-               namespace: int = -1) -> Future:
+               namespace: int = -1, deadline_s: float | None = None) -> Future:
         """Enqueue one (D,) query -> Future[ServeResult].
 
         ``namespace`` >= 0 restricts the query to that engine namespace's
         lists (-1 = unrestricted). Namespaces are per-row traced values, so
         mixed-namespace requests still share shape buckets and compiles.
+
+        ``deadline_s`` bounds the request's queue wait: still undispatched
+        past it, the future fails with ``DeadlineExceeded`` and the request
+        never reaches the engine. Raises ``Overloaded`` (counted per
+        tenant) when the bounded queue is full — docs/serving.md runbook.
         """
         if self._thread is None:
             raise RuntimeError("loop is not running (call start())")
@@ -256,7 +330,13 @@ class ServingLoop:
                 raise ValueError(
                     f"namespace={namespace} out of range (engine holds "
                     f"{self.engine.ns_member.shape[0]} namespaces)")
-        return self.batcher.submit(q, k=k, tenant=tenant, namespace=namespace)
+        try:
+            return self.batcher.submit(q, k=k, tenant=tenant,
+                                       namespace=namespace,
+                                       deadline_s=deadline_s)
+        except Overloaded:
+            self.stats.record_reject(tenant)
+            raise
 
     async def asearch(self, query, k: int = 10, tenant: str = "default",
                       namespace: int = -1) -> ServeResult:
@@ -323,23 +403,70 @@ class ServingLoop:
                 lists_pruned=self._lists_pruned,
                 tiles_skipped=self._tiles_skipped,
                 auto_compactions=self._auto_compactions,
+                rejects=self.batcher.rejects,
+                deadline_misses=self.batcher.deadline_misses,
+                checkpoints=self._checkpoints,
             )
 
     # -- dispatch thread -----------------------------------------------------
 
     def _run(self) -> None:
+        # BaseException, not Exception: a poisoned batch must fail ONLY its
+        # own futures, never wedge or kill the dispatch thread — even on
+        # exotic raises (KeyboardInterrupt delivered here, SystemExit from
+        # a hook). The loop itself keeps serving subsequent batches.
         while not self._stop.is_set():
             reqs = self.batcher.next_batch(timeout=0.05)
             if not reqs:
                 continue
             try:
                 self._dispatch(reqs)
-            except Exception as e:  # engine failure -> fail the whole batch
+            except BaseException as e:  # engine failure -> fail the batch
                 for r in reqs:
                     if not r.future.done():
                         r.future.set_exception(e)
                 continue
             self._maybe_compact()
+
+    # -- background checkpointing (docs/persistence.md) ---------------------
+
+    def _ckpt_run(self) -> None:
+        while not self._stop.wait(self.snapshot_every):
+            self._checkpoint_if_dirty()
+
+    def _checkpoint_if_dirty(self) -> None:
+        """Snapshot iff mutations arrived since the last checkpoint.
+
+        Runs on the dedicated checkpoint thread (and once at stop/close):
+        the capture is atomic under the engine's mutation lock, the
+        serialization works on the immutable captured state, so dispatches
+        and mutators never stall behind segment I/O. A failed checkpoint is
+        recorded (``checkpoint_error``) but must not kill the thread — the
+        WAL still holds every acknowledged mutation.
+        """
+        wal = getattr(self.engine, "_wal", None)
+        if wal is None or wal.last_seq == self._last_ckpt_seq:
+            return
+        try:
+            manifest = persist.save_snapshot(self.engine, self.snapshot_dir)
+        except Exception as e:
+            self._ckpt_error = e
+            return
+        self._last_ckpt_seq = manifest["wal_seq"]
+        with self._lock:
+            self._checkpoints += 1
+
+    def checkpoint(self) -> None:
+        """Force a snapshot now (if any mutation arrived since the last);
+        raises nothing — check ``checkpoint_error`` for the last failure."""
+        if self.snapshot_dir is None:
+            raise RuntimeError("loop has no snapshot_dir")
+        self._checkpoint_if_dirty()
+
+    @property
+    def checkpoint_error(self) -> Exception | None:
+        """Last background-checkpoint failure, None when healthy."""
+        return self._ckpt_error
 
     def _maybe_compact(self) -> None:
         """Auto-compaction: runs on the dispatch thread BETWEEN batches.

@@ -41,6 +41,9 @@ class TenantStats:
     tiles_skipped: int = 0      # sum of QueryStats.tiles_skipped (scan tiles
     #                             the early-exit bound proved irrelevant; 0
     #                             without early_exit)
+    rejects: int = 0            # submits shed by the bounded queue
+    #                             (Overloaded, docs/serving.md); these never
+    #                             enqueued, so no other counter moves
     latency_sum_s: float = 0.0  # submit -> result, summed
     latency_max_s: float = 0.0
 
@@ -103,6 +106,14 @@ class StatsRegistry:
                 if tenant not in seen:
                     st.batches += 1
                     seen.add(tenant)
+
+    def record_reject(self, tenant: str) -> None:
+        """Count one load-shed submit (``Overloaded``) against its tenant."""
+        with self._lock:
+            st = self._stats.get(tenant)
+            if st is None:
+                st = self._stats[tenant] = TenantStats(tenant)
+            st.rejects += 1
 
     def snapshot(self) -> Mapping[str, TenantStats]:
         """Point-in-time copy of every tenant's aggregates."""

@@ -15,6 +15,7 @@ stress test hammering the ServingLoop with queries during mutation.
 """
 import functools
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -795,3 +796,120 @@ def test_random_mutation_programs_match_oracle(program):
     r_orc = oracle.search(q, 10)
     _assert_tie_aware_equal(r_mut.dists, r_mut.ids,
                             r_orc.dists, _to_gids(r_orc.ids, surv))
+
+
+# ---------------------------------------------------------------------------
+# durability: background snapshots during the mutation storm
+# ---------------------------------------------------------------------------
+
+def test_serving_stress_with_background_snapshots(tmp_path):
+    """Queries + upserts/deletes/compactions while the loop's checkpoint
+    thread snapshots concurrently (docs/persistence.md): zero failed
+    futures, zero checkpoint errors, and every durable state the run
+    leaves behind — mid-run directory copies and the final directory —
+    recovers bit-identical to a from-scratch engine replaying the same
+    acknowledged mutation prefix (or fails loudly on a torn copy)."""
+    import shutil
+
+    from repro import persist
+    from repro.persist import CorruptSnapshotError, CorruptWALError
+
+    ds, eng = _serving_engine()
+    d = str(tmp_path / "dur")
+    pool = np.arange(100, 400)
+    stop = threading.Event()
+    mut_err = []
+    applied = []  # ops in WAL-seq order (single mutator => issue order)
+
+    def mutate():
+        rng = np.random.default_rng(37)
+        try:
+            rounds = 0
+            while not stop.is_set():
+                sel = rng.choice(pool, size=40, replace=False)
+                if eng.delete(sel):
+                    applied.append(("delete", np.sort(np.asarray(sel))))
+                vecs = rng.normal(size=(sel.size, D)).astype(np.float32)
+                gids = np.sort(sel)
+                eng.upsert(gids, vecs)
+                applied.append(("upsert", gids, vecs))
+                rounds += 1
+                if rounds % 5 == 0:
+                    eng.compact()
+                    applied.append(("compact",))
+        except Exception as e:  # surface in the main thread
+            mut_err.append(e)
+
+    loop = ServingLoop(eng, buckets=(4,), max_wait_s=0.001,
+                       snapshot_dir=d, snapshot_every=0.05)
+    frozen = []
+    with loop:
+        loop.submit(ds.queries[0], k=5).result(timeout=120)
+        t = threading.Thread(target=mutate, daemon=True)
+        t.start()
+        futures = []
+        try:
+            for i in range(80):
+                q = np.asarray(ds.queries[i % ds.queries.shape[0]])
+                futures.append(loop.submit(q, k=5, tenant=f"t{i % 3}"))
+                if i % 25 == 20:  # freeze a mid-run durable state
+                    fz = str(tmp_path / f"frozen{i}")
+                    shutil.copytree(d, fz)
+                    frozen.append(fz)
+        finally:
+            stop.set()
+            t.join(timeout=60)
+        results = [f.result(timeout=120) for f in futures]  # zero failures
+        # The state is dirty here, so the checkpoint thread is guaranteed to
+        # fire; under load its 0.05 s cadence can lag the (fast) submit
+        # window, so wait for the first snapshot rather than racing it.
+        deadline = time.monotonic() + 120.0
+        while (loop.metrics().checkpoints == 0
+               and loop.checkpoint_error is None
+               and time.monotonic() < deadline):
+            time.sleep(0.02)
+        assert loop.checkpoint_error is None
+        ckpts = loop.metrics().checkpoints
+    assert not mut_err, mut_err
+    assert ckpts >= 1, "background checkpointing never fired"
+    assert len(results) == 80
+
+    def replay_reference(n_ops):
+        ref = mk_engine(EngineConfig(nprobe=8, rerank_mult=2))
+        for op in applied[:n_ops]:
+            if op[0] == "delete":
+                ref.delete(op[1])
+            elif op[0] == "upsert":
+                ref.upsert(op[1], op[2])
+            else:
+                ref.compact()
+        return ref
+
+    q = jnp.asarray(ds.queries)
+    # final state: recovery == live engine == from-scratch replay of ALL ops
+    rec, info = persist.open_engine(d, attach=False)
+    assert info.last_seq == len(applied)
+    ref = replay_reference(len(applied))
+    for other in (eng, ref):
+        ra, rb = rec.search(q, 10), other.search(q, 10)
+        np.testing.assert_array_equal(np.asarray(ra.dists),
+                                      np.asarray(rb.dists))
+        np.testing.assert_array_equal(np.asarray(ra.ids),
+                                      np.asarray(rb.ids))
+    # mid-run copies: prefix-or-loud (a copy racing the checkpointer may
+    # have caught a GC'd segment — loud is correct; silent damage is not)
+    opened = 0
+    for fz in frozen:
+        try:
+            rec_f, info_f = persist.open_engine(fz, attach=False)
+        except (CorruptSnapshotError, CorruptWALError):
+            continue
+        opened += 1
+        assert info_f.last_seq <= len(applied)
+        ref_f = replay_reference(info_f.last_seq)
+        ra, rb = rec_f.search(q, 10), ref_f.search(q, 10)
+        np.testing.assert_array_equal(np.asarray(ra.dists),
+                                      np.asarray(rb.dists))
+        np.testing.assert_array_equal(np.asarray(ra.ids),
+                                      np.asarray(rb.ids))
+    assert opened >= 1, "every mid-run copy was torn; expected >=1 clean"

@@ -1,0 +1,462 @@
+"""Crash-safe durable index: snapshot + WAL recovery under fault injection.
+
+The contract under test is docs/persistence.md's *prefix-or-loud* recovery:
+for ANY injected fault — torn write, bit flip, short read, missing file,
+crash at I/O step N — reopening a durable directory yields either an engine
+whose results are bit-identical to the never-crashed engine over a prefix
+of the acknowledged mutations, or a typed ``CorruptSnapshotError`` /
+``CorruptWALError`` / ``NoSnapshotError``. Never a silently wrong index.
+
+Bit-identity is asserted with ``assert_array_equal`` (integer-exact ADC,
+deterministic encoder) across staged/fused paths, scan/rerank impls, the
+filtered and namespaced paths, and both ShardedEngine drivers.
+"""
+import functools
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as hst
+
+import faults
+from repro.core import ivf
+from repro.core.lists import filter_from_attrs, store_arrays, store_from_arrays
+from repro.data import vectors
+from repro.engine import EngineConfig, SearchEngine, ShardedEngine
+from repro import persist
+from repro.persist import (CorruptSnapshotError, CorruptWALError,
+                           NoSnapshotError, WALWriter)
+from repro.persist import wal as wal_mod
+
+NLIST = 16
+D = 32
+M = 8
+
+
+@functools.lru_cache(maxsize=None)
+def _built():
+    ds = vectors.make_sift_like(n=2000, nt=1000, nq=6, d=D, ncl=16, seed=5)
+    index = ivf.build_ivf(jax.random.PRNGKey(0), jnp.asarray(ds.train),
+                          jnp.asarray(ds.base), m=M, nlist=NLIST,
+                          coarse_iters=4, pq_iters=4)
+    return ds, index
+
+
+def _attr_of(gids):
+    return (np.asarray(gids, np.int64) % 5).astype(np.int32)
+
+
+def mk_engine(cfg: EngineConfig | None = None, *, attrs=False,
+              namespaces=None) -> SearchEngine:
+    ds, index = _built()
+    store = index.lists
+    if attrs:
+        ids = np.asarray(store.ids)
+        store = store._replace(attrs=jnp.asarray(
+            np.where(ids >= 0, _attr_of(np.maximum(ids, 0)), -1)
+            .astype(np.int32)))
+    return SearchEngine(index._replace(lists=store),
+                        base=jnp.asarray(ds.base),
+                        config=cfg or EngineConfig(nprobe=6, rerank_mult=2),
+                        namespaces=namespaces)
+
+
+def _queries():
+    ds, _ = _built()
+    return jnp.asarray(ds.queries)
+
+
+# every op appends exactly ONE WAL record (delete slabs are disjoint and
+# always find live rows), so acknowledged-prefix j == ops[:j] applied
+def scripted_ops(n=6, seed=11):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for i in range(n):
+        r = i % 3
+        if r == 0 or r == 1:
+            ids = np.arange(2000 + 40 * i, 2000 + 40 * i + 25)
+            ops.append(("upsert", ids,
+                        rng.normal(size=(25, D)).astype(np.float32)))
+        else:
+            ops.append(("delete", np.arange(100 * i, 100 * i + 40)))
+    ops.append(("compact",))
+    return ops[:n]
+
+
+def apply_ops(eng, ops):
+    for op in ops:
+        if op[0] == "upsert":
+            eng.upsert(op[1], op[2])
+        elif op[0] == "delete":
+            eng.delete(op[1])
+        else:
+            eng.compact()
+
+
+def assert_same_results(a, b, q, *, k=8, calls=("search", "search_jit"),
+                        **kw):
+    for call in calls:
+        ra = getattr(a, call)(q, k, **kw)
+        rb = getattr(b, call)(q, k, **kw)
+        np.testing.assert_array_equal(np.asarray(ra.dists),
+                                      np.asarray(rb.dists), err_msg=call)
+        np.testing.assert_array_equal(np.asarray(ra.ids),
+                                      np.asarray(rb.ids), err_msg=call)
+
+
+# ---------------------------------------------------------------------------
+# store serialization + WAL record format
+# ---------------------------------------------------------------------------
+
+def test_store_arrays_roundtrip():
+    _, index = _built()
+    rt = store_from_arrays(store_arrays(index.lists))
+    np.testing.assert_array_equal(np.asarray(rt.codes),
+                                  np.asarray(index.lists.codes))
+    np.testing.assert_array_equal(np.asarray(rt.ids),
+                                  np.asarray(index.lists.ids))
+    assert rt.attrs is None
+
+
+def test_wal_roundtrip_and_torn_tail(tmp_path):
+    p = str(tmp_path / "wal-000000000001.log")
+    w = WALWriter(p, 1)
+    w.log_upsert(np.array([1, 2]), np.ones((2, 4), np.float32))
+    w.log_delete(np.array([7]))
+    w.log_compact(None)
+    w.close()
+    recs, valid, clean = wal_mod.scan_wal(p)
+    assert clean and [r.op for r in recs] == ["upsert", "delete", "compact"]
+    assert recs[1].seq == 2
+    np.testing.assert_array_equal(recs[0].arrays["ids"], [1, 2])
+    # torn tail: cut the last record mid-payload -> clean prefix, no error
+    faults.truncate_file(p, fraction=0.9)
+    recs2, valid2, clean2 = wal_mod.scan_wal(p)
+    assert not clean2 and [r.op for r in recs2] == ["upsert", "delete"]
+    # a fully-present record with a flipped byte must be LOUD, not a prefix
+    w2path = str(tmp_path / "wal-000000000010.log")
+    w2 = WALWriter(w2path, 10)
+    w2.log_delete(np.array([1]))
+    w2.log_delete(np.array([2]))
+    w2.close()
+    faults.flip_byte_in(w2path, offset=10)  # inside record 1's preamble
+    with pytest.raises(CorruptWALError):
+        wal_mod.scan_wal(w2path)
+
+
+def test_wal_chain_gap_and_torn_middle_are_loud(tmp_path):
+    d = str(tmp_path)
+    w = WALWriter(os.path.join(d, persist.wal_name(1)), 1)
+    w.log_delete(np.array([1]))
+    w.log_delete(np.array([2]))
+    w.close()
+    w = WALWriter(os.path.join(d, persist.wal_name(3)), 3)
+    w.log_delete(np.array([3]))
+    w.close()
+    assert [r.seq for r in persist.iter_wal(d)] == [1, 2, 3]
+    # tear the FIRST (non-final) file: later files prove records are missing
+    faults.truncate_file(os.path.join(d, persist.wal_name(1)), 0.5)
+    with pytest.raises(CorruptWALError):
+        list(persist.iter_wal(d))
+    # missing middle file -> sequence gap
+    os.remove(os.path.join(d, persist.wal_name(1)))
+    with pytest.raises(CorruptWALError):
+        list(persist.iter_wal(d))
+
+
+# ---------------------------------------------------------------------------
+# recovery bit-identity across every query path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan_impl,rerank_impl", [
+    ("ref", "gathered"), ("select", "gathered"),
+    ("mxu", "stream"), ("stream", "stream")])
+def test_recovery_bit_identity_impls(tmp_path, scan_impl, rerank_impl):
+    cfg = EngineConfig(nprobe=6, rerank_mult=2, scan_impl=scan_impl,
+                       rerank_impl=rerank_impl)
+    eng = mk_engine(cfg)
+    persist.ensure_attached(eng, str(tmp_path))
+    apply_ops(eng, scripted_ops())
+    rec, info = persist.open_engine(str(tmp_path), attach=False)
+    assert info.replayed == len(scripted_ops()) and info.truncated_bytes == 0
+    assert rec.epoch == eng.epoch and rec.n_tombstones == eng.n_tombstones
+    assert_same_results(eng, rec, _queries())
+
+
+def test_recovery_bit_identity_filtered_and_namespaced(tmp_path):
+    ns = jnp.ones((3, NLIST), bool)
+    eng = mk_engine(EngineConfig(nprobe=6, rerank_mult=2), attrs=True,
+                    namespaces=ns)
+    persist.ensure_attached(eng, str(tmp_path))
+    ops = scripted_ops()
+    for op in ops:  # attrs column requires attr values on upsert
+        if op[0] == "upsert":
+            eng.upsert(op[1], op[2], attrs=_attr_of(op[1]))
+        elif op[0] == "delete":
+            eng.delete(op[1])
+        else:
+            eng.compact()
+    rec, _ = persist.open_engine(str(tmp_path), attach=False)
+    assert rec.ns_member is not None
+    fb_live = filter_from_attrs(eng.index.lists, lambda a: a % 5 != 1)
+    fb_rec = filter_from_attrs(rec.index.lists, lambda a: a % 5 != 1)
+    np.testing.assert_array_equal(np.asarray(fb_live), np.asarray(fb_rec))
+    q = _queries()
+    nsq = np.array([0, 1, 2, 0, 1, -1], np.int32)[:q.shape[0]]
+    for call in ("search", "search_jit"):
+        ra = getattr(eng, call)(q, 8, filter_bits=fb_live, namespaces=nsq)
+        rb = getattr(rec, call)(q, 8, filter_bits=fb_rec, namespaces=nsq)
+        np.testing.assert_array_equal(np.asarray(ra.ids),
+                                      np.asarray(rb.ids), err_msg=call)
+        np.testing.assert_array_equal(np.asarray(ra.dists),
+                                      np.asarray(rb.dists), err_msg=call)
+
+
+def test_sharded_recovery_both_drivers(tmp_path):
+    eng = mk_engine(EngineConfig(nprobe=6, rerank_mult=2))
+    sh = ShardedEngine(eng, 2)
+    persist.ensure_attached(sh, str(tmp_path))
+    apply_ops(sh, scripted_ops(5))
+    rec, info = persist.open_engine(str(tmp_path), attach=False)
+    assert isinstance(rec, ShardedEngine) and info.replayed == 5
+    assert rec.epoch == sh.epoch
+    q = _queries()
+    assert_same_results(sh, rec, q, calls=("search",))      # vmap driver
+    # shard_map driver needs mesh size == num_shards: use a 1-shard engine
+    d2 = str(tmp_path / "mesh")
+    sh1 = ShardedEngine(mk_engine(EngineConfig(nprobe=6, rerank_mult=2)), 1)
+    persist.ensure_attached(sh1, d2)
+    apply_ops(sh1, scripted_ops(3))
+    rec1, _ = persist.open_engine(d2, attach=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("shards",))
+    ra = sh1.search(q, 8, mesh=mesh)
+    rb = rec1.search(q, 8, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+
+
+def test_recovered_engine_stays_durable(tmp_path):
+    """open_engine attaches a positioned writer: mutations after recovery
+    land at the next contiguous seq and survive another recovery."""
+    eng = mk_engine()
+    persist.ensure_attached(eng, str(tmp_path))
+    apply_ops(eng, scripted_ops(3))
+    rec, info = persist.open_engine(str(tmp_path))
+    assert rec._wal is not None and rec._wal.last_seq == info.last_seq
+    apply_ops(rec, scripted_ops(2, seed=23))
+    rec2, info2 = persist.open_engine(str(tmp_path), attach=False)
+    assert info2.last_seq == info.last_seq + 2
+    assert_same_results(rec, rec2, _queries())
+
+
+# ---------------------------------------------------------------------------
+# fault sweeps: prefix-or-loud
+# ---------------------------------------------------------------------------
+
+def _fresh_durable(tmp_path, name):
+    d = str(tmp_path / name)
+    eng = mk_engine()
+    persist.ensure_attached(eng, d)
+    return eng, d
+
+
+def _prefix_references(ops, q, k=8):
+    """Never-crashed search results after each ops prefix [0..n]."""
+    eng = mk_engine()
+    refs = []
+    for i in range(len(ops) + 1):
+        r = eng.search(q, k)
+        refs.append((np.asarray(r.dists).copy(), np.asarray(r.ids).copy()))
+        if i < len(ops):
+            apply_ops(eng, ops[i:i + 1])
+    return refs
+
+
+def _matches_some_prefix(engine, refs, q, k=8):
+    r = engine.search(q, k)
+    d, i = np.asarray(r.dists), np.asarray(r.ids)
+    return any((d == rd).all() and (i == ri).all() for rd, ri in refs)
+
+
+def test_kill_at_every_mutation_step_recovers_prefix(tmp_path):
+    """Crash inside the k-th WAL append: the torn record was never
+    acknowledged, recovery yields exactly ops[:k-1]."""
+    ops = scripted_ops(5)
+    q = _queries()
+    refs = _prefix_references(ops, q)
+    for k in range(1, len(ops) + 1):
+        eng, d = _fresh_durable(tmp_path, f"mut{k}")
+        with faults.FaultInjector(crash_at_write=k, torn_fraction=0.6):
+            with pytest.raises(faults.SimulatedCrash):
+                apply_ops(eng, ops)
+        rec, info = persist.open_engine(d, attach=False)
+        assert info.last_seq == k - 1, f"crash at append {k}"
+        assert info.truncated_bytes > 0  # the torn record was dropped
+        r = rec.search(q, 8)
+        np.testing.assert_array_equal(np.asarray(r.dists), refs[k - 1][0])
+        np.testing.assert_array_equal(np.asarray(r.ids), refs[k - 1][1])
+
+
+def test_crash_at_every_checkpoint_step_keeps_old_state(tmp_path):
+    """Crash at the N-th write inside save_snapshot: the manifest still
+    names the previous complete snapshot and the intact WAL chain replays
+    to the FULL pre-crash state — nothing acknowledged is lost."""
+    ops = scripted_ops(4)
+    # count the writes one checkpoint performs
+    eng, d = _fresh_durable(tmp_path, "count")
+    apply_ops(eng, ops)
+    with faults.FaultInjector() as counter:
+        persist.save_snapshot(eng, d)
+    n_writes = counter.writes
+    assert n_writes >= 5
+    q = _queries()
+    want = eng.search(q, 8)
+    for n in range(1, n_writes + 1):
+        eng_n, d_n = _fresh_durable(tmp_path, f"ck{n}")
+        apply_ops(eng_n, ops)
+        with faults.FaultInjector(crash_at_write=n):
+            with pytest.raises(faults.SimulatedCrash):
+                persist.save_snapshot(eng_n, d_n)
+        rec, info = persist.open_engine(d_n, attach=False)
+        assert info.last_seq == len(ops), f"crash at write {n}"
+        r = rec.search(q, 8)
+        np.testing.assert_array_equal(np.asarray(r.dists),
+                                      np.asarray(want.dists))
+        np.testing.assert_array_equal(np.asarray(r.ids),
+                                      np.asarray(want.ids))
+
+
+def test_bitflip_in_every_snapshot_file_is_loud(tmp_path):
+    eng, d = _fresh_durable(tmp_path, "flip")
+    apply_ops(eng, scripted_ops(3))
+    persist.save_snapshot(eng, d)
+    targets = faults.snapshot_files(d) + [os.path.join(d, persist.MANIFEST_NAME)]
+    for i, path in enumerate(targets):
+        pristine = path + ".orig"
+        shutil.copyfile(path, pristine)
+        faults.flip_byte_in(path, seed=i)
+        with pytest.raises(CorruptSnapshotError):
+            persist.open_engine(d, attach=False)
+        os.replace(pristine, path)
+    # repaired directory loads again
+    persist.open_engine(d, attach=False)
+
+
+def test_bitflip_in_wal_is_loud(tmp_path):
+    eng, d = _fresh_durable(tmp_path, "walflip")
+    apply_ops(eng, scripted_ops(4))
+    for path in faults.wal_paths(d):
+        pristine = path + ".orig"
+        shutil.copyfile(path, pristine)
+        # flip inside the FIRST record so the damage is not a torn tail
+        faults.flip_byte_in(path, offset=40)
+        with pytest.raises(CorruptWALError):
+            persist.open_engine(d, attach=False)
+        os.replace(pristine, path)
+    persist.open_engine(d, attach=False)
+
+
+def test_missing_files_are_typed(tmp_path):
+    eng, d = _fresh_durable(tmp_path, "missing")
+    apply_ops(eng, scripted_ops(3))
+    persist.save_snapshot(eng, d)
+    seg = faults.snapshot_files(d)[0]
+    pristine = seg + ".orig"
+    shutil.copyfile(seg, pristine)
+    os.remove(seg)
+    with pytest.raises(CorruptSnapshotError):
+        persist.open_engine(d, attach=False)
+    os.replace(pristine, seg)
+    # a deleted manifest is NoSnapshotError (fresh-vs-damaged distinction)
+    man = os.path.join(d, persist.MANIFEST_NAME)
+    shutil.copyfile(man, man + ".orig")
+    os.remove(man)
+    with pytest.raises(NoSnapshotError):
+        persist.open_engine(d, attach=False)
+    os.replace(man + ".orig", man)
+    persist.open_engine(d, attach=False)
+
+
+def test_short_read_prefix_or_loud(tmp_path):
+    """Truncate the N-th read during recovery, for every N: recovery must
+    either land on SOME acknowledged prefix or raise a typed error."""
+    ops = scripted_ops(4)
+    eng, d = _fresh_durable(tmp_path, "short")
+    apply_ops(eng, ops[:2])
+    persist.save_snapshot(eng, d)
+    apply_ops(eng, ops[2:])
+    q = _queries()
+    refs = _prefix_references(ops, q)
+    with faults.FaultInjector() as counter:
+        persist.open_engine(d, attach=False)
+    outcomes = {"ok": 0, "loud": 0}
+    for n in range(1, counter.reads + 1):
+        with faults.FaultInjector(short_read_at=n):
+            try:
+                rec, _ = persist.open_engine(d, attach=False)
+            except (CorruptSnapshotError, CorruptWALError,
+                    NoSnapshotError):
+                outcomes["loud"] += 1
+                continue
+        assert _matches_some_prefix(rec, refs, q), \
+            f"short read {n}: silently wrong state"
+        outcomes["ok"] += 1
+    assert outcomes["loud"] > 0  # snapshot segments cannot shrink silently
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large,
+                                 HealthCheck.function_scoped_fixture])
+@given(crash=hst.integers(min_value=1, max_value=8),
+       flip=hst.booleans(), seed=hst.integers(min_value=0, max_value=99))
+def test_fault_sweep_never_silently_wrong(tmp_path_factory, crash, flip,
+                                          seed):
+    """Hypothesis sweep: random crash step x optional bit flip x rng seed.
+    Every outcome is a typed error or a bit-identical acknowledged prefix."""
+    ops = scripted_ops(4, seed=seed)
+    q = _queries()
+    refs = _prefix_references(ops, q)
+    d = str(tmp_path_factory.mktemp("sweep"))
+    eng = mk_engine()
+    persist.ensure_attached(eng, d)
+    # when flipping, crash two writes LATER so the rotted write completes
+    # and is acknowledged — recovery must then be loud, never lossy-silent
+    inj = faults.FaultInjector(crash_at_write=crash + 2 if flip else crash,
+                               flip_write_byte=crash if flip else None,
+                               seed=seed)
+    with inj:
+        try:
+            apply_ops(eng, ops[:2])
+            persist.save_snapshot(eng, d)
+            apply_ops(eng, ops[2:])
+        except faults.SimulatedCrash:
+            pass
+    try:
+        rec, _ = persist.open_engine(d, attach=False)
+    except (CorruptSnapshotError, CorruptWALError, NoSnapshotError):
+        return  # loud is a correct outcome
+    assert _matches_some_prefix(rec, refs, q), "silently wrong recovery"
+
+
+def test_reinit_of_foreign_directory_refused(tmp_path):
+    eng, d = _fresh_durable(tmp_path, "own")
+    other = mk_engine()
+    with pytest.raises(ValueError, match="open_engine"):
+        persist.ensure_attached(other, d)
+
+
+def test_custom_coarse_refused_at_save(tmp_path):
+    ds, index = _built()
+
+    class Custom:
+        def search(self, q, nprobe):
+            raise NotImplementedError
+
+    eng = SearchEngine(index, coarse=Custom())
+    with pytest.raises(ValueError, match="custom"):
+        persist.save_snapshot(eng, str(tmp_path))

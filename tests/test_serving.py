@@ -392,3 +392,161 @@ def test_auto_scan_impl_warmup_absorbs_autotune_and_stays_flat():
         np.testing.assert_array_equal(got_ids, np.asarray(want.ids))
     finally:
         ops.clear_autotune_cache()
+
+# ---------------------------------------------------------------------------
+# overload shedding, deadlines, drain, dispatch hardening (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def _fresh_engine():
+    """Private engine instance so tests can wrap its methods without
+    poisoning the lru-cached shared one."""
+    ds = small_ds()
+    return ds, SearchEngine(small_engine().index, base=ds.base)
+
+
+def _gate_engine(eng):
+    """Wrap search_jit so every dispatch blocks on a gate; returns the gate
+    and the list of batch sizes the engine actually saw."""
+    gate = threading.Event()
+    calls = []
+    real = eng.search_jit
+
+    def gated(q, k, **kw):
+        calls.append(int(q.shape[0]))
+        gate.wait(60)
+        return real(q, k, **kw)
+
+    eng.search_jit = gated
+    return gate, calls
+
+
+def _wait_queue_drained(loop, timeout=10.0):
+    t0 = time.monotonic()
+    while len(loop.batcher._queue) and time.monotonic() - t0 < timeout:
+        time.sleep(0.005)
+    assert not len(loop.batcher._queue), "dispatch never picked up the head"
+
+
+def test_bounded_queue_sheds_with_typed_error():
+    from repro.serving import Overloaded
+
+    ds, eng = _fresh_engine()
+    gate, _calls = _gate_engine(eng)
+    loop = ServingLoop(eng, rerank_mult=2, buckets=(1,), max_wait_s=0.0,
+                       max_pending=2)
+    loop.start()
+    try:
+        f0 = loop.submit(ds.queries[0], k=10, tenant="flood")
+        _wait_queue_drained(loop)  # f0 now stalls inside the engine
+        f1 = loop.submit(ds.queries[1], k=10, tenant="flood")
+        f2 = loop.submit(ds.queries[2], k=10, tenant="flood")
+        with pytest.raises(Overloaded):
+            loop.submit(ds.queries[3], k=10, tenant="flood")
+        assert loop.metrics().rejects == 1
+        assert loop.stats.get("flood").rejects == 1
+        # shed request never holds a future; accepted ones all complete
+        gate.set()
+        for f in (f0, f1, f2):
+            assert f.result(timeout=120).ids.shape == (10,)
+        assert loop.stats.get("flood").queries == 3
+    finally:
+        gate.set()
+        loop.stop()
+
+
+def test_expired_deadline_never_reaches_the_engine():
+    from repro.serving import DeadlineExceeded
+
+    ds, eng = _fresh_engine()
+    gate, calls = _gate_engine(eng)
+    loop = ServingLoop(eng, rerank_mult=2, buckets=(1,), max_wait_s=0.0)
+    loop.start()
+    try:
+        f0 = loop.submit(ds.queries[0], k=10)
+        _wait_queue_drained(loop)  # dispatch now stalls holding f0
+        f_dead = loop.submit(ds.queries[1], k=10, deadline_s=0.01)
+        time.sleep(0.05)  # expires while queued behind the stalled batch
+        gate.set()
+        with pytest.raises(DeadlineExceeded):
+            f_dead.result(timeout=60)
+        assert f0.result(timeout=120).ids.shape == (10,)
+        f2 = loop.submit(ds.queries[2], k=10)
+        assert f2.result(timeout=60).ids.shape == (10,)
+        # engine saw exactly the two live requests, never the expired one
+        assert calls == [1, 1]
+        assert loop.metrics().deadline_misses == 1
+    finally:
+        gate.set()
+        loop.stop()
+
+
+def test_engine_exception_fails_its_batch_only():
+    """A dispatch-time engine failure resolves that batch's futures with the
+    error and the loop keeps serving — regression for the dispatch thread
+    dying and wedging every later caller."""
+    ds, eng = _fresh_engine()
+    real = eng.search_jit
+    armed = [True]
+
+    def flaky(q, k, **kw):
+        if armed[0]:
+            armed[0] = False
+            raise RuntimeError("injected engine failure")
+        return real(q, k, **kw)
+
+    eng.search_jit = flaky
+    loop = ServingLoop(eng, rerank_mult=2, buckets=(1,), max_wait_s=0.0)
+    loop.start()
+    try:
+        f_bad = loop.submit(ds.queries[0], k=10)
+        with pytest.raises(RuntimeError, match="injected engine failure"):
+            f_bad.result(timeout=60)
+        f_ok = loop.submit(ds.queries[1], k=10)
+        assert f_ok.result(timeout=60).ids.shape == (10,)
+        assert loop.metrics().batches == 1  # only the good dispatch counted
+    finally:
+        loop.stop()
+
+
+def test_close_drains_pending_futures_with_typed_error():
+    from repro.serving import LoopClosed
+
+    ds, eng = _fresh_engine()
+    gate, _calls = _gate_engine(eng)
+    loop = ServingLoop(eng, rerank_mult=2, buckets=(1,), max_wait_s=0.0)
+    loop.start()
+    f0 = loop.submit(ds.queries[0], k=10)
+    _wait_queue_drained(loop)
+    f1 = loop.submit(ds.queries[1], k=10)
+    f2 = loop.submit(ds.queries[2], k=10)
+    loop.close(timeout=0.2)  # dispatch is stalled: queued work must drain
+    for f in (f1, f2):
+        with pytest.raises(LoopClosed):
+            f.result(timeout=10)
+    with pytest.raises(RuntimeError, match="not running"):
+        loop.submit(ds.queries[3], k=10)
+    gate.set()  # the in-flight batch still completes for its caller
+    assert f0.result(timeout=120).ids.shape == (10,)
+
+
+def test_batcher_bounded_queue_and_deadline_purge():
+    from repro.serving import DeadlineExceeded, LoopClosed, Overloaded
+
+    b = Batcher(buckets=(1,), max_wait_s=0.0, max_pending=1)
+    b.submit(np.zeros(3, np.float32), k=10)
+    with pytest.raises(Overloaded):
+        b.submit(np.ones(3, np.float32), k=10)
+    assert b.rejects == 1
+    assert b.next_batch(timeout=0.01) is not None  # head still dispatchable
+    # expired requests are purged at next_batch, never returned
+    f = b.submit(np.zeros(3, np.float32), k=10, deadline_s=0.005)
+    time.sleep(0.02)
+    assert b.next_batch(timeout=0.01) is None
+    assert b.deadline_misses == 1
+    with pytest.raises(DeadlineExceeded):
+        f.result(timeout=1)
+    with pytest.raises(ValueError, match="deadline_s"):
+        b.submit(np.zeros(3, np.float32), k=10, deadline_s=0.0)
+    b.close()
+    with pytest.raises(LoopClosed):
+        b.submit(np.zeros(3, np.float32), k=10)
