@@ -12,7 +12,11 @@ pass). This job records:
     pre-grown so the number isolates the append path (no compaction, no
     cap growth mid-measurement);
   - ``search_us`` at 0% / 10% / 50% tombstone load, same engine, same
-    queries — the deltas are the read-side cost of deferring compaction.
+    queries — the deltas are the read-side cost of deferring compaction;
+  - ``upsert_rows_per_s_durable``: the same append path with the WAL
+    attached, once fsyncing every record and once under group commit
+    (``WALWriter(fsync_interval=...)``) — the two deltas against the bare
+    number are the price of the ack and how much group commit buys back.
 
 Records append into BENCH_kernels.json next to the kernel sweeps (they
 carry no ``bytes_accessed``, so the traffic regression check skips them);
@@ -22,6 +26,8 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
+import tempfile
 import time
 
 import jax
@@ -29,8 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro import persist
 from repro.core.lists import live_counts
 from repro.engine import EngineConfig, SearchEngine
+from repro.persist.wal import WALWriter, wal_name
 
 KERNELS_JSON = os.environ.get("REPRO_BENCH_KERNELS", "BENCH_kernels.json")
 
@@ -114,6 +122,63 @@ def tombstone_latency(eng: SearchEngine, q: np.ndarray) -> list[dict]:
     return records
 
 
+def durable_upsert_delta(eng: SearchEngine,
+                         bare_rows_per_s: float) -> list[dict]:
+    """Durable upsert rows/s: fsync-per-record vs group commit.
+
+    Runs on the engine ``tombstone_latency`` left behind — the append
+    path doesn't care about tombstone load, and reusing it skips a
+    second expensive build.
+    """
+    d = int(eng.index.centroids.shape[1])
+    rng = np.random.default_rng(4)
+    tmp = tempfile.mkdtemp(prefix="mutation_bench_wal_")
+    next_id = 100 * N_BASE
+
+    def timed_run() -> float:
+        nonlocal next_id
+        # one warm batch so cap growth/compaction never lands in the loop
+        eng.upsert(np.arange(next_id, next_id + UPSERT_BATCH),
+                   rng.normal(size=(UPSERT_BATCH, d)).astype(np.float32))
+        next_id += UPSERT_BATCH
+        t0 = time.perf_counter()
+        for _ in range(UPSERT_BATCHES):
+            eng.upsert(np.arange(next_id, next_id + UPSERT_BATCH),
+                       rng.normal(size=(UPSERT_BATCH, d)).astype(np.float32))
+            next_id += UPSERT_BATCH
+        dt = time.perf_counter() - t0
+        return UPSERT_BATCH * UPSERT_BATCHES / dt
+
+    recs = []
+    try:
+        persist.ensure_attached(eng, tmp)  # default: fsync every record
+        r_each = timed_run()
+        old = eng._wal
+        old.close()
+        seq = old.last_seq + 1
+        eng.attach_wal(WALWriter(os.path.join(tmp, wal_name(seq)), seq,
+                                 fsync_interval=0.05))
+        r_group = timed_run()
+        eng._wal.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    for mode, rows_per_s in (("each", r_each), ("group", r_group)):
+        delta = (rows_per_s / bare_rows_per_s - 1.0) * 100.0
+        rec = {"kernel": "mutation", "metric": "upsert_rows_per_s_durable",
+               "fsync": mode, "batch": UPSERT_BATCH,
+               "batches": UPSERT_BATCHES, "rows_per_s": rows_per_s,
+               "delta_vs_bare_pct": delta,
+               "backend": jax.default_backend()}
+        if mode == "group":
+            rec["fsync_interval_s"] = 0.05
+        recs.append(rec)
+        common.emit(f"mutation_upsert_durable_{mode}",
+                    UPSERT_BATCH / rows_per_s,
+                    f"{rows_per_s:.0f} rows/s durable upsert "
+                    f"(fsync={mode}, {delta:+.1f}% vs bare)")
+    return recs
+
+
 def _merge_records(new: list[dict]) -> None:
     """Append into BENCH_kernels.json without clobbering the kernel sweeps
     (kernel_bench.main overwrites the file; this job runs after it)."""
@@ -132,10 +197,12 @@ def _merge_records(new: list[dict]) -> None:
 
 def main() -> None:
     eng, q = _build_engine()
-    _, up_rec = upsert_throughput(eng)
+    bare_rows_per_s, up_rec = upsert_throughput(eng)
     lat_recs = tombstone_latency(eng, q)
-    _merge_records([up_rec] + lat_recs)
-    print(f"# mutation_bench: appended {1 + len(lat_recs)} records to "
+    durable_recs = durable_upsert_delta(eng, bare_rows_per_s)
+    recs = [up_rec] + lat_recs + durable_recs
+    _merge_records(recs)
+    print(f"# mutation_bench: appended {len(recs)} records to "
           f"{KERNELS_JSON}")
 
 

@@ -12,10 +12,19 @@ the durable path show up next to the kernel sweeps:
     attached — the delta against mutation_bench's bare
     ``upsert_rows_per_s`` is the price of durability per acknowledged row;
   - ``wal_replay_rows_per_s``: recovery-side replay rate over the same
-    records (rows folded back per second through ``open_engine``).
+    records (rows folded back per second through ``open_engine``);
+  - ``checkpoint_bytes`` full vs delta: bytes a checkpoint physically
+    writes when every segment is new versus when content-hash dedup
+    reuses the unchanged ones from the parent manifest — the write_ratio
+    is what the traffic watcher trends;
+  - ``replication_lag``: one ship/poll round-trip through a
+    ``DirTransport`` — seqs behind before the poll, seqs + seconds after
+    (after must be zero: a caught-up standby), and the replay rate.
 
 Records append into BENCH_kernels.json (no ``bytes_accessed``, so the
-traffic regression check skips them); CSV lines ride ``common.emit``.
+scan-traffic diff skips them; ``check_bench_traffic.py`` watches the
+checkpoint write_ratio and replication lag separately, non-blocking).
+CSV lines ride ``common.emit``.
 """
 from __future__ import annotations
 
@@ -115,6 +124,82 @@ def wal_rates(eng: SearchEngine, directory: str) -> list[dict]:
     return recs
 
 
+def checkpoint_delta(eng: SearchEngine, directory: str) -> list[dict]:
+    """Bytes a checkpoint writes: full (no parent) vs delta (parent dedup).
+
+    ``snapshot_bandwidth`` already left a full snapshot in ``directory``;
+    touch a sliver of the index and checkpoint again — codes/ids/sizes
+    are rewritten but centroids/codebook/base CRC-match the parent and
+    are referenced, not copied.
+    """
+    gids = np.asarray(eng.index.lists.ids)
+    sel = np.sort(gids[gids >= 0])[:64]
+    eng.delete(sel)
+    t0 = time.perf_counter()
+    manifest = persist.save_snapshot(eng, directory)
+    dt = time.perf_counter() - t0
+    delta = manifest["delta"]
+    total = delta["bytes_written"] + delta["bytes_reused"]
+    ratio = delta["bytes_written"] / total if total else 1.0
+    recs = [
+        {"kernel": "persist", "metric": "checkpoint_bytes",
+         "mode": "full", "bytes_written": total, "bytes_reused": 0,
+         "write_ratio": 1.0, "backend": jax.default_backend()},
+        {"kernel": "persist", "metric": "checkpoint_bytes",
+         "mode": "delta", "bytes_written": delta["bytes_written"],
+         "bytes_reused": delta["bytes_reused"], "write_ratio": ratio,
+         "segments_written": delta["segments_written"],
+         "segments_reused": delta["segments_reused"],
+         "backend": jax.default_backend()},
+    ]
+    common.emit("persist_checkpoint_delta", dt,
+                f"delta checkpoint wrote {delta['bytes_written'] / 1e6:.2f} "
+                f"MB, reused {delta['bytes_reused'] / 1e6:.1f} MB "
+                f"(write_ratio {ratio:.3f})")
+    return recs
+
+
+def replication_rates(eng: SearchEngine, wal_dir: str,
+                      ship_dir: str) -> list[dict]:
+    """One ship/poll round-trip: lag before the poll, lag after, replay
+    rate. The standby starts from the primary's own snapshot (bit-exact
+    warm start), so only the freshly shipped records cross the wire."""
+    d = int(eng.index.centroids.shape[1])
+    rng = np.random.default_rng(3)
+    transport = persist.DirTransport(ship_dir)
+    shipper = persist.WALShipper(eng, wal_dir, transport)
+    shipper.ship_once()  # backlog out of the way before the timed round
+    standby, info = persist.open_engine(wal_dir, attach=False)
+    replica = persist.StandbyReplica(standby, transport,
+                                     start_seq=info.last_seq)
+    replica.poll_once()
+    rows = WAL_BATCH * WAL_BATCHES
+    base_id = 10 * N_BASE
+    for b in range(WAL_BATCHES):
+        ids = np.arange(base_id + b * WAL_BATCH,
+                        base_id + (b + 1) * WAL_BATCH)
+        eng.upsert(ids, rng.normal(size=(WAL_BATCH, d)).astype(np.float32))
+    t0 = time.perf_counter()
+    shipper.ship_once()
+    dt_ship = time.perf_counter() - t0
+    lag_before = replica.lag()
+    t0 = time.perf_counter()
+    replica.poll_once()
+    dt_replay = time.perf_counter() - t0
+    lag_after = replica.lag()
+    rec = {"kernel": "persist", "metric": "replication_lag",
+           "batch": WAL_BATCH, "batches": WAL_BATCHES,
+           "lag_seqs_before_poll": lag_before.seqs,
+           "lag_seqs": lag_after.seqs, "lag_s": lag_after.seconds,
+           "ship_s": dt_ship, "replay_rows_per_s": rows / dt_replay,
+           "backend": jax.default_backend()}
+    common.emit("persist_replication_roundtrip", dt_ship + dt_replay,
+                f"shipped+replayed {rows} rows ({rows / dt_replay:.0f} "
+                f"rows/s replay), lag {lag_before.seqs}->{lag_after.seqs} "
+                "seqs")
+    return [rec]
+
+
 def _merge_records(new: list[dict]) -> None:
     """Append into BENCH_kernels.json without clobbering earlier jobs."""
     try:
@@ -135,14 +220,16 @@ def main() -> None:
     tmp = tempfile.mkdtemp(prefix="persist_bench_")
     try:
         snap_recs = snapshot_bandwidth(eng, os.path.join(tmp, "snap"))
+        delta_recs = checkpoint_delta(eng, os.path.join(tmp, "snap"))
         wal_dir = os.path.join(tmp, "wal")
         persist.ensure_attached(eng, wal_dir)
         wal_recs = wal_rates(eng, wal_dir)
+        repl_recs = replication_rates(eng, wal_dir, os.path.join(tmp, "ship"))
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
-    _merge_records(snap_recs + wal_recs)
-    print(f"# persist_bench: appended {len(snap_recs) + len(wal_recs)} "
-          f"records to {KERNELS_JSON}")
+    recs = snap_recs + delta_recs + wal_recs + repl_recs
+    _merge_records(recs)
+    print(f"# persist_bench: appended {len(recs)} records to {KERNELS_JSON}")
 
 
 if __name__ == "__main__":

@@ -7,20 +7,35 @@ every mutation durable before it becomes visible; ``open_engine`` recovers
 snapshot + replay, bit-identical to the never-crashed engine over the
 acknowledged prefix — or fails loudly with a typed error. See
 docs/persistence.md.
+
+The replication tier (``repro.persist.replicate``) ships the same WAL to
+warm standbys: ``WALShipper`` publishes closed segments over a pluggable
+transport, ``StandbyReplica`` replays them into a read-serving follower,
+and fenced failover (``promote`` + term tokens) makes split-brain
+structurally impossible (``FencedError`` / ``ReplicationError``).
 """
 from repro.persist.errors import (CorruptSnapshotError, CorruptWALError,
-                                  NoSnapshotError, PersistError)
+                                  FencedError, NoSnapshotError, PersistError,
+                                  ReplicationError)
+from repro.persist.replicate import (DirTransport, PipeTransport,
+                                     ReplicationLag, StandbyReplica,
+                                     WALShipper, decode_ship_frame,
+                                     encode_ship_frame, make_fence_guard)
 from repro.persist.snapshot import (MANIFEST_NAME, RecoveryInfo,
                                     ensure_attached, load_snapshot,
                                     open_engine, read_manifest,
                                     save_snapshot)
 from repro.persist.wal import (WALRecord, WALWriter, apply_record, iter_wal,
-                               scan_wal, wal_files, wal_name)
+                               scan_wal, scan_wal_bytes, wal_files, wal_name,
+                               wal_term)
 
 __all__ = [
     "PersistError", "NoSnapshotError", "CorruptSnapshotError",
-    "CorruptWALError", "MANIFEST_NAME", "RecoveryInfo", "save_snapshot",
-    "load_snapshot", "open_engine", "read_manifest", "ensure_attached",
-    "WALRecord", "WALWriter", "apply_record", "iter_wal", "scan_wal",
-    "wal_files", "wal_name",
+    "CorruptWALError", "FencedError", "ReplicationError", "MANIFEST_NAME",
+    "RecoveryInfo", "save_snapshot", "load_snapshot", "open_engine",
+    "read_manifest", "ensure_attached", "WALRecord", "WALWriter",
+    "apply_record", "iter_wal", "scan_wal", "scan_wal_bytes", "wal_files",
+    "wal_name", "wal_term", "DirTransport", "PipeTransport", "WALShipper",
+    "StandbyReplica", "ReplicationLag", "encode_ship_frame",
+    "decode_ship_frame", "make_fence_guard",
 ]

@@ -32,3 +32,20 @@ class CorruptWALError(PersistError):
     that is not the final one, or a sequence gap (a missing WAL file).
     A torn tail on the FINAL file is not an error — it is the expected
     signature of a crash mid-append and recovery keeps the valid prefix."""
+
+
+class FencedError(PersistError):
+    """A write from a superseded term was rejected: the cluster promoted a
+    new primary (its term is higher than the writer's), so the old primary
+    must stop appending and shipping IMMEDIATELY. This is the split-brain
+    guard of docs/persistence.md — the fenced process keeps its local
+    state (useful for forensics) but no byte of it reaches the replication
+    stream or the shared term authority again."""
+
+
+class ReplicationError(PersistError):
+    """The shipped-WAL chain cannot be followed safely: a gap in the
+    shipped sequence (a dropped segment), a transport that kept failing
+    past the bounded retry budget, or an undecodable ship frame. The
+    standby must stop replaying and resync from a snapshot rather than
+    serve a silently diverged index."""

@@ -51,6 +51,21 @@ def append_record(f, data: bytes) -> None:
     os.fsync(f.fileno())
 
 
+def append_bytes(f, data: bytes) -> None:
+    """Append ``data`` WITHOUT fsync — the group-commit half of the WAL
+    write path (``WALWriter(fsync_interval=...)``): bytes reach the OS, the
+    durability point is the next ``fsync_file``. Patchable primitive.
+    """
+    f.write(data)
+    f.flush()
+
+
+def fsync_file(f) -> None:
+    """fsync an open file — the deferred half of a group commit. Patchable
+    primitive."""
+    os.fsync(f.fileno())
+
+
 def fsync_dir(path: str) -> None:
     """fsync a directory so a rename/create inside it is durable.
 

@@ -49,7 +49,8 @@ from repro.persist import wal as wal_mod
 from repro.persist.errors import CorruptSnapshotError, NoSnapshotError
 
 MANIFEST_NAME = "MANIFEST.json"
-SCHEMA = 1
+SCHEMA = 2
+_KNOWN_SCHEMAS = (1, 2)  # 1 = pre-replication (no term/parent/delta fields)
 _SNAPSHOT_KINDS = ("single", "sharded")
 
 
@@ -62,6 +63,7 @@ class RecoveryInfo(NamedTuple):
     last_seq: int        # wal_seq + replayed == total acknowledged mutations
     truncated_bytes: int # torn tail dropped from the final WAL file (crash
     #                      mid-append; 0 on a clean shutdown)
+    term: int = 0        # fencing term the manifest recorded (replication)
 
 
 # ---------------------------------------------------------------------------
@@ -74,18 +76,57 @@ def _npy_bytes(arr: np.ndarray) -> bytes:
     return bio.getvalue()
 
 
+class _DeltaStats:
+    """Per-checkpoint byte accounting: what was rewritten vs referenced."""
+
+    def __init__(self):
+        self.bytes_written = 0
+        self.bytes_reused = 0
+        self.segments_written = 0
+        self.segments_reused = 0
+
+    def as_meta(self) -> dict:
+        return {"bytes_written": self.bytes_written,
+                "bytes_reused": self.bytes_reused,
+                "segments_written": self.segments_written,
+                "segments_reused": self.segments_reused}
+
+
 def _write_segments(directory: str, seg_dir: str,
-                    arrays: dict[str, np.ndarray]) -> dict:
+                    arrays: dict[str, np.ndarray],
+                    parent: dict | None = None,
+                    stats: _DeltaStats | None = None) -> dict:
     """Write each array as ``<seg_dir>/<name>.npy``; return manifest entries
-    (file paths relative to the root ``directory``)."""
+    (file paths relative to the root ``directory``).
+
+    **Delta snapshots**: when ``parent`` holds the previous manifest's
+    entries for the same segment set, any array whose serialized bytes
+    CRC+size-match the parent entry is NOT rewritten — the new manifest
+    references the parent's file in place (``_gc`` keeps every referenced
+    snapshot directory alive). A delete-only interval thus rewrites only
+    ids/sizes/live_bits, never the code or base payloads.
+    """
     entries = {}
     for name, arr in arrays.items():
         data = _npy_bytes(arr)
+        crc = pio.crc32(data)
+        old = None if parent is None else parent.get(name)
+        if (old is not None and old.get("crc") == crc
+                and old.get("size") == len(data)
+                and os.path.exists(os.path.join(directory, old["file"]))):
+            entries[name] = {"file": old["file"], "crc": crc,
+                             "size": len(data)}
+            if stats is not None:
+                stats.bytes_reused += len(data)
+                stats.segments_reused += 1
+            continue
         rel = os.path.join(os.path.relpath(seg_dir, directory),
                            f"{name}.npy")
         pio.write_bytes(os.path.join(directory, rel), data)
-        entries[name] = {"file": rel, "crc": pio.crc32(data),
-                         "size": len(data)}
+        entries[name] = {"file": rel, "crc": crc, "size": len(data)}
+        if stats is not None:
+            stats.bytes_written += len(data)
+            stats.segments_written += 1
     return entries
 
 
@@ -145,13 +186,17 @@ def read_manifest(directory: str) -> dict:
     except (UnicodeDecodeError, json.JSONDecodeError) as e:
         raise CorruptSnapshotError(
             f"{path} is not valid manifest JSON: {e}") from e
-    if (manifest.get("schema") != SCHEMA
+    if (manifest.get("schema") not in _KNOWN_SCHEMAS
             or manifest.get("kind") not in _SNAPSHOT_KINDS):
         raise CorruptSnapshotError(
             f"{path}: unknown schema/kind "
             f"{manifest.get('schema')!r}/{manifest.get('kind')!r}")
     if manifest.get("manifest_crc") != _manifest_crc(manifest):
         raise CorruptSnapshotError(f"{path} failed its self-CRC check")
+    # graceful migration: schema-1 manifests predate replication — they are
+    # full (non-delta) snapshots written by term 0 with no parent chain
+    manifest.setdefault("term", 0)
+    manifest.setdefault("parent", None)
     return manifest
 
 
@@ -172,7 +217,8 @@ def _config_meta(config: EngineConfig) -> dict:
 
 
 def _serialize_single(engine: SearchEngine, st, directory: str,
-                      snap_dir: str) -> tuple[dict, dict, None]:
+                      snap_dir: str, parent: dict | None,
+                      stats: _DeltaStats) -> tuple[dict, dict, None]:
     if engine.coarse_kind not in ("flat", "hnsw", "tree"):
         raise ValueError(
             f"cannot snapshot an engine with a custom coarse quantizer "
@@ -194,18 +240,43 @@ def _serialize_single(engine: SearchEngine, st, directory: str,
             "ef_construction": engine.ef_construction,
             "epoch": int(st.epoch),
             "n_tombstones": int(st.n_tombstones)}
-    return _write_segments(directory, snap_dir, arrays), meta, None
+    parent_segs = None if parent is None else parent.get("segments")
+    return (_write_segments(directory, snap_dir, arrays, parent_segs, stats),
+            meta, None)
+
+
+def _parent_shard_segments(directory: str, parent: dict | None,
+                           num_shards: int) -> list[dict | None]:
+    """Per-shard segment tables of the parent manifest (for delta reuse);
+    a shard whose sub-manifest cannot be verified simply gets no reuse."""
+    out: list[dict | None] = [None] * num_shards
+    if parent is None or len(parent.get("shards", ())) != num_shards:
+        return out
+    for j, entry in enumerate(parent["shards"]):
+        try:
+            sub = json.loads(_read_verified(
+                directory, {"file": entry["manifest"], "crc": entry["crc"],
+                            "size": entry["size"]},
+                "parent shard manifest").decode("utf-8"))
+            out[j] = sub["segments"]
+        except (CorruptSnapshotError, KeyError, UnicodeDecodeError,
+                json.JSONDecodeError):
+            out[j] = None
+    return out
 
 
 def _serialize_sharded(engine: ShardedEngine, st: _ShardState,
-                       directory: str, snap_dir: str
-                       ) -> tuple[dict, dict, list]:
+                       directory: str, snap_dir: str, parent: dict | None,
+                       stats: _DeltaStats) -> tuple[dict, dict, list]:
     arrays = {"centroids": np.asarray(engine.centroids),
               "codebook": np.asarray(engine.codebook.codewords)}
     if engine.member_s is not None:
         arrays["member_s"] = np.asarray(engine.member_s)
-    segments = _write_segments(directory, snap_dir, arrays)
+    parent_segs = None if parent is None else parent.get("segments")
+    segments = _write_segments(directory, snap_dir, arrays, parent_segs,
+                               stats)
     store = lists_mod.store_arrays(st.lists_s)  # 3-D, leading shard dim
+    parent_sh = _parent_shard_segments(directory, parent, engine.num_shards)
     shards = []
     for j in range(engine.num_shards):
         shard_dir = os.path.join(snap_dir, f"shard-{j:02d}")
@@ -217,7 +288,8 @@ def _serialize_sharded(engine: ShardedEngine, st: _ShardState,
         if st.base_s is not None:
             sh["base"] = np.asarray(st.base_s[j])
             sh["norms"] = np.asarray(st.norms_s[j])
-        entries = _write_segments(directory, shard_dir, sh)
+        entries = _write_segments(directory, shard_dir, sh, parent_sh[j],
+                                  stats)
         sub = json.dumps({"shard": j, "segments": entries},
                          indent=1).encode("utf-8")
         rel = os.path.join(os.path.relpath(shard_dir, directory),
@@ -234,7 +306,8 @@ def _serialize_sharded(engine: ShardedEngine, st: _ShardState,
     return segments, meta, shards
 
 
-def save_snapshot(engine, directory: str) -> dict:
+def save_snapshot(engine, directory: str, *, term: int | None = None,
+                  wal_seq: int | None = None) -> dict:
     """Checkpoint ``engine`` into ``directory``; returns the new manifest.
 
     The (WAL position, state) pair is captured atomically under the
@@ -244,24 +317,46 @@ def save_snapshot(engine, directory: str) -> dict:
     the new snapshot; a crash anywhere in between recovers from the old
     manifest plus the intact WAL chain. Works on ``SearchEngine`` and
     ``ShardedEngine`` (per-shard manifests).
+
+    Checkpoints are **delta snapshots**: segments whose bytes match the
+    parent manifest's CRC+size are referenced from the parent instead of
+    rewritten (the manifest records the ``parent`` name and per-checkpoint
+    byte accounting under ``delta``; ``_gc`` keeps every snapshot
+    directory the new manifest still references).
+
+    ``term`` stamps the manifest with the replication fencing term
+    (default: carry the previous manifest's term forward, 0 on a fresh
+    directory). ``wal_seq`` overrides the recorded WAL position — only
+    for engines WITHOUT an attached writer whose state is known to fold
+    in exactly that prefix (the standby-promotion path, where the replica
+    applied shipped records without logging them locally).
     """
     os.makedirs(directory, exist_ok=True)
+    try:
+        parent = read_manifest(directory)
+    except (NoSnapshotError, CorruptSnapshotError):
+        parent = None  # fresh (or unreadable) parent -> full snapshot
     with engine._mutate_lock:
         wal = getattr(engine, "_wal", None)
         if wal is not None:
             wal.rotate(directory)
-        wal_seq = 0 if wal is None else wal.last_seq
+            wal_seq = wal.last_seq
+        elif wal_seq is None:
+            wal_seq = 0
         st = engine._state  # immutable — safe to serialize outside the lock
+    if term is None:
+        term = 0 if parent is None else int(parent.get("term", 0))
     snap_name = _next_snap_name(directory)
     snap_dir = os.path.join(directory, snap_name)
     os.makedirs(snap_dir, exist_ok=True)
+    stats = _DeltaStats()
     if isinstance(engine, ShardedEngine):
         segments, meta, shards = _serialize_sharded(
-            engine, st, directory, snap_dir)
+            engine, st, directory, snap_dir, parent, stats)
         kind = "sharded"
     else:
         segments, meta, shards = _serialize_single(
-            engine, st, directory, snap_dir)
+            engine, st, directory, snap_dir, parent, stats)
         kind = "single"
     # autotune verdicts ride along so a restored replica serves warm
     tmp = os.path.join(snap_dir, "autotune.tmp")
@@ -269,34 +364,80 @@ def save_snapshot(engine, directory: str) -> dict:
     with open(tmp, "rb") as f:
         tune = f.read()
     os.remove(tmp)
-    rel = os.path.join(snap_name, "autotune.json")
-    pio.write_bytes(os.path.join(directory, rel), tune)
-    segments["autotune"] = {"file": rel, "crc": pio.crc32(tune),
-                            "size": len(tune)}
+    tune_crc = pio.crc32(tune)
+    old_tune = None if parent is None else parent["segments"].get("autotune")
+    if (old_tune is not None and old_tune.get("crc") == tune_crc
+            and old_tune.get("size") == len(tune)
+            and os.path.exists(os.path.join(directory, old_tune["file"]))):
+        segments["autotune"] = {"file": old_tune["file"], "crc": tune_crc,
+                                "size": len(tune)}
+        stats.bytes_reused += len(tune)
+        stats.segments_reused += 1
+    else:
+        rel = os.path.join(snap_name, "autotune.json")
+        pio.write_bytes(os.path.join(directory, rel), tune)
+        segments["autotune"] = {"file": rel, "crc": tune_crc,
+                                "size": len(tune)}
+        stats.bytes_written += len(tune)
+        stats.segments_written += 1
     pio.fsync_dir(snap_dir)
     manifest = {"schema": SCHEMA, "kind": kind, "snapshot": snap_name,
+                "term": int(term),
+                "parent": None if parent is None else parent["snapshot"],
+                "delta": stats.as_meta(),
                 "wal_seq": int(wal_seq), "meta": meta, "segments": segments}
     if shards is not None:
         manifest["shards"] = shards
     manifest["manifest_crc"] = _manifest_crc(manifest)
     pio.atomic_write_bytes(os.path.join(directory, MANIFEST_NAME),
                            json.dumps(manifest, indent=1).encode("utf-8"))
-    _gc(directory, snap_name, wal_seq,
+    _gc(directory, manifest, wal_seq,
         keep=None if wal is None else wal.path)
     return manifest
 
 
-def _gc(directory: str, current_snap: str, wal_seq: int,
+def _reachable_snaps(manifest: dict) -> set[str]:
+    """Snapshot directories the manifest still references — its own plus
+    any parent dirs that delta entries point into (the live parent chain)."""
+    rels = [e["file"] for e in manifest["segments"].values()]
+    rels += [sh["manifest"] for sh in manifest.get("shards", ())]
+    keep = {manifest["snapshot"]}
+    for rel in rels:
+        head = rel.replace(os.sep, "/").split("/", 1)[0]
+        if head.startswith("snap-"):
+            keep.add(head)
+    return keep
+
+
+def _gc(directory: str, manifest: dict, wal_seq: int,
         keep: str | None) -> None:
     """Drop snapshots and WAL files the new manifest supersedes.
 
-    Runs only after the manifest is durable. A WAL file is deletable when
-    a LATER file exists and every record it could hold is <= ``wal_seq``
-    (the final file's extent is unknown without a scan, so it always
-    stays); the active writer's file is never touched.
+    Runs only after the manifest is durable. A snapshot directory survives
+    while ANY current segment references into it (the delta parent chain);
+    note the per-shard sub-manifests live inside their snapshot directory,
+    so a kept directory keeps its shard segment tables too — and those
+    tables' own entries always point within the same directory set the top
+    manifest references. A WAL file is deletable when a LATER file exists
+    and every record it could hold is <= ``wal_seq`` (the final file's
+    extent is unknown without a scan, so it always stays); the active
+    writer's file is never touched.
     """
+    reachable = _reachable_snaps(manifest)
+    # shard sub-manifests referenced by the top manifest may in turn
+    # reference parent shard directories: walk them too
+    for sh in manifest.get("shards", ()):
+        try:
+            with open(os.path.join(directory, sh["manifest"])) as f:
+                sub = json.load(f)
+            for e in sub.get("segments", {}).values():
+                head = e["file"].replace(os.sep, "/").split("/", 1)[0]
+                if head.startswith("snap-"):
+                    reachable.add(head)
+        except (OSError, json.JSONDecodeError, KeyError):
+            continue  # unreadable sub-manifest: keep GC conservative below
     for name in os.listdir(directory):
-        if (name.startswith("snap-") and name != current_snap
+        if (name.startswith("snap-") and name not in reachable
                 and os.path.isdir(os.path.join(directory, name))):
             shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
     files = wal_mod.wal_files(directory)
@@ -455,15 +596,17 @@ def open_engine(directory: str, *, attach: bool = True):
         wal_mod.apply_record(engine, rec)
         replayed += 1
     last_seq = wal_seq + replayed
+    term = int(manifest.get("term", 0))
     if attach:
         writer = wal_mod.WALWriter(
             os.path.join(directory, wal_mod.wal_name(last_seq + 1)),
-            last_seq + 1)
+            last_seq + 1, term=term)
         engine.attach_wal(writer)
     return engine, RecoveryInfo(snapshot=manifest["snapshot"],
                                 wal_seq=wal_seq, replayed=replayed,
                                 last_seq=last_seq,
-                                truncated_bytes=truncated)
+                                truncated_bytes=truncated,
+                                term=term)
 
 
 def ensure_attached(engine, directory: str) -> None:
@@ -483,9 +626,10 @@ def ensure_attached(engine, directory: str) -> None:
     try:
         read_manifest(directory)
     except NoSnapshotError:
-        save_snapshot(engine, directory)
+        manifest = save_snapshot(engine, directory)
         writer = wal_mod.WALWriter(
-            os.path.join(directory, wal_mod.wal_name(1)), 1)
+            os.path.join(directory, wal_mod.wal_name(1)), 1,
+            term=int(manifest.get("term", 0)))
         engine.attach_wal(writer)
         return
     raise ValueError(

@@ -28,6 +28,13 @@ WAL files are named ``wal-<start_seq:012d>.log`` so a directory's files
 chain in seq order; ``rotate`` (the checkpoint path) closes the current
 file and opens the next, and GC deletes files whose records a durable
 snapshot fully covers.
+
+Since the replication tier (docs/persistence.md, ``persist.replicate``)
+every NEW WAL file opens with a 24-byte file header carrying the writer's
+**term** — the fencing token a promotion bumps — and the file's start seq,
+so a shipped or recovered segment always knows which leadership era wrote
+it. Headerless files (pre-replication format) still parse; they read as
+term 0.
 """
 from __future__ import annotations
 
@@ -36,7 +43,8 @@ import os
 import re
 import struct
 import threading
-from typing import Iterator, NamedTuple
+import time
+from typing import Callable, Iterator, NamedTuple
 
 import numpy as np
 
@@ -47,6 +55,10 @@ _MAGIC = 0x4C415752  # "RWAL" little-endian
 _HEADER = struct.Struct("<IBBHQII")   # magic, op, flags, reserved, seq, len, crc
 _HEADER_CRC = struct.Struct("<I")
 PREAMBLE = _HEADER.size + _HEADER_CRC.size  # 28 bytes
+
+_FILE_MAGIC = 0x484C5752  # "RWLH" little-endian — per-file header, not a record
+_FILE_HEADER = struct.Struct("<IQQI")  # magic, term, start_seq, crc of first 20
+FILE_HEADER_SIZE = _FILE_HEADER.size   # 24 bytes
 
 OP_UPSERT = 1
 OP_DELETE = 2
@@ -79,6 +91,43 @@ class WALRecord(NamedTuple):
     arrays: dict[str, np.ndarray]  # the mutation's payload arrays
 
 
+def encode_file_header(term: int, start_seq: int) -> bytes:
+    """24-byte per-file header: term + start seq, self-CRC'd."""
+    head = _FILE_HEADER.pack(_FILE_MAGIC, int(term), int(start_seq), 0)[:20]
+    return head + struct.pack("<I", pio.crc32(head))
+
+
+def read_file_header(data: bytes) -> tuple[int, int] | None:
+    """(term, start_seq) if ``data`` opens with a complete, valid file
+    header; None for the pre-replication headerless format (or for data
+    shorter than a header — a crash between header write and first append
+    leaves such a prefix, which the record scan then reports as an empty
+    torn file). A COMPLETE header whose CRC fails is a bit flip, not a
+    tear, and raises ``CorruptWALError``."""
+    if len(data) < FILE_HEADER_SIZE:
+        return None
+    magic, term, start_seq, crc = _FILE_HEADER.unpack(
+        data[:FILE_HEADER_SIZE])
+    if magic != _FILE_MAGIC:
+        return None
+    if crc != pio.crc32(data[:20]):
+        raise CorruptWALError("WAL file header failed its CRC check")
+    return int(term), int(start_seq)
+
+
+def wal_term(path: str) -> int:
+    """Term recorded in the file's header (0 for headerless legacy files)."""
+    with open(path, "rb") as f:
+        head = f.read(FILE_HEADER_SIZE)
+    if len(head) < FILE_HEADER_SIZE:
+        return 0
+    try:
+        parsed = read_file_header(head)
+    except CorruptWALError:
+        return 0
+    return 0 if parsed is None else parsed[0]
+
+
 def encode_record(seq: int, op: str, arrays: dict[str, np.ndarray]) -> bytes:
     """One record's bytes: checksummed preamble + npz payload."""
     bio = _io.BytesIO()
@@ -103,10 +152,24 @@ def scan_wal(path: str) -> tuple[list[WALRecord], int, bool]:
     Anything that is NOT a clean torn tail — bad magic, failed header or
     payload CRC on fully-present bytes — raises ``CorruptWALError``.
     """
-    data = pio.read_bytes(path)
+    return scan_wal_bytes(pio.read_bytes(path), origin=path)
+
+
+def scan_wal_bytes(data: bytes, origin: str = "<bytes>"
+                   ) -> tuple[list[WALRecord], int, bool]:
+    """``scan_wal`` over in-memory segment bytes (the shipped-segment path:
+    a standby verifies and replays segments it never writes to disk). A
+    leading file header, if present, is CRC-checked and skipped."""
     records: list[WALRecord] = []
     off = 0
     n = len(data)
+    try:
+        header = read_file_header(data)
+    except CorruptWALError as e:
+        raise CorruptWALError(f"{origin}: {e}") from None
+    if header is not None:
+        off = FILE_HEADER_SIZE
+    path = origin
     while off < n:
         if n - off < PREAMBLE:
             return records, off, False          # torn header at EOF
@@ -171,14 +234,46 @@ class WALWriter:
     but the checkpointer rotates from another thread). ``seq`` is global
     and survives rotation — the next record after ``rotate`` lands in the
     new file with the next contiguous number.
+
+    ``term`` is the fencing token of docs/persistence.md: it is stamped
+    into every file header this writer creates, and an optional ``guard``
+    callable runs before every append — the replication tier installs one
+    that raises ``FencedError`` once a newer term exists, so a deposed
+    primary cannot extend its log even by one record.
+
+    ``fsync_interval`` enables **group commit**: appends write to the OS
+    immediately but the fsync is deferred until the interval elapses (or
+    an explicit ``flush``/``rotate``/``close``). Throughput per mutation
+    burst rises by the batched-fsync factor; the durability point of an
+    individual record widens to at most one interval — choose per
+    deployment (docs/persistence.md#group-commit).
     """
 
-    def __init__(self, path: str, next_seq: int):
+    def __init__(self, path: str, next_seq: int, *, term: int = 0,
+                 fsync_interval: float | None = None,
+                 guard: Callable[[], None] | None = None):
         self.path = path
+        self.term = int(term)
+        self.guard = guard
+        if fsync_interval is not None and fsync_interval < 0:
+            raise ValueError(
+                f"fsync_interval must be >= 0, got {fsync_interval}")
+        self.fsync_interval = fsync_interval
         self._f = open(path, "ab")
         self._next = int(next_seq)
         self._written_here = 0  # records appended to the CURRENT file
+        self._pending_fsync = 0  # group-commit records not yet fsync'd
+        self._last_fsync = time.monotonic()
         self._lock = threading.Lock()
+        self._write_header_if_new()
+
+    def _write_header_if_new(self) -> None:
+        # a brand-new file opens with the term header; a reopened file
+        # (recovery attaching at an existing path) keeps whatever it has
+        self._f.seek(0, os.SEEK_END)
+        if self._f.tell() == 0:
+            pio.append_record(self._f, encode_file_header(self.term,
+                                                          self._next))
 
     @property
     def last_seq(self) -> int:
@@ -187,13 +282,44 @@ class WALWriter:
             return self._next - 1
 
     def append(self, op: str, arrays: dict[str, np.ndarray]) -> int:
-        """Encode + append + fsync one record; returns its seq."""
+        """Encode + append one record; returns its seq.
+
+        Without ``fsync_interval`` the record is fsync'd before this
+        returns (the classic acknowledge point). With it, the fsync may be
+        deferred up to one interval (group commit). Either way the bytes
+        are written in seq order, so a crash still tears only the tail.
+        """
         with self._lock:
+            if self.guard is not None:
+                self.guard()
             seq = self._next
-            pio.append_record(self._f, encode_record(seq, op, arrays))
+            data = encode_record(seq, op, arrays)
+            if self.fsync_interval is None:
+                pio.append_record(self._f, data)
+            else:
+                pio.append_bytes(self._f, data)
+                self._pending_fsync += 1
+                now = time.monotonic()
+                if now - self._last_fsync >= self.fsync_interval:
+                    pio.fsync_file(self._f)
+                    self._pending_fsync = 0
+                    self._last_fsync = now
             self._next += 1
             self._written_here += 1
             return seq
+
+    def flush(self) -> None:
+        """Force the group-commit tail to disk (no-op when nothing is
+        pending or every append already fsync'd). After this returns every
+        appended record survives kill-9."""
+        with self._lock:
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        if self._pending_fsync and not self._f.closed:
+            pio.fsync_file(self._f)
+            self._pending_fsync = 0
+            self._last_fsync = time.monotonic()
 
     # -- the engine-facing hooks (docs/persistence.md) ----------------------
 
@@ -220,21 +346,26 @@ class WALWriter:
 
         No-op when the current file holds no records yet (back-to-back
         checkpoints with no intervening mutations would otherwise mint a
-        same-named file). Returns the active path.
+        same-named file). Flushes any group-commit tail first — a closed
+        (shippable) segment is always fully durable. Returns the active
+        path.
         """
         with self._lock:
             if self._written_here == 0:
                 return self.path
+            self._flush_locked()
             self._f.close()
             self.path = os.path.join(directory, wal_name(self._next))
             self._f = open(self.path, "ab")
             self._written_here = 0
+            self._write_header_if_new()
             pio.fsync_dir(directory)
             return self.path
 
     def close(self) -> None:
         with self._lock:
             if not self._f.closed:
+                self._flush_locked()
                 self._f.close()
 
 

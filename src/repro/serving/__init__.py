@@ -26,6 +26,7 @@ from repro.serving.batcher import (  # noqa: F401
 from repro.serving.errors import (  # noqa: F401
     DeadlineExceeded,
     LoopClosed,
+    NotPrimary,
     Overloaded,
 )
 from repro.serving.loop import LoopMetrics, ServeResult, ServingLoop  # noqa: F401

@@ -25,3 +25,11 @@ class LoopClosed(RuntimeError):
     """The serving loop (or its batcher) is shut down: submits are refused
     and ``close()`` fails still-pending futures with this instead of
     leaving callers blocked forever."""
+
+
+class NotPrimary(RuntimeError):
+    """A mutation reached a standby loop: standbys replay the primary's
+    shipped WAL and serve READS only — accepting a local write would fork
+    the replicated history. The caller should route the write to the
+    primary (or promote this standby first — docs/serving.md failover
+    runbook). Queries keep working throughout."""

@@ -30,6 +30,15 @@ batches finish on the retiring epoch while the next dispatch reads the new
 one — queries and mutations interleave with zero failed futures.
 ``metrics()`` reports the engine's current ``epoch`` and the cumulative
 ``rows_tombstoned`` the loop's queries probed past.
+
+Replication (docs/persistence.md#replication): with a ``transport`` the
+loop joins a primary/standby pair. ``role='primary'`` ships closed WAL
+segments on a background thread and fences its writer against newer
+terms; ``role='standby'`` replays the shipped stream into its engine
+(serving reads the whole time), sheds writes with ``NotPrimary``, watches
+the primary's heartbeat, and on ``promote()`` drains replay, bumps the
+fencing term, snapshots, and starts accepting mutations — the failover
+runbook in docs/serving.md walks the full drill.
 """
 from __future__ import annotations
 
@@ -47,7 +56,7 @@ from repro.engine import SearchEngine, fused_cache_size
 from repro.kernels.ops import (autotune_cache_size, load_autotune_cache,
                                save_autotune_cache)
 from repro.serving.batcher import DEFAULT_BUCKETS, Batcher, Request
-from repro.serving.errors import LoopClosed, Overloaded
+from repro.serving.errors import LoopClosed, NotPrimary, Overloaded
 from repro.serving.stats import StatsRegistry
 
 
@@ -93,6 +102,14 @@ class LoopMetrics(NamedTuple):
     #                        before reaching a dispatch slot
     checkpoints: int       # background snapshots written (0 without
     #                        snapshot_dir — docs/persistence.md)
+    role: str = "primary"  # 'primary' | 'standby' (docs/persistence.md
+    #                        #replication; standbys shed writes, serve reads)
+    term: int = 0          # fencing term this loop writes/replays under
+    replication_lag_seqs: int = 0    # standby: acked records not yet applied
+    replication_lag_s: float = 0.0   # standby: age of that primary heartbeat
+    segments_shipped: int = 0        # primary: WAL segments published
+    records_replayed: int = 0        # standby: records applied from the
+    #                                  shipped stream
 
 
 class ServingLoop:
@@ -115,7 +132,14 @@ class ServingLoop:
                  compact_at: float | None = None,
                  max_pending: int | None = None,
                  snapshot_dir: str | None = None,
-                 snapshot_every: float = 30.0):
+                 snapshot_every: float = 30.0,
+                 role: str = "primary",
+                 transport=None,
+                 ship_every: float = 0.05,
+                 poll_every: float = 0.02,
+                 heartbeat_timeout: float | None = None,
+                 on_failover=None,
+                 standby_start_seq: int = 0):
         self.engine = engine
         # durable serving (docs/persistence.md): with snapshot_dir set the
         # loop makes the engine durable into that directory (initial
@@ -125,15 +149,51 @@ class ServingLoop:
         # mutations arrive, truncating the WAL chain as it goes.
         if snapshot_every <= 0:
             raise ValueError(f"snapshot_every must be > 0, got {snapshot_every}")
+        if role not in ("primary", "standby"):
+            raise ValueError(f"role must be 'primary'|'standby', got {role!r}")
+        if role == "standby" and transport is None:
+            raise ValueError("role='standby' requires a transport to follow")
+        if ship_every <= 0 or poll_every <= 0:
+            raise ValueError("ship_every/poll_every must be > 0")
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = float(snapshot_every)
+        self.role = role
+        self.transport = transport
+        self.ship_every = float(ship_every)
+        self.poll_every = float(poll_every)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.on_failover = on_failover
         self._last_ckpt_seq = 0
         self._ckpt_thread: threading.Thread | None = None
         self._ckpt_error: Exception | None = None
-        if snapshot_dir is not None:
+        self._ship_thread: threading.Thread | None = None
+        self._replay_thread: threading.Thread | None = None
+        self._stop_replay = threading.Event()
+        self._repl_error: Exception | None = None
+        self._failover_fired = False
+        self._shipper = None
+        self._replica = None
+        if role == "standby":
+            # a standby never attaches a WAL — it replays the primary's
+            # shipped records (write shedding below keeps it that way) and
+            # only promote() makes it durable in its own right
+            self._replica = persist.StandbyReplica(
+                engine, transport, start_seq=standby_start_seq)
+        elif snapshot_dir is not None:
             persist.ensure_attached(engine, snapshot_dir)
-            self._last_ckpt_seq = persist.read_manifest(
-                snapshot_dir)["wal_seq"]
+            manifest = persist.read_manifest(snapshot_dir)
+            self._last_ckpt_seq = manifest["wal_seq"]
+            if transport is not None:
+                term = int(manifest.get("term", 0))
+                self._shipper = persist.WALShipper(
+                    engine, snapshot_dir, transport, term=term)
+                # fence the local writer too: once a newer term exists the
+                # next append fails, not just the next ship
+                engine._wal.guard = persist.make_fence_guard(transport, term)
+        elif transport is not None:
+            raise ValueError(
+                "a primary with a transport needs snapshot_dir (the WAL it "
+                "ships lives there)")
         # per-loop margin width override (docs/anytime.md): traced, so two
         # loops over one engine can serve different latency tiers without
         # extra compiles. Only legal when the engine's probe_policy='margin'.
@@ -217,14 +277,58 @@ class ServingLoop:
                     # only saves re-timing, it is not required state
                     pass
         self._stop.clear()
+        self._stop_replay.clear()
         self._thread = threading.Thread(target=self._run, name="repro-serve",
                                         daemon=True)
         self._thread.start()
-        if self.snapshot_dir is not None:
+        if self.role == "primary" and self.snapshot_dir is not None:
             self._ckpt_thread = threading.Thread(
                 target=self._ckpt_run, name="repro-checkpoint", daemon=True)
             self._ckpt_thread.start()
+        if self._shipper is not None:
+            self._ship_thread = threading.Thread(
+                target=self._ship_run, name="repro-ship", daemon=True)
+            self._ship_thread.start()
+        if self.role == "standby":
+            self._replay_thread = threading.Thread(
+                target=self._replay_run, name="repro-replay", daemon=True)
+            self._replay_thread.start()
         return self
+
+    def _shutdown(self, timeout: float) -> None:
+        """Common teardown: stop + join EVERY background thread, then make
+        durable state quiescent. Idempotent — ``stop``/``close`` in any
+        order or repetition never leaves a dangling thread (the historical
+        bug: ``close()`` racing a checkpoint skipped the join when the
+        dispatch thread was already gone) and always flushes the WAL's
+        group-commit tail so every acknowledged record is on disk.
+        """
+        self.batcher.close()
+        self._stop.set()
+        self._stop_replay.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join(timeout)
+            self._ckpt_thread = None
+        if self._ship_thread is not None:
+            self._ship_thread.join(timeout)
+            self._ship_thread = None
+        if (self._replay_thread is not None
+                and self._replay_thread is not threading.current_thread()):
+            self._replay_thread.join(timeout)
+            self._replay_thread = None
+        if self.role == "primary" and self.snapshot_dir is not None:
+            self._checkpoint_if_dirty()
+        if self._shipper is not None:
+            try:  # best-effort final ship so a standby sees the full chain
+                self._shipper.ship_once()
+            except Exception:
+                pass
+        wal = getattr(self.engine, "_wal", None)
+        if wal is not None:
+            wal.flush()
 
     def stop(self, timeout: float = 5.0) -> None:
         """Stop dispatching; cancel anything still queued.
@@ -232,17 +336,10 @@ class ServingLoop:
         With ``snapshot_dir`` set, a final checkpoint runs first so every
         acknowledged mutation is covered by the last snapshot (the WAL
         already covered it — this just shortens replay on the next boot).
+        Stops the checkpoint/ship/replay threads too and flushes the WAL;
+        idempotent, and safe to interleave with ``close``.
         """
-        if self._thread is None:
-            return
-        self.batcher.close()
-        self._stop.set()
-        self._thread.join(timeout)
-        self._thread = None
-        if self._ckpt_thread is not None:
-            self._ckpt_thread.join(timeout)
-            self._ckpt_thread = None
-            self._checkpoint_if_dirty()
+        self._shutdown(timeout)
         while (reqs := self.batcher.next_batch(timeout=0)):
             for r in reqs:
                 r.future.cancel()
@@ -255,17 +352,7 @@ class ServingLoop:
         a caller blocked in ``future.result()`` gets a typed failure
         instead of waiting forever on a future nothing will ever run.
         """
-        if self._thread is None:
-            self.batcher.close()
-        else:
-            self.batcher.close()
-            self._stop.set()
-            self._thread.join(timeout)
-            self._thread = None
-            if self._ckpt_thread is not None:
-                self._ckpt_thread.join(timeout)
-                self._ckpt_thread = None
-                self._checkpoint_if_dirty()
+        self._shutdown(timeout)
         while (reqs := self.batcher.next_batch(timeout=0)):
             for r in reqs:
                 if not r.future.done():
@@ -354,12 +441,17 @@ class ServingLoop:
         batches already dispatched finish on the retiring epoch and the
         next dispatch reads the new one — no pause, no failed futures.
         Safe to call from any thread, running loop or not.
+
+        On a standby, raises ``NotPrimary`` (graceful degradation: reads
+        keep flowing, writes are shed until ``promote()``).
         """
+        self._require_primary("upsert")
         return self.engine.upsert(ids, vecs, attrs=attrs)
 
     def delete(self, ids) -> int:
         """Tombstone rows while serving (see ``upsert`` for the epoch
         contract). Returns the number of rows deleted."""
+        self._require_primary("delete")
         return self.engine.delete(ids)
 
     def compact(self, cap: int | None = None) -> int:
@@ -372,7 +464,15 @@ class ServingLoop:
         pays one re-sweep/compile, subsequent traffic is steady again.
         Returns the number of tombstoned slots reclaimed.
         """
+        self._require_primary("compact")
         return self.engine.compact(cap=cap)
+
+    def _require_primary(self, what: str) -> None:
+        if self.role != "primary":
+            raise NotPrimary(
+                f"{what} refused: this loop is a standby replaying the "
+                "primary's WAL — route writes to the primary or promote() "
+                "this replica first (docs/serving.md)")
 
     def set_filter(self, filter_bits) -> None:
         """Swap the loop-level filter bitmap (None = unfiltered).
@@ -388,9 +488,26 @@ class ServingLoop:
     # -- observability -------------------------------------------------------
 
     def metrics(self) -> LoopMetrics:
+        lag = persist.ReplicationLag(0, 0.0)
+        term = 0
+        replayed = 0
+        shipped = 0
+        if self._replica is not None:
+            lag = self._replica.lag()
+            term = self._replica.max_term
+            replayed = self._replica.records_replayed
+        if self._shipper is not None:
+            term = self._shipper.term
+            shipped = self._shipper.segments_shipped
         with self._lock:
             total = self._rows_served + self._rows_padded
             return LoopMetrics(
+                role=self.role,
+                term=term,
+                replication_lag_seqs=lag.seqs,
+                replication_lag_s=lag.seconds,
+                segments_shipped=shipped,
+                records_replayed=replayed,
                 batches=self._batches,
                 rows_served=self._rows_served,
                 rows_padded=self._rows_padded,
@@ -467,6 +584,103 @@ class ServingLoop:
     def checkpoint_error(self) -> Exception | None:
         """Last background-checkpoint failure, None when healthy."""
         return self._ckpt_error
+
+    # -- replication (docs/persistence.md#replication) -----------------------
+
+    def _ship_run(self) -> None:
+        """Primary's shipping thread: rotate + publish closed WAL segments
+        every ``ship_every`` seconds. ``FencedError`` means a standby was
+        promoted over us — shipping stops for good (the writer guard
+        fences appends the same way); transient ``ReplicationError`` is
+        recorded and retried next round (already-published segments are
+        skipped, so a healed transport catches up exactly)."""
+        while not self._stop.wait(self.ship_every):
+            try:
+                self._shipper.ship_once()
+            except persist.FencedError as e:
+                self._repl_error = e
+                return
+            except Exception as e:
+                self._repl_error = e
+
+    def _replay_run(self) -> None:
+        """Standby's replay thread: poll + apply the shipped stream every
+        ``poll_every`` seconds, and watch the primary's heartbeat — silent
+        past ``heartbeat_timeout`` fires ``on_failover(self)`` ONCE (the
+        supervisor hook; it may call ``promote()`` directly). Replay
+        errors are loud-and-stop: a standby that cannot follow the chain
+        exactly keeps serving its current prefix, never a diverged one."""
+        while not self._stop_replay.wait(self.poll_every):
+            try:
+                self._replica.poll_once()
+            except Exception as e:
+                self._repl_error = e
+                return
+            if (self.heartbeat_timeout is not None
+                    and not self._failover_fired):
+                hb = self.transport.read_heartbeat("primary")
+                if (hb is not None and time.time() - float(hb.get("time", 0))
+                        > self.heartbeat_timeout):
+                    self._failover_fired = True
+                    if self.on_failover is not None:
+                        try:
+                            self.on_failover(self)
+                        except Exception as e:
+                            self._repl_error = e
+
+    def promote(self, timeout: float = 5.0) -> int:
+        """Fenced failover: turn this standby into the primary; returns the
+        new term. Safe to call from the ``on_failover`` hook (which runs
+        on the replay thread) or from any other thread:
+
+        1. stop the replay thread (joined unless we ARE it),
+        2. drain every segment already shipped, bump the transport term
+           (``FencedError`` if a newer promotion won the race — this loop
+           then stays a standby),
+        3. snapshot the drained state into ``snapshot_dir`` under the new
+           term and attach a fenced WAL writer,
+        4. start accepting mutations, checkpointing, and shipping.
+
+        Standby reads keep flowing throughout — the dispatch thread never
+        pauses.
+        """
+        if self.role != "standby":
+            raise RuntimeError("promote() is only valid on a standby loop")
+        if self.snapshot_dir is None:
+            raise RuntimeError(
+                "promote() needs snapshot_dir — the promoted primary's "
+                "durable directory")
+        self._stop_replay.set()
+        if (self._replay_thread is not None
+                and self._replay_thread is not threading.current_thread()):
+            self._replay_thread.join(timeout)
+        self._replay_thread = None
+        new_term = self._replica.promote(self.snapshot_dir)
+        self.role = "primary"
+        self._last_ckpt_seq = self._replica.applied_seq
+        self._shipper = persist.WALShipper(
+            self.engine, self.snapshot_dir, self.transport, term=new_term)
+        if self._thread is not None:  # loop running: start primary threads
+            self._ckpt_thread = threading.Thread(
+                target=self._ckpt_run, name="repro-checkpoint", daemon=True)
+            self._ckpt_thread.start()
+            self._ship_thread = threading.Thread(
+                target=self._ship_run, name="repro-ship", daemon=True)
+            self._ship_thread.start()
+        return new_term
+
+    @property
+    def replication_error(self) -> Exception | None:
+        """Last ship/replay/failover-hook failure, None when healthy. A
+        ``FencedError`` here on an old primary is the EXPECTED signature
+        of having been failed over."""
+        return self._repl_error
+
+    def replication_lag(self) -> "persist.ReplicationLag":
+        """Standby's lag behind the primary (0/0.0 on a primary)."""
+        if self._replica is None:
+            return persist.ReplicationLag(0, 0.0)
+        return self._replica.lag()
 
     def _maybe_compact(self) -> None:
         """Auto-compaction: runs on the dispatch thread BETWEEN batches.

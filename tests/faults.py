@@ -1,9 +1,10 @@
 """Fault-injection harness for the durable-index subsystem.
 
-Every persistence byte crosses the four primitives in ``repro.persist.io``
-(``write_bytes`` / ``read_bytes`` / ``append_record`` / ``fsync_dir``) —
-see that module's docstring. ``FaultInjector`` monkey-wraps exactly those,
-so the harness can deterministically produce:
+Every persistence byte crosses the primitives in ``repro.persist.io``
+(``write_bytes`` / ``read_bytes`` / ``append_record`` and the group-commit
+pair ``append_bytes`` / ``fsync_file``) — see that module's docstring.
+``FaultInjector`` monkey-wraps exactly those, so the harness can
+deterministically produce:
 
   - **torn writes**: a snapshot segment / WAL append persists only a prefix
     of its bytes (crash mid-write);
@@ -102,6 +103,15 @@ class FaultInjector:
             raise SimulatedCrash(f"append_record at step {self.writes}")
         self._orig_append(f, out)
 
+    def _append_bytes(self, f, data: bytes) -> None:
+        # the group-commit write half: same write-side counter, so a crash
+        # sweep covers deferred-fsync appends exactly like fsync'd ones
+        out = self._on_write(data)
+        if out is None:
+            self._orig_append_b(f, data[:int(len(data) * self.torn_fraction)])
+            raise SimulatedCrash(f"append_bytes at step {self.writes}")
+        self._orig_append_b(f, out)
+
     def _read_bytes(self, path: str) -> bytes:
         data = self._orig_read(path)
         self.reads += 1
@@ -116,15 +126,18 @@ class FaultInjector:
     def __enter__(self) -> "FaultInjector":
         self._orig_write = pio.write_bytes
         self._orig_append = pio.append_record
+        self._orig_append_b = pio.append_bytes
         self._orig_read = pio.read_bytes
         pio.write_bytes = self._write_bytes
         pio.append_record = self._append_record
+        pio.append_bytes = self._append_bytes
         pio.read_bytes = self._read_bytes
         return self
 
     def __exit__(self, *exc) -> None:
         pio.write_bytes = self._orig_write
         pio.append_record = self._orig_append
+        pio.append_bytes = self._orig_append_b
         pio.read_bytes = self._orig_read
 
 

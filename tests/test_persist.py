@@ -168,6 +168,63 @@ def test_wal_chain_gap_and_torn_middle_are_loud(tmp_path):
         list(persist.iter_wal(d))
 
 
+# the replication seam (persist.replicate) resumes replay at exact seqs
+# across segment boundaries — these edges must be surgically precise
+
+def test_iter_wal_resume_at_rotation_seam(tmp_path):
+    """after_seq landing exactly on a segment boundary yields precisely
+    the later file's records — no duplicate, no skip."""
+    d = str(tmp_path)
+    w = WALWriter(os.path.join(d, persist.wal_name(1)), 1)
+    w.log_delete(np.array([1]))
+    w.log_delete(np.array([2]))
+    w.rotate(d)  # seam: file 1 holds seqs 1-2, file 2 starts at 3
+    w.log_delete(np.array([3]))
+    w.log_delete(np.array([4]))
+    w.close()
+    assert [r.seq for r in persist.iter_wal(d, after_seq=0)] == [1, 2, 3, 4]
+    assert [r.seq for r in persist.iter_wal(d, after_seq=2)] == [3, 4]  # seam
+    assert [r.seq for r in persist.iter_wal(d, after_seq=3)] == [4]
+    assert [r.seq for r in persist.iter_wal(d, after_seq=4)] == []
+    assert [r.seq for r in persist.iter_wal(d, after_seq=99)] == []
+
+
+def test_iter_wal_duplicate_seqs_across_files(tmp_path):
+    """Duplicates at or below after_seq are skipped exactly; a duplicate
+    ABOVE it is a forked history and must be loud (contiguity check)."""
+    d = str(tmp_path)
+    w = WALWriter(os.path.join(d, persist.wal_name(1)), 1)
+    w.log_delete(np.array([1]))
+    w.log_delete(np.array([2]))
+    w.close()
+    # a re-shipped/re-created file whose records OVERLAP the previous one
+    with open(os.path.join(d, persist.wal_name(2)), "wb") as f:
+        for seq in (2, 3):
+            f.write(wal_mod.encode_record(
+                seq, "delete", {"ids": np.array([seq], np.int64)}))
+    # resuming past the duplicate: seq 2 copies are both skipped, 3 plays
+    assert [r.seq for r in persist.iter_wal(d, after_seq=2)] == [3]
+    # replaying from scratch meets seq 2 twice above after_seq: loud
+    with pytest.raises(CorruptWALError, match="gap|order"):
+        list(persist.iter_wal(d, after_seq=0))
+
+
+def test_iter_wal_empty_trailing_file(tmp_path):
+    """A trailing segment holding only its file header (rotation raced a
+    crash before the first append) contributes nothing and breaks nothing."""
+    d = str(tmp_path)
+    w = WALWriter(os.path.join(d, persist.wal_name(1)), 1)
+    w.log_delete(np.array([1]))
+    w.close()
+    w2 = WALWriter(os.path.join(d, persist.wal_name(2)), 2)  # header only
+    w2.close()
+    assert [r.seq for r in persist.iter_wal(d, after_seq=0)] == [1]
+    assert [r.seq for r in persist.iter_wal(d, after_seq=1)] == []
+    # and a zero-byte trailing file (legacy crash signature) too
+    open(os.path.join(d, persist.wal_name(2)), "w").close()
+    assert [r.seq for r in persist.iter_wal(d, after_seq=0)] == [1]
+
+
 # ---------------------------------------------------------------------------
 # recovery bit-identity across every query path
 # ---------------------------------------------------------------------------

@@ -1,0 +1,627 @@
+"""Replication tier: WAL shipping, warm standbys, fenced failover.
+
+The contract under test (docs/persistence.md#replication): a standby that
+follows the shipped-WAL stream is bit-identical to the primary over the
+applied prefix; promotion drains, fences the old primary loudly
+(``FencedError`` on its next append AND ship), and the promoted replica
+equals a from-scratch rebuild over exactly the acked prefix — across
+staged/fused query paths and both sharded drivers. Shipped-chain damage
+(drops, duplicates, torn or bit-flipped frames, flaky transports past the
+retry budget) is loud (``ReplicationError``), never a silently diverged
+index. Delta snapshots and WAL group commit ride the same invariants.
+"""
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import faults
+from repro import persist
+from repro.persist import io as pio
+from repro.persist import wal as wal_mod
+from repro.persist.snapshot import _manifest_crc
+from repro.engine import EngineConfig, ShardedEngine
+from repro.serving import NotPrimary, ServingLoop
+from test_persist import (apply_ops, assert_same_results, mk_engine,
+                          scripted_ops, _queries, D)
+
+
+def _transport(kind, tmp_path):
+    if kind == "dir":
+        return persist.DirTransport(str(tmp_path / "ship"))
+    return persist.PipeTransport()
+
+
+def _pair(tmp_path, kind="pipe"):
+    """(primary, shipper, standby, replica, transport) ready to stream."""
+    pdir = str(tmp_path / "primary")
+    primary = mk_engine()
+    persist.ensure_attached(primary, pdir)
+    transport = _transport(kind, tmp_path)
+    shipper = persist.WALShipper(primary, pdir, transport)
+    standby = mk_engine()
+    replica = persist.StandbyReplica(standby, transport)
+    return primary, shipper, standby, replica, transport
+
+
+# ---------------------------------------------------------------------------
+# ship -> replay bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dir", "pipe"])
+def test_ship_replay_bit_identity(tmp_path, kind):
+    primary, shipper, standby, replica, _ = _pair(tmp_path, kind)
+    ops = scripted_ops(6)
+    for i, op in enumerate(ops):
+        apply_ops(primary, [op])
+        shipper.ship_once()
+        replica.poll_once()
+        assert replica.applied_seq == i + 1
+    # staged AND fused paths agree bit-for-bit with the primary
+    assert_same_results(primary, standby, _queries())
+    assert replica.records_replayed == len(ops)
+    assert replica.lag() == persist.ReplicationLag(0, 0.0)
+
+
+def test_standby_serves_reads_while_lagging(tmp_path):
+    primary, shipper, standby, replica, _ = _pair(tmp_path)
+    ops = scripted_ops(4)
+    apply_ops(primary, ops[:2])
+    shipper.ship_once()
+    replica.poll_once()
+    want = standby.search(_queries(), 8)  # the prefix the standby holds
+    apply_ops(primary, ops[2:])
+    shipper.ship_once()  # shipped but NOT yet polled: standby lags
+    lag = replica.lag()
+    assert lag.seqs == 2 and lag.seconds >= 0.0
+    # reads keep serving the applied prefix exactly — never an error, never
+    # a half-applied state
+    r = standby.search(_queries(), 8)
+    np.testing.assert_array_equal(np.asarray(r.ids), np.asarray(want.ids))
+    replica.poll_once()
+    assert replica.lag() == persist.ReplicationLag(0, 0.0)
+    assert_same_results(primary, standby, _queries())
+
+
+def test_duplicate_delivery_is_idempotent(tmp_path):
+    primary, shipper, standby, replica, transport = _pair(tmp_path)
+    apply_ops(primary, scripted_ops(4))
+    shipper.ship_once()
+    replica.poll_once()
+    want = standby.search(_queries(), 8)
+    # duplicated segments: forget both sides' dedup state so every segment
+    # is re-published and re-fetched — replay must skip exactly
+    shipper._published.clear()
+    shipper.ship_once()
+    replica._seen.clear()
+    assert replica.poll_once() == 0  # all records <= applied_seq
+    r = standby.search(_queries(), 8)
+    np.testing.assert_array_equal(np.asarray(r.ids), np.asarray(want.ids))
+
+
+def test_dropped_segment_is_loud(tmp_path):
+    primary, shipper, _standby, _replica, transport = _pair(tmp_path, "dir")
+    for op in scripted_ops(4):
+        apply_ops(primary, [op])
+        shipper.ship_once()  # one segment per op (each ship rotates)
+    names = transport.list_segments()
+    assert len(names) >= 3
+    os.remove(os.path.join(transport.directory, "seg-" + names[1]))
+    fresh = persist.StandbyReplica(mk_engine(), transport)
+    with pytest.raises(persist.ReplicationError, match="gap"):
+        fresh.poll_once()
+
+
+def test_torn_and_flipped_frames_are_loud(tmp_path):
+    primary, shipper, _s, _r, transport = _pair(tmp_path, "dir")
+    apply_ops(primary, scripted_ops(2))
+    shipper.ship_once()
+    name = transport.list_segments()[0]
+    seg_path = os.path.join(transport.directory, "seg-" + name)
+    pristine = pio.read_bytes(seg_path)
+    # torn frame (lost tail in flight)
+    faults.truncate_file(seg_path, 0.6)
+    with pytest.raises(persist.ReplicationError):
+        persist.StandbyReplica(mk_engine(), transport).poll_once()
+    # bit flip anywhere: frame header, payload, or an inner WAL record —
+    # every layer is checksummed, so each lands on a typed error
+    for seed in range(4):
+        pio.write_bytes(seg_path, pristine)
+        faults.flip_byte_in(seg_path, seed=seed)
+        with pytest.raises((persist.ReplicationError,
+                            persist.CorruptWALError)):
+            persist.StandbyReplica(mk_engine(), transport).poll_once()
+
+
+class _FlakyTransport:
+    """Wraps a transport; fails the first ``n_fail`` publish/fetch calls."""
+
+    def __init__(self, inner, n_fail):
+        self.inner = inner
+        self.fails_left = n_fail
+        self.attempts = 0
+
+    def _maybe_fail(self):
+        self.attempts += 1
+        if self.fails_left > 0:
+            self.fails_left -= 1
+            raise OSError("simulated transport outage")
+
+    def publish(self, name, data, *, term):
+        self._maybe_fail()
+        self.inner.publish(name, data, term=term)
+
+    def fetch(self, name):
+        self._maybe_fail()
+        return self.inner.fetch(name)
+
+    def __getattr__(self, attr):
+        return getattr(self.inner, attr)
+
+
+def test_transport_retry_bounded_then_loud(tmp_path):
+    pdir = str(tmp_path / "p")
+    primary = mk_engine()
+    persist.ensure_attached(primary, pdir)
+    apply_ops(primary, scripted_ops(2))
+    # transient outage inside the budget: retried to success
+    flaky = _FlakyTransport(persist.PipeTransport(), n_fail=2)
+    shipper = persist.WALShipper(primary, pdir, flaky, max_retries=3,
+                                 backoff_s=0.001)
+    assert shipper.ship_once() == 1
+    replica = persist.StandbyReplica(mk_engine(), flaky)
+    flaky.fails_left = 2
+    assert replica.poll_once() == 2
+    # outage past the budget: loud, and the segment is NOT marked shipped
+    apply_ops(primary, scripted_ops(2, seed=29))
+    flaky.fails_left = 99
+    with pytest.raises(persist.ReplicationError, match="attempts"):
+        shipper.ship_once()
+    flaky.fails_left = 0
+    assert shipper.ship_once() == 1  # healed transport catches up exactly
+    assert replica.poll_once() == 2
+    assert_same_results(primary, replica.engine, _queries())
+
+
+# ---------------------------------------------------------------------------
+# fenced failover
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dir", "pipe"])
+def test_fenced_failover_acked_prefix_exactly(tmp_path, kind):
+    """The acceptance drill, in-process: primary dies mid-stream, standby
+    promotes, and its answers equal a from-scratch rebuild over exactly
+    the acked (shipped) prefix — staged and fused paths."""
+    primary, shipper, standby, replica, transport = _pair(tmp_path, kind)
+    primary._wal.guard = persist.make_fence_guard(transport, 0)
+    ops = scripted_ops(6)
+    acked = 4  # primary "dies" with 2 ops logged locally but never shipped
+    apply_ops(primary, ops[:acked])
+    shipper.ship_once()
+    replica.poll_once()
+    apply_ops(primary, ops[acked:])  # logged, never shipped: not acked
+    new_term = replica.promote(str(tmp_path / "standby"))
+    assert new_term == 1
+    # the promoted replica == from-scratch rebuild over ops[:acked]
+    rebuild = mk_engine()
+    apply_ops(rebuild, ops[:acked])
+    assert_same_results(rebuild, standby, _queries())
+    # the old primary is fenced on its next ship AND its next append
+    with pytest.raises(persist.FencedError):
+        shipper.ship_once()
+    with pytest.raises(persist.FencedError):
+        primary.upsert(np.array([9000]), np.zeros((1, D), np.float32))
+    # while the promoted primary is writable, durable, and re-recoverable
+    standby.upsert(np.array([9001, 9002]),
+                   np.ones((2, D), np.float32))
+    rec, info = persist.open_engine(str(tmp_path / "standby"), attach=False)
+    assert info.term == 1 and info.wal_seq == acked and info.replayed == 1
+    assert_same_results(standby, rec, _queries())
+
+
+def test_promotion_race_loses_loudly(tmp_path):
+    primary, shipper, standby, replica, transport = _pair(tmp_path)
+    apply_ops(primary, scripted_ops(2))
+    shipper.ship_once()
+    replica.poll_once()
+    loser = persist.StandbyReplica(mk_engine(), transport)
+    loser.poll_once()
+    assert replica.promote(str(tmp_path / "win")) == 1
+    with pytest.raises(persist.FencedError):
+        loser.promote(str(tmp_path / "lose"), term=1)
+    # the loser stayed a consistent follower: no WAL attached, no manifest
+    assert getattr(loser.engine, "_wal", None) is None
+    assert not os.path.exists(os.path.join(str(tmp_path / "lose"),
+                                           persist.MANIFEST_NAME))
+
+
+def test_stale_term_segment_refused(tmp_path):
+    primary, shipper, standby, replica, transport = _pair(tmp_path)
+    apply_ops(primary, scripted_ops(2))
+    shipper.ship_once()
+    replica.poll_once()
+    assert replica.max_term == 0
+    transport.bump_term(3)
+    replica.max_term = 3  # replica has seen the new era
+    # a frame minted under the old term sneaks into the transport (bypass
+    # the publish-side fence by injecting directly)
+    frame = persist.encode_ship_frame(1, 99, b"")
+    transport._segments["wal-000000000099.log"] = frame
+    with pytest.raises(persist.ReplicationError, match="stale term"):
+        replica.poll_once()
+
+
+def test_sharded_standby_both_drivers_and_promotion(tmp_path):
+    pdir = str(tmp_path / "p")
+    primary = ShardedEngine(mk_engine(EngineConfig(nprobe=6, rerank_mult=2)),
+                            2)
+    persist.ensure_attached(primary, pdir)
+    transport = persist.PipeTransport()
+    shipper = persist.WALShipper(primary, pdir, transport)
+    standby = ShardedEngine(mk_engine(EngineConfig(nprobe=6, rerank_mult=2)),
+                            2)
+    replica = persist.StandbyReplica(standby, transport)
+    ops = scripted_ops(5)
+    apply_ops(primary, ops)
+    shipper.ship_once()
+    replica.poll_once()
+    q = _queries()
+    assert_same_results(primary, standby, q, calls=("search",))  # vmap
+    new_term = replica.promote(str(tmp_path / "s"))
+    rec, info = persist.open_engine(str(tmp_path / "s"), attach=False)
+    assert isinstance(rec, ShardedEngine) and info.term == new_term
+    assert_same_results(standby, rec, q, calls=("search",))
+    # shard_map driver: 1-shard pair on the device mesh
+    p1 = ShardedEngine(mk_engine(EngineConfig(nprobe=6, rerank_mult=2)), 1)
+    persist.ensure_attached(p1, str(tmp_path / "p1"))
+    t1 = persist.PipeTransport()
+    sh1 = persist.WALShipper(p1, str(tmp_path / "p1"), t1)
+    s1 = ShardedEngine(mk_engine(EngineConfig(nprobe=6, rerank_mult=2)), 1)
+    r1 = persist.StandbyReplica(s1, t1)
+    apply_ops(p1, scripted_ops(3))
+    sh1.ship_once()
+    r1.poll_once()
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("shards",))
+    ra, rb = p1.search(q, 8, mesh=mesh), s1.search(q, 8, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+
+
+# ---------------------------------------------------------------------------
+# ServingLoop roles
+# ---------------------------------------------------------------------------
+
+def _wait_for(pred, timeout=10.0, every=0.01):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(every)
+    return False
+
+
+def test_serving_loop_pair_follows_and_sheds_writes(tmp_path):
+    transport = persist.PipeTransport()
+    pl = ServingLoop(mk_engine(), snapshot_dir=str(tmp_path / "p"),
+                     transport=transport, ship_every=0.01,
+                     snapshot_every=60.0).start()
+    sl = ServingLoop(mk_engine(), role="standby", transport=transport,
+                     snapshot_dir=str(tmp_path / "s"),
+                     poll_every=0.01).start()
+    try:
+        rng = np.random.default_rng(3)
+        for op in scripted_ops(3):
+            apply_ops(pl, [op])  # loop.upsert/delete/compact delegate
+        with pytest.raises(NotPrimary):
+            sl.upsert(np.array([1]), rng.normal(size=(1, D)).astype(np.float32))
+        with pytest.raises(NotPrimary):
+            sl.delete(np.array([1]))
+        with pytest.raises(NotPrimary):
+            sl.compact()
+        assert _wait_for(lambda: sl.metrics().records_replayed == 3)
+        q = np.asarray(_queries())
+        ra = pl.submit(q[0], k=8).result(10)
+        rb = sl.submit(q[0], k=8).result(10)
+        np.testing.assert_array_equal(ra.ids, rb.ids)
+        np.testing.assert_array_equal(ra.dists, rb.dists)
+        mp, ms = pl.metrics(), sl.metrics()
+        assert mp.role == "primary" and mp.segments_shipped >= 1
+        assert ms.role == "standby" and ms.records_replayed == 3
+        assert ms.replication_lag_seqs == 0
+    finally:
+        sl.close()
+        pl.close()
+
+
+def test_serving_loop_failover_detection_and_promote(tmp_path):
+    transport = persist.PipeTransport()
+    pl = ServingLoop(mk_engine(), snapshot_dir=str(tmp_path / "p"),
+                     transport=transport, ship_every=0.01,
+                     snapshot_every=60.0).start()
+    promoted = []
+    sl = ServingLoop(mk_engine(), role="standby", transport=transport,
+                     snapshot_dir=str(tmp_path / "s"), poll_every=0.01,
+                     heartbeat_timeout=0.25,
+                     on_failover=lambda loop: promoted.append(
+                         loop.promote())).start()
+    try:
+        rng = np.random.default_rng(5)
+        pl.upsert(np.arange(2000, 2020),
+                  rng.normal(size=(20, D)).astype(np.float32))
+        assert _wait_for(lambda: sl.metrics().records_replayed == 1)
+        q = np.asarray(_queries())
+        want = sl.submit(q[0], k=8).result(10)
+        pl.stop()  # primary goes silent: heartbeats cease (kill-9 analogue)
+        assert _wait_for(lambda: bool(promoted)), "failover never fired"
+        assert promoted == [1] and sl.role == "primary"
+        # standby reads never errored through the transition, and the
+        # promoted loop serves the same prefix then accepts writes
+        got = sl.submit(q[0], k=8).result(10)
+        np.testing.assert_array_equal(want.ids, got.ids)
+        sl.upsert(np.arange(3000, 3010),
+                  rng.normal(size=(10, D)).astype(np.float32))
+        assert _wait_for(lambda: sl.metrics().segments_shipped >= 1)
+        assert sl.metrics().term == 1
+        # the deposed loop's writes are fenced
+        with pytest.raises(persist.FencedError):
+            pl.upsert(np.array([1]), rng.normal(size=(1, D)).astype(np.float32))
+    finally:
+        sl.close()
+        pl.close()
+
+
+def test_loop_close_idempotent_joins_threads_and_flushes(tmp_path):
+    """The historical close()-vs-checkpoint race: every background thread
+    must be joined no matter how stop/close interleave, and the WAL's
+    group-commit tail must hit disk."""
+    eng = mk_engine()
+    loop = ServingLoop(eng, snapshot_dir=str(tmp_path / "d"),
+                       snapshot_every=0.01).start()
+    # swap in a group-commit writer mid-flight to leave a pending fsync
+    eng._wal.fsync_interval = 3600.0
+    apply_ops(loop, scripted_ops(3))
+    loop.close()
+    loop.close()  # idempotent
+    loop.stop()   # and in either order
+    assert loop._thread is None and loop._ckpt_thread is None
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("repro-")]
+    assert eng._wal._pending_fsync == 0  # flushed on close
+    rec, info = persist.open_engine(str(tmp_path / "d"), attach=False)
+    assert info.last_seq == 3
+    assert_same_results(eng, rec, _queries())
+
+
+# ---------------------------------------------------------------------------
+# delta snapshots
+# ---------------------------------------------------------------------------
+
+def test_delta_snapshot_reuses_unchanged_segments(tmp_path):
+    d = str(tmp_path / "d")
+    eng = mk_engine()
+    persist.ensure_attached(eng, d)  # snap 1: full (no parent)
+    m1 = persist.read_manifest(d)
+    assert m1["parent"] is None and m1["delta"]["segments_reused"] == 0
+    eng.delete(np.arange(100, 120))  # delete-only interval
+    m2 = persist.save_snapshot(eng, d)
+    assert m2["parent"] == m1["snapshot"]
+    # centroids/codebook/codes/base never changed: referenced, not rewritten
+    assert m2["delta"]["segments_reused"] >= 3
+    assert m2["delta"]["bytes_reused"] > m2["delta"]["bytes_written"]
+    reused = [e["file"] for e in m2["segments"].values()
+              if e["file"].startswith(m1["snapshot"])]
+    assert reused, "no segment referenced from the parent snapshot"
+    # the parent dir survives GC (reachable chain) and recovery is exact
+    assert os.path.isdir(os.path.join(d, m1["snapshot"]))
+    rec, _ = persist.open_engine(d, attach=False)
+    assert_same_results(eng, rec, _queries())
+
+
+def test_delta_gc_drops_unreachable_chain(tmp_path):
+    d = str(tmp_path / "d")
+    eng = mk_engine()
+    persist.ensure_attached(eng, d)
+    for i in range(3):  # three delete-only deltas onto the same parent
+        eng.delete(np.arange(200 + 20 * i, 200 + 20 * i + 10))
+        persist.save_snapshot(eng, d)
+    snaps = sorted(n for n in os.listdir(d) if n.startswith("snap-"))
+    manifest = persist.read_manifest(d)
+    # intermediate delta-only snapshots are unreachable once superseded;
+    # the full parent stays because current segments still point into it
+    assert manifest["snapshot"] in snaps and "snap-000001" in snaps
+    assert len(snaps) <= 3  # never the full 4-snapshot history
+    assert "snap-000002" not in snaps and "snap-000003" not in snaps
+    # a compact rewrites the list store (codes/ids/sizes) but the immutable
+    # payloads (centroids/codebook/base) keep riding the original parent —
+    # long-lived base segments are the POINT of delta snapshots
+    eng.compact()
+    m = persist.save_snapshot(eng, d)
+    written = {k for k, e in m["segments"].items()
+               if e["file"].startswith(m["snapshot"])}
+    assert {"codes", "ids", "sizes"} <= written
+    reused_from_parent = {k for k, e in m["segments"].items()
+                          if e["file"].startswith("snap-000001")}
+    assert {"centroids", "codebook", "base"} <= reused_from_parent
+    assert os.path.isdir(os.path.join(d, "snap-000001"))
+    rec, _ = persist.open_engine(d, attach=False)
+    assert_same_results(eng, rec, _queries())
+
+
+def test_schema1_manifest_migrates_gracefully(tmp_path):
+    d = str(tmp_path / "d")
+    eng = mk_engine()
+    persist.ensure_attached(eng, d)
+    apply_ops(eng, scripted_ops(2))
+    persist.save_snapshot(eng, d)
+    # rewrite the manifest as a pre-replication schema-1 file
+    path = os.path.join(d, persist.MANIFEST_NAME)
+    manifest = json.loads(pio.read_bytes(path).decode("utf-8"))
+    for k in ("term", "parent", "delta"):
+        manifest.pop(k, None)
+    manifest["schema"] = 1
+    del manifest["manifest_crc"]
+    manifest["manifest_crc"] = _manifest_crc(manifest)
+    pio.atomic_write_bytes(path, json.dumps(manifest).encode("utf-8"))
+    back = persist.read_manifest(d)
+    assert back["term"] == 0 and back["parent"] is None
+    rec, info = persist.open_engine(d, attach=False)
+    assert info.term == 0
+    assert_same_results(eng, rec, _queries())
+
+
+def test_snapshot_crash_sweep_with_delta_parent(tmp_path):
+    """Crash at every write inside a DELTA checkpoint: the old manifest +
+    WAL chain still recover the full pre-crash state (the delta machinery
+    adds reads of the parent, never a window where the old chain is
+    gone)."""
+    eng0, d0 = mk_engine(), str(tmp_path / "count")
+    persist.ensure_attached(eng0, d0)
+    apply_ops(eng0, scripted_ops(2))
+    persist.save_snapshot(eng0, d0)
+    eng0.delete(np.arange(300, 320))
+    with faults.FaultInjector() as counter:
+        persist.save_snapshot(eng0, d0)
+    q = _queries()
+    want = eng0.search(q, 8)
+    for n in range(1, counter.writes + 1):
+        eng, d = mk_engine(), str(tmp_path / f"ck{n}")
+        persist.ensure_attached(eng, d)
+        apply_ops(eng, scripted_ops(2))
+        persist.save_snapshot(eng, d)
+        eng.delete(np.arange(300, 320))
+        with faults.FaultInjector(crash_at_write=n):
+            with pytest.raises(faults.SimulatedCrash):
+                persist.save_snapshot(eng, d)
+        rec, _ = persist.open_engine(d, attach=False)
+        r = rec.search(q, 8)
+        np.testing.assert_array_equal(np.asarray(r.dists),
+                                      np.asarray(want.dists),
+                                      err_msg=f"crash at write {n}")
+        np.testing.assert_array_equal(np.asarray(r.ids),
+                                      np.asarray(want.ids))
+
+
+# ---------------------------------------------------------------------------
+# WAL group commit
+# ---------------------------------------------------------------------------
+
+def test_group_commit_defers_fsyncs_and_flushes_on_rotate(tmp_path):
+    fsyncs = []
+    orig = pio.fsync_file
+    pio.fsync_file = lambda f: (fsyncs.append(1), orig(f))[1]
+    try:
+        w = persist.WALWriter(str(tmp_path / persist.wal_name(1)), 1,
+                              fsync_interval=3600.0)
+        for i in range(5):
+            w.log_delete(np.array([i]))
+        assert not fsyncs and w._pending_fsync == 5
+        w.flush()
+        assert len(fsyncs) == 1 and w._pending_fsync == 0
+        w.log_delete(np.array([9]))
+        path1 = w.path
+        w.rotate(str(tmp_path))  # closed segments are always fully durable
+        assert len(fsyncs) == 2 and w._pending_fsync == 0
+        recs, _valid, clean = wal_mod.scan_wal(path1)
+        assert clean and [r.seq for r in recs] == [1, 2, 3, 4, 5, 6]
+        w.log_delete(np.array([10]))
+        w.close()  # close flushes too
+        assert w._pending_fsync == 0
+    finally:
+        pio.fsync_file = orig
+    assert [r.seq for r in persist.iter_wal(str(tmp_path))] == list(range(1, 8))
+
+
+def test_group_commit_interval_elapses(tmp_path):
+    w = persist.WALWriter(str(tmp_path / persist.wal_name(1)), 1,
+                          fsync_interval=0.0)  # every append qualifies
+    w.log_delete(np.array([1]))
+    assert w._pending_fsync == 0  # interval 0 -> fsync each append
+    w.close()
+
+
+def test_group_commit_engine_recovery_after_flush(tmp_path):
+    d = str(tmp_path / "d")
+    eng = mk_engine()
+    persist.ensure_attached(eng, d)
+    # replace the attached writer with a group-commit one at the same seq
+    eng._wal.close()
+    eng.attach_wal(persist.WALWriter(eng._wal.path, eng._wal.last_seq + 1,
+                                     fsync_interval=3600.0))
+    ops = scripted_ops(4)
+    apply_ops(eng, ops)
+    eng._wal.flush()
+    rec, info = persist.open_engine(d, attach=False)
+    assert info.last_seq == len(ops)
+    assert_same_results(eng, rec, _queries())
+
+
+def test_group_commit_torn_tail_is_prefix(tmp_path):
+    """A crash before the deferred fsync may lose the un-flushed suffix —
+    but only the suffix, and recovery stays prefix-exact (writes happen in
+    seq order through the same seam)."""
+    d = str(tmp_path / "d")
+    eng = mk_engine()
+    persist.ensure_attached(eng, d)
+    eng._wal.close()
+    eng.attach_wal(persist.WALWriter(eng._wal.path, 1,
+                                     fsync_interval=3600.0))
+    ops = scripted_ops(4)
+    apply_ops(eng, ops[:2])
+    eng._wal.flush()  # acked through seq 2
+    apply_ops(eng, ops[2:])  # in the page cache, not yet fsync'd
+    # simulate the OS dropping the un-flushed tail at the crash point
+    wal_path = eng._wal.path
+    eng._wal.close()
+    recs, valid_through_2, _ = wal_mod.scan_wal(wal_path)
+    # keep only what was durable at the last flush: seqs 1-2
+    flushed_end = (wal_mod.FILE_HEADER_SIZE
+                   + sum(len(wal_mod.encode_record(r.seq, r.op, r.arrays))
+                         for r in recs[:2]))
+    with open(wal_path, "r+b") as f:
+        f.truncate(flushed_end)
+    ref = mk_engine()
+    apply_ops(ref, ops[:2])
+    rec, info = persist.open_engine(d, attach=False)
+    assert info.last_seq == 2
+    assert_same_results(ref, rec, _queries())
+
+
+# ---------------------------------------------------------------------------
+# WAL file headers / terms
+# ---------------------------------------------------------------------------
+
+def test_wal_file_header_terms_and_legacy(tmp_path):
+    p = str(tmp_path / persist.wal_name(1))
+    w = persist.WALWriter(p, 1, term=7)
+    w.log_delete(np.array([1]))
+    w.close()
+    assert persist.wal_term(p) == 7
+    recs, _v, clean = wal_mod.scan_wal(p)
+    assert clean and recs[0].seq == 1
+    # legacy headerless file (pre-replication format) still parses, term 0
+    legacy = str(tmp_path / persist.wal_name(2))
+    with open(legacy, "wb") as f:
+        f.write(wal_mod.encode_record(2, "delete",
+                                      {"ids": np.array([2], np.int64)}))
+    assert persist.wal_term(legacy) == 0
+    recs2, _v2, clean2 = wal_mod.scan_wal(legacy)
+    assert clean2 and recs2[0].seq == 2
+    assert [r.seq for r in persist.iter_wal(str(tmp_path))] == [1, 2]
+    # a torn header (crash between header write and first append) is an
+    # empty torn file, not corruption
+    torn = str(tmp_path / persist.wal_name(3))
+    with open(torn, "wb") as f:
+        f.write(wal_mod.encode_file_header(1, 3)[:10])
+    recs3, valid3, clean3 = wal_mod.scan_wal(torn)
+    assert recs3 == [] and valid3 == 0 and not clean3
+    # a COMPLETE header with a flipped byte is loud
+    bad = str(tmp_path / "wal-000000000099.log")
+    with open(bad, "wb") as f:
+        f.write(wal_mod.encode_file_header(1, 99))
+    faults.flip_byte_in(bad, offset=5)
+    with pytest.raises(persist.CorruptWALError):
+        wal_mod.scan_wal(bad)

@@ -3,7 +3,12 @@
 Diffs the ``bytes_accessed`` fields of a freshly produced BENCH_kernels.json
 against the committed baseline and emits a GitHub Actions ``::warning``
 annotation for every record whose scan-stage HBM traffic grew more than the
-threshold (default 10%). Also watches the anytime serving frontier
+threshold (default 10%). Also watches the durability records
+(docs/persistence.md): a ``replication_lag`` record whose post-poll lag is
+nonzero means a standby stopped catching up in one round-trip, and a
+``checkpoint_bytes`` delta record whose write_ratio grew more than the
+threshold means the content-hash dedup stopped reusing parent segments.
+Also watches the anytime serving frontier
 (``serve_frontier`` records, docs/anytime.md): a warning fires when an
 adaptive operating point's recall@1 drops more than 1% against the
 committed baseline at the matched point, or when no adaptive point beats
@@ -103,6 +108,46 @@ def check_frontier(base: dict, fresh: dict, recall_drop: float = 0.01) -> int:
     return warned
 
 
+def check_durability(base: dict, fresh: dict, threshold: float) -> int:
+    """Warn on replication lag or delta-checkpoint dedup regressions.
+
+    Both are shape properties, not wall clock, so they diff cleanly
+    across machines: a caught-up standby has ``lag_seqs == 0`` after its
+    poll whatever the hardware, and the delta checkpoint's write_ratio
+    depends only on which segments the workload dirtied. Non-blocking,
+    like everything else here.
+    """
+    warned = 0
+    for rec in fresh.get("records", []):
+        if rec.get("metric") != "replication_lag":
+            continue
+        lag = rec.get("lag_seqs", 0)
+        if lag and lag > 0:
+            warned += 1
+            print("::warning title=replication lag::standby still "
+                  f"{lag} seqs behind after its poll "
+                  f"(lag_s={rec.get('lag_s')})")
+        else:
+            print(f"ok replication: standby caught up "
+                  f"({rec.get('lag_seqs_before_poll', '?')} seqs drained)")
+    fresh_delta = next((r for r in fresh.get("records", [])
+                        if r.get("metric") == "checkpoint_bytes"
+                        and r.get("mode") == "delta"), None)
+    base_delta = next((r for r in base.get("records", [])
+                       if r.get("metric") == "checkpoint_bytes"
+                       and r.get("mode") == "delta"), None)
+    if fresh_delta and base_delta and base_delta.get("write_ratio"):
+        old, new = base_delta["write_ratio"], fresh_delta.get("write_ratio", 1.0)
+        if new > old * (1.0 + threshold):
+            warned += 1
+            print("::warning title=delta checkpoint regression::"
+                  f"write_ratio {old:.3f} -> {new:.3f} — the checkpoint is "
+                  "rewriting segments the parent already holds")
+        else:
+            print(f"ok delta checkpoint: write_ratio {old:.3f} -> {new:.3f}")
+    return warned
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True,
@@ -120,6 +165,7 @@ def main(argv: list[str] | None = None) -> int:
     if not base or not fresh:
         print("::notice::traffic check: nothing to compare")
         check_frontier(base_data, fresh_data)
+        check_durability(base_data, fresh_data, args.threshold)
         return 0
 
     grew = checked = 0
@@ -141,6 +187,7 @@ def main(argv: list[str] | None = None) -> int:
     print(f"traffic check: {checked} records compared, {grew} grew "
           f">{args.threshold * 100:.0f}%")
     check_frontier(base_data, fresh_data)
+    check_durability(base_data, fresh_data, args.threshold)
     return 0
 
 

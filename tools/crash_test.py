@@ -15,11 +15,20 @@ sharing anything but the directory under test.
 
 Usage:
     python tools/crash_test.py [--kill-at 5] [--steps 12] [--seed 7] \
-        [--dir /tmp/crashdir] [--sweep]
+        [--dir /tmp/crashdir] [--sweep] [--replication]
 
 ``--kill-at N`` kills after the N-th ack (default: seeded random step).
 ``--sweep`` runs every kill point 1..steps sequentially. Exits non-zero on
 any recovery mismatch.
+
+``--replication`` runs the failover drill instead (docs/serving.md): the
+child is a PRIMARY that ships every mutation's WAL segment through a
+``DirTransport`` before acking; the parent SIGKILLs it mid-stream, replays
+the shipped chain into a warm STANDBY, promotes it (term bump), and
+asserts (a) the promoted replica is bit-identical to a from-scratch
+rebuild over exactly the acked prefix, (b) the deposed primary's next
+append and ship both raise ``FencedError``, and (c) standby reads serve
+before, during, and after the transition.
 """
 from __future__ import annotations
 
@@ -104,6 +113,134 @@ def child_main(directory: str, steps: int, seed: int) -> int:
     return 0
 
 
+def child_repl_main(directory: str, steps: int, seed: int) -> int:
+    """Primary-side workload: every mutation is shipped before it is acked,
+    so an ack promises the op is replayable on the standby side."""
+    from repro import persist
+
+    primary_dir = os.path.join(directory, "primary")
+    ship_dir = os.path.join(directory, "ship")
+    _ds, eng = build_engine()
+    persist.ensure_attached(eng, primary_dir)
+    transport = persist.DirTransport(ship_dir)
+    shipper = persist.WALShipper(eng, primary_dir, transport, term=0)
+    shipper.ship_once()
+    print(f"{ACK} 0", flush=True)  # snapshot + WAL live, chain shipped
+    for i, op in enumerate(scripted_ops(steps, seed), start=1):
+        apply_op(eng, op)
+        shipper.ship_once()
+        print(f"{ACK} {i}", flush=True)
+    return 0
+
+
+def run_replication(kill_at: int, steps: int, seed: int,
+                    directory: str) -> bool:
+    """Kill a shipping primary mid-stream, promote a warm standby, and
+    check the three failover guarantees (see module docstring)."""
+    import numpy as np
+
+    from repro import persist
+    from repro.persist.errors import FencedError
+
+    shutil.rmtree(directory, ignore_errors=True)
+    os.makedirs(directory)
+    proc = subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__), "--child",
+         "--replication", "--dir", directory, "--steps", str(steps),
+         "--seed", str(seed)],
+        stdout=subprocess.PIPE, text=True,
+        cwd=str(pathlib.Path(__file__).resolve().parent.parent))
+    acked = -1
+    try:
+        for line in proc.stdout:
+            if not line.startswith(ACK):
+                continue
+            acked = int(line.split()[1])
+            if acked >= kill_at:
+                os.kill(proc.pid, signal.SIGKILL)
+                break
+    finally:
+        proc.stdout.close()
+        proc.wait(timeout=60)
+    if acked < kill_at:
+        print(f"FAIL kill_at={kill_at}: primary finished after {acked} acks "
+              "before the kill landed (raise --steps)")
+        return False
+
+    ship_dir = os.path.join(directory, "ship")
+    standby_dir = os.path.join(directory, "standby")
+    transport = persist.DirTransport(ship_dir)
+    ds, standby = build_engine()
+    replica = persist.StandbyReplica(standby, transport)
+    q = np.asarray(ds.queries)
+
+    def read_ok(eng, when):
+        try:
+            r = eng.search(q, 10)
+            _ = np.asarray(r.ids)
+            return True
+        except Exception as exc:  # noqa: BLE001 — the drill reports, not raises
+            print(f"FAIL kill_at={kill_at}: standby read errored {when}: "
+                  f"{exc!r}")
+            return False
+
+    # (c) standby reads serve before, during, and after the transition
+    if not read_ok(standby, "before replay"):
+        return False
+    replica.poll_once()
+    if not read_ok(standby, "after replay, before promote"):
+        return False
+    if replica.applied_seq < acked:
+        print(f"FAIL kill_at={kill_at}: primary acked {acked} shipped ops "
+              f"but standby replayed only to seq {replica.applied_seq}")
+        return False
+
+    t0 = time.monotonic()
+    new_term = replica.promote(standby_dir)
+    dt = time.monotonic() - t0
+    if not read_ok(standby, "after promote"):
+        return False
+
+    # (a) promoted replica == from-scratch rebuild of the acked prefix
+    ops = scripted_ops(steps, seed)
+    _ds2, ref = build_engine()
+    for op in ops[:replica.applied_seq]:
+        apply_op(ref, op)
+    ra = standby.search(q, 10)
+    rb = ref.search(q, 10)
+    if (np.asarray(ra.ids) != np.asarray(rb.ids)).any() or \
+       (np.asarray(ra.dists) != np.asarray(rb.dists)).any():
+        print(f"FAIL kill_at={kill_at}: promoted standby (seq "
+              f"{replica.applied_seq}) differs from the from-scratch "
+              "replay of the same prefix")
+        return False
+
+    # (b) the deposed primary is fenced on its next append AND ship
+    old = persist.open_engine(os.path.join(directory, "primary"))[0]
+    old._wal.guard = persist.make_fence_guard(transport, 0)
+    old_shipper = persist.WALShipper(old, os.path.join(directory, "primary"),
+                                     transport, term=0)
+    try:
+        old_shipper.ship_once()
+        print(f"FAIL kill_at={kill_at}: deposed primary shipped at term 0 "
+              f"after promotion to term {new_term}")
+        return False
+    except FencedError:
+        pass
+    try:
+        old.delete(np.arange(3))
+        print(f"FAIL kill_at={kill_at}: deposed primary appended at term 0 "
+              f"after promotion to term {new_term}")
+        return False
+    except FencedError:
+        pass
+
+    print(f"ok kill_at={kill_at}: acked>={acked}, standby replayed seq "
+          f"{replica.applied_seq}, promoted to term {new_term} in {dt:.2f}s "
+          "— bit-identical, deposed primary fenced")
+    return True
+
+
 def run_one(kill_at: int, steps: int, seed: int, directory: str) -> bool:
     """Spawn the child, SIGKILL it after ack ``kill_at``, verify recovery."""
     import numpy as np
@@ -174,9 +311,13 @@ def main() -> int:
                     help="SIGKILL after this ack (default: seeded random)")
     ap.add_argument("--sweep", action="store_true",
                     help="run every kill point 1..steps")
+    ap.add_argument("--replication", action="store_true",
+                    help="run the ship/promote failover drill instead")
     args = ap.parse_args()
 
     if args.child:
+        if args.replication:
+            return child_repl_main(args.dir, args.steps, args.seed)
         return child_main(args.dir, args.steps, args.seed)
 
     tmp = None
@@ -192,7 +333,8 @@ def main() -> int:
             kill_at = (args.kill_at if args.kill_at is not None
                        else random.Random(args.seed).randint(1, args.steps))
             points = [kill_at]
-        failures = sum(not run_one(p, args.steps, args.seed, directory)
+        run = run_replication if args.replication else run_one
+        failures = sum(not run(p, args.steps, args.seed, directory)
                        for p in points)
         if failures:
             print(f"{failures}/{len(points)} kill points FAILED")
