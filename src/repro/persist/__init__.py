@@ -20,7 +20,8 @@ from repro.persist.errors import (CorruptSnapshotError, CorruptWALError,
 from repro.persist.replicate import (DirTransport, PipeTransport,
                                      ReplicationLag, StandbyReplica,
                                      WALShipper, decode_ship_frame,
-                                     encode_ship_frame, make_fence_guard)
+                                     encode_ship_frame, make_fence_guard,
+                                     parse_ship_name, ship_segment_name)
 from repro.persist.snapshot import (MANIFEST_NAME, RecoveryInfo,
                                     ensure_attached, load_snapshot,
                                     open_engine, read_manifest,
@@ -37,5 +38,6 @@ __all__ = [
     "apply_record", "iter_wal", "scan_wal", "scan_wal_bytes", "wal_files",
     "wal_name", "wal_term", "DirTransport", "PipeTransport", "WALShipper",
     "StandbyReplica", "ReplicationLag", "encode_ship_frame",
-    "decode_ship_frame", "make_fence_guard",
+    "decode_ship_frame", "make_fence_guard", "ship_segment_name",
+    "parse_ship_name",
 ]

@@ -19,8 +19,16 @@ frame and every WAL file header carries the term it was written under;
 ``promote()`` bumps the transport term atomically, and from that instant
 the old primary's next append (via the writer ``guard``) or ship (via the
 ``read_term`` check and the transport's own publish-side check) raises
-``FencedError``. The deposed process keeps its local bytes for forensics,
-but none of them can reach the replication stream again.
+``FencedError``. Those checks are best-effort (check-then-act), so a
+deposed primary's in-flight publish can still *land* — which is why the
+stream is also fenced structurally: segment names are **term-scoped**
+(``t<term>-wal-<seq>.log``), so a stale publish can never overwrite or
+sort after a newer term's segment, and the transport keeps a **term
+chart** — for every term ever promoted, the first sequence number of its
+chain. A record from term ``t`` at seq ``s`` is a fenced leftover exactly
+when some newer term's chain starts at or before ``s``; standbys skip
+such records (counting them in ``records_stale``) instead of replaying
+them, so even a publish that slips past the fence is inert.
 
 **Lag** is tracked in both units that matter operationally: sequence
 numbers behind the primary's last heartbeat, and seconds since that
@@ -36,6 +44,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import struct
 import threading
 import time
@@ -51,6 +60,40 @@ SHIP_HEADER_SIZE = _SHIP_HEADER.size + 4  # + u32 header CRC = 32 bytes
 
 _SEG_PREFIX = "seg-"
 _TERM_NAME = "TERM"
+_SHIP_NAME_RE = re.compile(r"^t(\d{12})-(.+)$")
+
+
+def ship_segment_name(term: int, wal_name: str) -> str:
+    """Term-scoped transport name for one WAL segment.
+
+    The zero-padded term prefix makes the published namespace term-scoped:
+    lexicographic order is exactly (term, seq) replay order, and a deposed
+    primary's late publish can never collide with — or sort after — a
+    segment the new term published, no matter how the publish-side fence
+    races.
+    """
+    return f"t{int(term):012d}-{wal_name}"
+
+
+def parse_ship_name(name: str) -> tuple[int | None, str]:
+    """(term, wal_name) from a published segment name; term is None for a
+    legacy un-prefixed name (the frame header stays authoritative — the
+    name's term is for namespacing and ordering only)."""
+    m = _SHIP_NAME_RE.match(name)
+    if m is None:
+        return None, name
+    return int(m.group(1)), m.group(2)
+
+
+def _stale_record(chart: list[tuple[int, int]], term: int, seq: int) -> bool:
+    """True when the term chart proves ``(term, seq)`` is a fenced
+    primary's leftover: some newer term's chain starts at or before
+    ``seq``, i.e. that suffix of history was rewritten under new
+    leadership and this record can never be part of the acked prefix."""
+    for t, start_seq in chart:
+        if t > term and seq >= start_seq:
+            return True
+    return False
 
 
 def encode_ship_frame(term: int, start_seq: int, payload: bytes) -> bytes:
@@ -110,24 +153,44 @@ class DirTransport:
 
     # -- term authority -----------------------------------------------------
 
-    def read_term(self) -> int:
+    def _read_term_doc(self) -> dict:
         try:
-            return int(pio.read_bytes(
-                os.path.join(self.directory, _TERM_NAME)).decode("ascii"))
+            raw = pio.read_bytes(os.path.join(self.directory, _TERM_NAME))
         except FileNotFoundError:
-            return 0
-        except ValueError as e:
+            return {"term": 0, "chart": []}
+        try:
+            doc = json.loads(raw.decode("ascii"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
             raise ReplicationError(f"unreadable TERM file: {e}") from e
+        if isinstance(doc, int):  # legacy bare-int TERM file
+            return {"term": doc, "chart": []}
+        return doc
 
-    def bump_term(self, new_term: int) -> int:
-        """Install a strictly higher term; ``FencedError`` otherwise — a
-        promotion racing a newer promotion must lose loudly."""
-        current = self.read_term()
+    def read_term(self) -> int:
+        return int(self._read_term_doc()["term"])
+
+    def term_chart(self) -> list[tuple[int, int]]:
+        """(term, start_seq) for every promoted term, ascending — the
+        authoritative record of where each leadership era's chain begins
+        (term 0, the genesis era, has no entry)."""
+        return sorted((int(t), int(s))
+                      for t, s in self._read_term_doc()["chart"])
+
+    def bump_term(self, new_term: int, *, start_seq: int) -> int:
+        """Install a strictly higher term whose chain starts at
+        ``start_seq``; ``FencedError`` otherwise — a promotion racing a
+        newer promotion must lose loudly."""
+        doc = self._read_term_doc()
+        current = int(doc["term"])
         if new_term <= current:
             raise FencedError(
                 f"term {new_term} is not newer than current {current}")
+        doc["term"] = int(new_term)
+        doc["chart"] = sorted(
+            [[int(t), int(s)] for t, s in doc["chart"]]
+            + [[int(new_term), int(start_seq)]])
         pio.atomic_write_bytes(os.path.join(self.directory, _TERM_NAME),
-                               str(int(new_term)).encode("ascii"))
+                               json.dumps(doc).encode("ascii"))
         return int(new_term)
 
     # -- segments -----------------------------------------------------------
@@ -182,18 +245,24 @@ class PipeTransport:
         self._lock = threading.Lock()
         self._segments: dict[str, bytes] = {}
         self._term = 0
+        self._chart: list[tuple[int, int]] = []
         self._heartbeats: dict[str, dict] = {}
 
     def read_term(self) -> int:
         with self._lock:
             return self._term
 
-    def bump_term(self, new_term: int) -> int:
+    def term_chart(self) -> list[tuple[int, int]]:
+        with self._lock:
+            return sorted(self._chart)
+
+    def bump_term(self, new_term: int, *, start_seq: int) -> int:
         with self._lock:
             if new_term <= self._term:
                 raise FencedError(
                     f"term {new_term} is not newer than current {self._term}")
             self._term = int(new_term)
+            self._chart.append((int(new_term), int(start_seq)))
             return self._term
 
     def publish(self, name: str, data: bytes, *, term: int) -> None:
@@ -259,9 +328,12 @@ class WALShipper:
     ``ReplicationError``. ``FencedError`` is never retried: a newer term
     exists and this primary is done.
 
-    Idempotent across restarts: already-published segment names (from
-    ``transport.list_segments``) are skipped, and a re-published segment
-    carries byte-identical records anyway (closed WAL files never change).
+    Idempotent across restarts: WAL files already published under THIS
+    term (from ``transport.list_segments``) are skipped, and a
+    re-published segment carries byte-identical records anyway (closed
+    WAL files never change). Another term's publishes don't count — a
+    same-named WAL file from a different leadership era is a different
+    chain (the term-scoped namespace keeps them apart).
     """
 
     def __init__(self, engine, directory: str, transport, *, term: int = 0,
@@ -275,7 +347,10 @@ class WALShipper:
         self.backoff_s = float(backoff_s)
         self.send_timeout_s = send_timeout_s
         self.segments_shipped = 0
-        self._published = set(transport.list_segments())
+        self._published = {
+            wal for t, wal in map(parse_ship_name,
+                                  transport.list_segments())
+            if t is None or t == self.term}
         self._lock = threading.Lock()
 
     def ship_once(self) -> int:
@@ -291,15 +366,27 @@ class WALShipper:
                 raise ReplicationError(
                     "primary engine has no WAL attached — nothing to ship")
             wal.rotate(self.directory)
-            active = wal.path
             shipped = 0
             for start_seq, path in wal_mod.wal_files(self.directory):
                 name = os.path.basename(path)
-                if path == active or name in self._published:
+                if name in self._published:
+                    continue
+                # Re-read wal.path for EVERY candidate rather than
+                # capturing it once: the checkpoint thread rotates this
+                # WAL concurrently (save_snapshot), so a file that did
+                # not exist at our rotate() above may be the live file
+                # now. A file that stops being wal.path can never become
+                # live again (rotation only moves forward through seq
+                # names), so candidate != wal.path at this instant proves
+                # the candidate is closed and immutable — only then is it
+                # safe to read it and mark it published. The live file is
+                # simply picked up on a later round, after its rotation.
+                if path == wal.path:
                     continue
                 frame = encode_ship_frame(self.term, start_seq,
                                           pio.read_bytes(path))
-                self._publish_with_retry(name, frame)
+                self._publish_with_retry(ship_segment_name(self.term, name),
+                                         frame)
                 self._published.add(name)
                 shipped += 1
             self.segments_shipped += shipped
@@ -358,8 +445,10 @@ class StandbyReplica:
     ``applied_seq`` are skipped exactly (re-shipped or duplicated
     segments are harmless), the first record above it must be
     ``applied_seq + 1`` (a dropped segment raises ``ReplicationError``),
-    and frames from a term older than one already seen are refused —
-    a fenced primary's leftovers can never interleave into the stream.
+    and records the transport's term chart proves are a fenced primary's
+    leftovers — minted under term ``t`` at a seq a newer term's chain has
+    rewritten — are skipped (counted in ``records_stale``), never
+    replayed and never an excuse to stop following the live chain.
     """
 
     def __init__(self, engine, transport, *, start_seq: int = 0,
@@ -372,6 +461,7 @@ class StandbyReplica:
         self.transport = transport
         self.applied_seq = int(start_seq)
         self.records_replayed = 0
+        self.records_stale = 0
         self.max_term = 0
         self.max_retries = int(max_retries)
         self.backoff_s = float(backoff_s)
@@ -382,16 +472,12 @@ class StandbyReplica:
         """Fetch + replay every new shipped segment; returns records applied."""
         with self._lock:
             applied = 0
+            chart = self.transport.term_chart()
             for name in self.transport.list_segments():
                 if name in self._seen:
                     continue
                 frame = self._fetch_with_retry(name)
                 term, _start_seq, payload = decode_ship_frame(frame, name)
-                if term < self.max_term:
-                    raise ReplicationError(
-                        f"segment {name} from stale term {term} after term "
-                        f"{self.max_term} — refusing a fenced primary's "
-                        "leftovers")
                 self.max_term = max(self.max_term, term)
                 records, _valid, clean = wal_mod.scan_wal_bytes(payload, name)
                 if not clean:
@@ -399,6 +485,9 @@ class StandbyReplica:
                         f"shipped segment {name} ends torn — closed "
                         "segments are always complete; refusing to replay")
                 for rec in records:
+                    if _stale_record(chart, term, rec.seq):
+                        self.records_stale += 1
+                        continue  # a fenced primary's leftover: inert
                     if rec.seq <= self.applied_seq:
                         continue  # duplicate delivery: already applied
                     if rec.seq != self.applied_seq + 1:
@@ -450,9 +539,11 @@ class StandbyReplica:
         1. Drain: replay every segment already in the transport, so no
            shipped record is left behind.
         2. Bump: install ``max(transport, seen) + 1`` (or the explicit
-           ``term``) as the new transport term — atomically; losing a race
-           to an even newer term raises ``FencedError`` and changes
-           nothing locally.
+           ``term``) as the new transport term — atomically, recording
+           ``applied_seq + 1`` as the new term's chain start in the term
+           chart (so the deposed primary's unshipped suffix is provably
+           stale to every follower); losing a race to an even newer term
+           raises ``FencedError`` and changes nothing locally.
         3. Snapshot: checkpoint the drained state into ``directory`` with
            the new term and ``wal_seq = applied_seq`` (the replica applied
            records without logging them, so the manifest must pin the
@@ -470,7 +561,8 @@ class StandbyReplica:
             current = self.transport.read_term()
             new_term = (max(current, self.max_term) + 1 if term is None
                         else int(term))
-            self.transport.bump_term(new_term)  # FencedError if stale
+            self.transport.bump_term(  # FencedError if stale
+                new_term, start_seq=self.applied_seq + 1)
             self.max_term = new_term
             os.makedirs(directory, exist_ok=True)
             save_snapshot(self.engine, directory, term=new_term,

@@ -493,7 +493,10 @@ class ServingLoop:
         replayed = 0
         shipped = 0
         if self._replica is not None:
-            lag = self._replica.lag()
+            if self.role == "standby":
+                # a promoted loop keeps its replica only for the replay
+                # counters: lag against its OWN heartbeats is meaningless
+                lag = self._replica.lag()
             term = self._replica.max_term
             replayed = self._replica.records_replayed
         if self._shipper is not None:
@@ -605,28 +608,39 @@ class ServingLoop:
 
     def _replay_run(self) -> None:
         """Standby's replay thread: poll + apply the shipped stream every
-        ``poll_every`` seconds, and watch the primary's heartbeat — silent
-        past ``heartbeat_timeout`` fires ``on_failover(self)`` ONCE (the
-        supervisor hook; it may call ``promote()`` directly). Replay
-        errors are loud-and-stop: a standby that cannot follow the chain
-        exactly keeps serving its current prefix, never a diverged one."""
+        ``poll_every`` seconds, and watch the primary's heartbeat —
+        silence past ``heartbeat_timeout`` fires ``on_failover(self)``
+        (the supervisor hook; it may call ``promote()`` directly). A
+        primary that never wrote a heartbeat, or whose heartbeat file was
+        deleted or damaged, counts as silent too: the silence clock
+        starts when this thread does and only a readable heartbeat
+        advances it. The hook fires once per silence episode — a fresh
+        heartbeat re-arms the detector, so a standby that lost a
+        promotion race fails over again when the NEXT primary dies.
+        Replay errors are loud-and-stop: a standby that cannot follow the
+        chain exactly keeps serving its current prefix, never a diverged
+        one."""
+        last_signal = time.time()  # no heartbeat ever = silent since start
         while not self._stop_replay.wait(self.poll_every):
             try:
                 self._replica.poll_once()
             except Exception as e:
                 self._repl_error = e
                 return
-            if (self.heartbeat_timeout is not None
-                    and not self._failover_fired):
-                hb = self.transport.read_heartbeat("primary")
-                if (hb is not None and time.time() - float(hb.get("time", 0))
-                        > self.heartbeat_timeout):
-                    self._failover_fired = True
-                    if self.on_failover is not None:
-                        try:
-                            self.on_failover(self)
-                        except Exception as e:
-                            self._repl_error = e
+            if self.heartbeat_timeout is None:
+                continue
+            hb = self.transport.read_heartbeat("primary")
+            if hb is not None:
+                last_signal = max(last_signal, float(hb.get("time", 0.0)))
+            if time.time() - last_signal <= self.heartbeat_timeout:
+                self._failover_fired = False  # fresh signal re-arms
+            elif not self._failover_fired:
+                self._failover_fired = True
+                if self.on_failover is not None:
+                    try:
+                        self.on_failover(self)
+                    except Exception as e:
+                        self._repl_error = e
 
     def promote(self, timeout: float = 5.0) -> int:
         """Fenced failover: turn this standby into the primary; returns the
@@ -636,7 +650,8 @@ class ServingLoop:
         1. stop the replay thread (joined unless we ARE it),
         2. drain every segment already shipped, bump the transport term
            (``FencedError`` if a newer promotion won the race — this loop
-           then stays a standby),
+           then stays a standby: the replay thread is resumed and keeps
+           following the winner's stream),
         3. snapshot the drained state into ``snapshot_dir`` under the new
            term and attach a fenced WAL writer,
         4. start accepting mutations, checkpointing, and shipping.
@@ -651,11 +666,28 @@ class ServingLoop:
                 "promote() needs snapshot_dir — the promoted primary's "
                 "durable directory")
         self._stop_replay.set()
-        if (self._replay_thread is not None
-                and self._replay_thread is not threading.current_thread()):
-            self._replay_thread.join(timeout)
+        replay_thread = self._replay_thread
+        if (replay_thread is not None
+                and replay_thread is not threading.current_thread()):
+            replay_thread.join(timeout)
         self._replay_thread = None
-        new_term = self._replica.promote(self.snapshot_dir)
+        try:
+            new_term = self._replica.promote(self.snapshot_dir)
+        except persist.FencedError:
+            # Lost the race to a newer promotion: genuinely resume life
+            # as a standby — replay must keep following the winner's
+            # stream, not silently serve an ever-staler prefix.
+            self._stop_replay.clear()
+            if replay_thread is threading.current_thread():
+                # we ARE the replay thread (the on_failover hook path):
+                # its loop continues once the cleared event is seen
+                self._replay_thread = replay_thread
+            elif self._thread is not None:
+                self._replay_thread = threading.Thread(
+                    target=self._replay_run, name="repro-replay",
+                    daemon=True)
+                self._replay_thread.start()
+            raise
         self.role = "primary"
         self._last_ckpt_seq = self._replica.applied_seq
         self._shipper = persist.WALShipper(
@@ -677,8 +709,11 @@ class ServingLoop:
         return self._repl_error
 
     def replication_lag(self) -> "persist.ReplicationLag":
-        """Standby's lag behind the primary (0/0.0 on a primary)."""
-        if self._replica is None:
+        """Standby's lag behind the primary (0/0.0 on a primary — a
+        promoted loop IS the primary now; comparing its frozen
+        ``applied_seq`` against its own heartbeats would only mint an
+        ever-growing bogus number)."""
+        if self._replica is None or self.role != "standby":
             return persist.ReplicationLag(0, 0.0)
         return self._replica.lag()
 

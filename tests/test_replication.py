@@ -239,20 +239,86 @@ def test_promotion_race_loses_loudly(tmp_path):
                                            persist.MANIFEST_NAME))
 
 
-def test_stale_term_segment_refused(tmp_path):
+def test_ship_skips_live_file_under_concurrent_rotation(tmp_path):
+    """A checkpoint-thread rotation can land between the shipper's own
+    rotate and its directory listing, so a file that did not exist a
+    moment ago is the LIVE file when the shipper walks the chain. It must
+    never ship (or mark published) a live file — the segment is picked up
+    whole once it closes, and the standby sees no gap and no torn tail."""
+    pdir = str(tmp_path / "p")
+    primary = mk_engine()
+    persist.ensure_attached(primary, pdir)
+    transport = persist.PipeTransport()
+    shipper = persist.WALShipper(primary, pdir, transport)
+    ops = scripted_ops(6)
+    apply_ops(primary, ops[:2])
+    orig_wal_files = wal_mod.wal_files
+    raced = []
+
+    def racy_wal_files(directory):
+        if raced:
+            return orig_wal_files(directory)
+        # fires inside ship_once, after its rotate: a concurrent
+        # checkpoint closes the file the shipper just opened and leaves a
+        # NEWER live file mid-append in the listing it is about to walk
+        raced.append(True)
+        apply_ops(primary, ops[2:4])
+        primary._wal.rotate(directory)
+        apply_ops(primary, ops[4:5])  # seq 5: in the new live file
+        return orig_wal_files(directory)
+
+    wal_mod.wal_files = racy_wal_files
+    try:
+        shipper.ship_once()
+    finally:
+        wal_mod.wal_files = orig_wal_files
+    apply_ops(primary, ops[5:])  # seq 6 lands in that same live file
+    shipper.ship_once()          # rotation closes it; it ships complete
+    replica = persist.StandbyReplica(mk_engine(), transport)
+    assert replica.poll_once() == len(ops)  # no gap, nothing torn
+    assert replica.applied_seq == len(ops)
+    assert_same_results(primary, replica.engine, _queries())
+
+
+def test_stale_term_records_ignored_via_term_chart(tmp_path):
+    """The publish-side fence is check-then-act, so a deposed primary's
+    in-flight publish can still LAND after a promotion. The term-scoped
+    segment namespace means it can never collide with a new-term segment,
+    and the term chart proves its records stale — followers skip them
+    (``records_stale``) and keep following the live chain, including a
+    fresh follower bootstrapping over the full multi-term history."""
     primary, shipper, standby, replica, transport = _pair(tmp_path)
-    apply_ops(primary, scripted_ops(2))
+    pdir = str(tmp_path / "primary")
+    ops = scripted_ops(6)
+    apply_ops(primary, ops[:4])
     shipper.ship_once()
-    replica.poll_once()
-    assert replica.max_term == 0
-    transport.bump_term(3)
-    replica.max_term = 3  # replica has seen the new era
-    # a frame minted under the old term sneaks into the transport (bypass
-    # the publish-side fence by injecting directly)
-    frame = persist.encode_ship_frame(1, 99, b"")
-    transport._segments["wal-000000000099.log"] = frame
-    with pytest.raises(persist.ReplicationError, match="stale term"):
-        replica.poll_once()
+    replica.poll_once()  # standby applied seqs 1-4
+    new_term = replica.promote(str(tmp_path / "win"))  # chain starts at 5
+    assert new_term == 1 and transport.term_chart() == [(1, 5)]
+    # the deposed primary logs 2 more ops (seqs 5-6) and its publish slips
+    # through the TOCTOU window: inject the term-0 segment directly
+    apply_ops(primary, ops[4:])
+    primary._wal.rotate(pdir)
+    stale_path = dict(wal_mod.wal_files(pdir))[5]
+    transport._segments[
+        persist.ship_segment_name(0, os.path.basename(stale_path))] = (
+            persist.encode_ship_frame(0, 5, pio.read_bytes(stale_path)))
+    # the winner writes seq 5 under term 1 and ships it
+    rng = np.random.default_rng(13)
+    standby.upsert(np.arange(5000, 5010),
+                   rng.normal(size=(10, D)).astype(np.float32))
+    win_shipper = persist.WALShipper(standby, str(tmp_path / "win"),
+                                     transport, term=1)
+    assert win_shipper.ship_once() == 1
+    # names are term-scoped: the stale segment sorts BEFORE the winner's
+    names = transport.list_segments()
+    assert [persist.parse_ship_name(n)[0] for n in names] == [0, 0, 1]
+    # a fresh follower over the whole history: old term's acked prefix is
+    # applied, the stale leftovers are skipped, the new chain continues
+    follower = persist.StandbyReplica(mk_engine(), transport)
+    assert follower.poll_once() == 5
+    assert follower.records_stale == 2 and follower.applied_seq == 5
+    assert_same_results(standby, follower.engine, _queries())
 
 
 def test_sharded_standby_both_drivers_and_promotion(tmp_path):
@@ -365,13 +431,75 @@ def test_serving_loop_failover_detection_and_promote(tmp_path):
         sl.upsert(np.arange(3000, 3010),
                   rng.normal(size=(10, D)).astype(np.float32))
         assert _wait_for(lambda: sl.metrics().segments_shipped >= 1)
-        assert sl.metrics().term == 1
+        m = sl.metrics()
+        assert m.term == 1
+        # a promoted loop IS the primary: lag vs its OWN heartbeats (with
+        # applied_seq frozen at the promotion point) must read 0, not grow
+        assert (m.replication_lag_seqs, m.replication_lag_s) == (0, 0.0)
+        assert sl.replication_lag() == persist.ReplicationLag(0, 0.0)
         # the deposed loop's writes are fenced
         with pytest.raises(persist.FencedError):
             pl.upsert(np.array([1]), rng.normal(size=(1, D)).astype(np.float32))
     finally:
         sl.close()
         pl.close()
+
+
+def test_promote_lost_race_resumes_standby(tmp_path):
+    """A promote() that loses the term race must leave the loop a REAL
+    standby: the replay thread resumes and keeps following the winner's
+    stream (not silently serving an ever-staler prefix)."""
+    transport = persist.PipeTransport()
+    pl = ServingLoop(mk_engine(), snapshot_dir=str(tmp_path / "p"),
+                     transport=transport, ship_every=0.01,
+                     snapshot_every=60.0).start()
+    sl = ServingLoop(mk_engine(), role="standby", transport=transport,
+                     snapshot_dir=str(tmp_path / "s"),
+                     poll_every=0.01).start()
+    try:
+        rng = np.random.default_rng(11)
+        pl.upsert(np.arange(4000, 4010),
+                  rng.normal(size=(10, D)).astype(np.float32))
+        assert _wait_for(lambda: sl.metrics().records_replayed == 1)
+
+        def lose(directory, **kw):  # deterministic lost race
+            raise persist.FencedError("a newer promotion won the race")
+
+        orig_promote = sl._replica.promote
+        sl._replica.promote = lose
+        try:
+            with pytest.raises(persist.FencedError):
+                sl.promote()
+        finally:
+            sl._replica.promote = orig_promote
+        assert sl.role == "standby"
+        assert sl._replay_thread is not None and sl._replay_thread.is_alive()
+        with pytest.raises(NotPrimary):
+            sl.delete(np.array([1]))
+        pl.upsert(np.arange(4100, 4110),
+                  rng.normal(size=(10, D)).astype(np.float32))
+        assert _wait_for(lambda: sl.metrics().records_replayed == 2)
+    finally:
+        sl.close()
+        pl.close()
+
+
+def test_failover_fires_without_any_primary_heartbeat():
+    """A primary that dies before ever writing a heartbeat (or whose
+    heartbeat file vanished) is still a failed primary: silence is
+    measured from standby start, not only from an existing heartbeat."""
+    transport = persist.PipeTransport()
+    fired = []
+    sl = ServingLoop(mk_engine(), role="standby", transport=transport,
+                     poll_every=0.01, heartbeat_timeout=0.2,
+                     on_failover=lambda loop: fired.append(
+                         time.monotonic())).start()
+    try:
+        assert transport.read_heartbeat("primary") is None
+        assert _wait_for(lambda: bool(fired)), \
+            "failover never fired without a heartbeat file"
+    finally:
+        sl.close()
 
 
 def test_loop_close_idempotent_joins_threads_and_flushes(tmp_path):
